@@ -1,0 +1,42 @@
+"""Benchmark harness — one function per paper table + beyond-paper tables.
+
+Prints ``name,us_per_call,derived`` CSV per table:
+  * table3/4 (timing): benchmarks.table_timing  — FF ops vs basic ops,
+    compiled ('GPU') vs eager ('CPU') arms, sizes 4k..1M.
+  * table5 (accuracy): benchmarks.table_accuracy — max sampled error vs
+    the exact f64 oracle (2^22 vectors; --full for the paper's 2^24).
+  * ffmatmul (beyond paper): FF matmul path accuracy/throughput.
+  * optimizer (beyond paper): FF master-weight AdamW cost + the
+    f32-stagnation experiment.
+
+Roofline/dry-run tables are separate (they need 512 simulated devices):
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+  PYTHONPATH=src python -m benchmarks.roofline
+"""
+
+import os
+
+# EFT-safe CPU validation (see repro/core/selfcheck.py): must precede jax
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_cpu_max_isa" not in _flags:
+    os.environ["XLA_FLAGS"] = ("--xla_cpu_max_isa=SSE4_2 " + _flags).strip()
+
+
+def main() -> None:
+    from repro.core.selfcheck import require_eft_safe
+    require_eft_safe(strict=False)
+
+    from benchmarks import (table_accuracy, table_ffmatmul, table_optimizer,
+                            table_timing)
+    print("# paper Table 3/4 analogue — operator timings")
+    table_timing.main()
+    print("\n# paper Table 5 analogue — operator accuracy")
+    table_accuracy.main()
+    print("\n# beyond paper — FF matmul paths")
+    table_ffmatmul.main()
+    print("\n# beyond paper — FF master-weight optimizer")
+    table_optimizer.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Beyond-paper table: FF matmul path accuracy/throughput trade-off.
+
+The 2006 paper only had elementwise operators.  The TPU-era question is:
+what does each FF matmul strategy cost vs deliver?
+
+  naive     — plain f32 matmul (control)
+  ozaki     — exponent-aligned slicing: exact products AND exact in-matmul
+              accumulation; n^2 MXU matmuls; beyond-paper, beats dot2
+              accuracy at MXU-speed cost structure
+  comp      — blocked-K compensated (MXU-dominant, the production path)
+  split     — Dekker split-operand (exact products, 4 MXU passes)
+  dot2      — per-element Mul12 + Dot3 cascade (paper-faithful quality)
+
+Reports us_per_call (CPU backend; relative cost is the signal) and max
+err/S vs the f64 oracle (S = |A||B| condition normalizer).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (matmul_compensated, matmul_dot2, matmul_ozaki,
+                        matmul_split)
+
+
+def _timeit(fn, *args, reps=10):
+    out = fn(*args)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out))
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    M = N = 128
+    for K in (512, 4096):
+        A = rng.standard_normal((M, K)).astype(np.float32)
+        B = rng.standard_normal((K, N)).astype(np.float32)
+        E = A.astype(np.float64) @ B.astype(np.float64)
+        S = np.abs(A).astype(np.float64) @ np.abs(B).astype(np.float64)
+        Aj, Bj = jnp.asarray(A), jnp.asarray(B)
+        paths = {
+            "naive": jax.jit(lambda a, b: a @ b),
+            "comp": jax.jit(lambda a, b: matmul_compensated(a, b).astuple()),
+            "split": jax.jit(lambda a, b: matmul_split(a, b).astuple()),
+            "dot2": jax.jit(lambda a, b: matmul_dot2(a, b).astuple()),
+            "ozaki": jax.jit(lambda a, b: matmul_ozaki(a, b).astuple()),
+        }
+        for name, fn in paths.items():
+            t = _timeit(fn, Aj, Bj)
+            out = fn(Aj, Bj)
+            if name == "naive":
+                got = np.asarray(out, np.float64)
+            else:
+                got = np.asarray(out[0], np.float64) + np.asarray(out[1], np.float64)
+            err = (np.abs(got - E) / S).max()
+            rows.append({"path": name, "K": K, "us": t * 1e6,
+                         "log2_err": float(np.log2(max(err, 2.0**-60)))})
+    return rows
+
+
+def main():
+    print("ffmatmul: name,us_per_call,derived")
+    for r in run():
+        print(f"{r['path']}_K{r['K']},{r['us']:.1f},log2err={r['log2_err']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Paper Tables 3/4 analogue: float-float operator timings vs native f32.
+
+The paper timed Add/Mul/Mad vs Add12/Mul12/Add22/Mul22 on data sizes
+4096..1048576, normalized to Add@4096, on GPU (Table 3) and CPU (Table 4).
+Our analogue on this container:
+
+  * "compiled" arm (Table 3 analogue): jitted JAX on the CPU backend —
+    vectorized, fused, the stream-processor-like regime;
+  * "eager" arm (Table 4 analogue): op-by-op dispatch — the
+    interpreter-overhead regime the paper's CPU numbers lived in.
+
+The paper's qualitative claims to reproduce:
+  T3-a: Add12 costs ~= basic ops on the compiled arm (fusion hides the
+        3 extra flops);
+  T3-b: Add22/Mul22 cost ~<= 2x basic ops on the compiled arm at size
+        >= 256k (paper: 23.9/24.6 vs 10.6 at 1M -> ~2.3x);
+  T3-c: the large/small data-set time ratio is far smaller for the
+        compiled arm than the eager arm (paper: 25 vs 3000).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import FF, add12, add22, mul12, mul22
+
+SIZES = (4096, 16384, 65536, 262144, 1048576)
+
+
+def _timeit(fn: Callable, *args, reps: int = 30, warmup: int = 5) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def _ops(compiled: bool):
+    def mk(f):
+        return jax.jit(f) if compiled else f
+
+    return {
+        "Add": mk(lambda a, b: a + b),
+        "Mul": mk(lambda a, b: a * b),
+        "Mad": mk(lambda a, b: a * b + a),
+        "Add12": mk(lambda a, b: add12(a, b).astuple()),
+        "Mul12": mk(lambda a, b: mul12(a, b).astuple()),
+        "Add22": mk(lambda ah, al, bh, bl:
+                    add22(FF(ah, al), FF(bh, bl)).astuple()),
+        "Mul22": mk(lambda ah, al, bh, bl:
+                    mul22(FF(ah, al), FF(bh, bl)).astuple()),
+    }
+
+
+def run(reps: int = 30) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for compiled in (True, False):
+        ops = _ops(compiled)
+        base = None
+        for n in SIZES:
+            a = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+            b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+            al = jnp.asarray((rng.standard_normal(n) * 1e-8).astype(np.float32))
+            bl = jnp.asarray((rng.standard_normal(n) * 1e-8).astype(np.float32))
+            row = {"arm": "compiled" if compiled else "eager", "size": n}
+            for name, f in ops.items():
+                args = (a, al, b, bl) if name in ("Add22", "Mul22") else (a, b)
+                r = reps if compiled else max(reps // 5, 3)
+                t = _timeit(f, *args, reps=r)
+                row[name] = t
+            if base is None:
+                base = row["Add"]
+            for name in ops:
+                row[name + "_norm"] = row[name] / base
+            rows.append(row)
+    return rows
+
+
+def main():
+    rows = run()
+    print("table3_4_timing: name,us_per_call,derived")
+    for row in rows:
+        for op in ("Add", "Mul", "Mad", "Add12", "Mul12", "Add22", "Mul22"):
+            print(f"{row['arm']}_{op}_{row['size']},"
+                  f"{row[op]*1e6:.2f},norm={row[op + '_norm']:.2f}")
+    _claims(rows)
+
+
+def _claims(rows):
+    comp = {r["size"]: r for r in rows if r["arm"] == "compiled"}
+    eag = {r["size"]: r for r in rows if r["arm"] == "eager"}
+    big, small = max(SIZES), min(SIZES)
+    c_add12 = comp[big]["Add12"] / comp[big]["Add"]
+    c_ff = max(comp[big]["Add22"], comp[big]["Mul22"]) / comp[big]["Add"]
+    ratio_c = comp[big]["Add"] / comp[small]["Add"]
+    ratio_e = eag[big]["Add"] / eag[small]["Add"]
+    print(f"claim_T3a_add12_vs_add,{c_add12:.2f},paper<=1.2x")
+    print(f"claim_T3b_ff_vs_add,{c_ff:.2f},paper~2.3x")
+    print(f"claim_T3c_scale_ratio_compiled,{ratio_c:.1f},paper=25(GPU)")
+    print(f"claim_T3c_scale_ratio_eager,{ratio_e:.1f},paper=3000(CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Serving example: batched prefill + greedy decode with KV cache.
+
+Covers: dense GQA serving, SSM (mamba2-family) recurrent-state serving,
+and teacher-forced consistency (decode logits == forward logits).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+
+_f = os.environ.get("XLA_FLAGS", "")
+if "--xla_cpu_max_isa" not in _f:
+    os.environ["XLA_FLAGS"] = ("--xla_cpu_max_isa=SSE4_2 " + _f).strip()
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_params, prefill, init_cache
+from repro.models.config import ModelConfig
+from repro.train.serve_step import greedy_generate
+
+
+def serve(cfg: ModelConfig, label: str):
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, S, new = 4, 48, 16
+    prompt = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    toks = greedy_generate(params, cfg, prompt, max_new=new,
+                           cache_len=S + new + 8)
+    assert toks.shape == (B, new)
+    assert bool(jnp.all((toks >= 0) & (toks < cfg.vocab_size)))
+    # teacher-forced check: feeding generated tokens back through prefill
+    # reproduces the greedy choice at the last position
+    full = jnp.concatenate([prompt, toks[:, :-1]], axis=1)
+    cache = init_cache(cfg, B, S + new + 8)
+    logits, _ = jax.jit(lambda p, b, c: prefill(p, b, cfg, c))(
+        params, {"tokens": full}, cache)
+    redo = jnp.argmax(logits, -1)
+    agree = float(jnp.mean((redo == toks[:, -1]).astype(jnp.float32)))
+    print(f"{label:12s}: generated {toks.shape}, "
+          f"teacher-forced agreement {agree:.2f}")
+
+
+def main():
+    dense = ModelConfig(
+        name="serve-dense", family="dense", num_layers=4, d_model=256,
+        num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=4096, head_dim=64,
+        max_seq_len=256, attn_block_q=64, attn_block_kv=64,
+        compute_dtype="float32", remat=False)
+    serve(dense, "dense GQA")
+
+    ssm = ModelConfig(
+        name="serve-ssm", family="ssm", num_layers=4, d_model=256,
+        num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=4096,
+        ssm_state=32, ssm_head_dim=32, max_seq_len=256,
+        compute_dtype="float32", remat=False)
+    serve(ssm, "mamba2 (SSD)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+FF master weights, checkpointing, and straggler monitoring.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--policy ff_master]
+
+Compares against a plain-f32 baseline arm with --policy baseline.
+"""
+import argparse
+import os
+
+_f = os.environ.get("XLA_FLAGS", "")
+if "--xla_cpu_max_isa" not in _f:
+    os.environ["XLA_FLAGS"] = ("--xla_cpu_max_isa=SSE4_2 " + _f).strip()
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.train.train_step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def model_100m() -> ModelConfig:
+    # ~100M params: 12L, d=768, 12H, ffn 2048, vocab 32k
+    return ModelConfig(
+        name="repro-100m", family="dense",
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+        d_ff=2048, vocab_size=32000, head_dim=64, max_seq_len=1024,
+        attn_block_q=128, attn_block_kv=128, loss_chunk=128,
+        compute_dtype="float32", remat=False,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--policy", default="ff_master",
+                    choices=["baseline", "ff_master", "ff_reduce", "ff_full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    policy = PrecisionPolicy.make(args.policy, compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model: {n/1e6:.1f}M params, policy={policy.level}")
+
+    opt = AdamW(learning_rate=cosine_schedule(3e-4, 20, args.steps),
+                ff=policy.ff_master_weights)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, policy, opt),
+                      donate_argnums=(0, 1))
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq, global_batch=args.batch))
+
+    def data_iter(i):
+        return {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                      ckpt_dir=args.ckpt_dir, log_every=20),
+        step_fn, params, opt_state, data_iter)
+    trainer.restore()
+    out = trainer.run()
+    print(f"done: {out}")
+    # the synthetic grammar is learnable: loss must drop well below ln(V)
+    import numpy as np
+    assert out["last_loss"] < np.log(cfg.vocab_size) * 0.8, "did not learn"
+    print(f"final loss {out['last_loss']:.3f} "
+          f"(uniform would be {np.log(cfg.vocab_size):.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic-reshardable.
+
+Format: one directory per step with flat ``.npy`` leaves + a JSON manifest
+of the pytree structure.  Writes go to ``<dir>.tmp`` then ``os.rename`` —
+a crash mid-save can never corrupt the latest checkpoint.  ``save_async``
+snapshots to host memory synchronously (cheap) and writes on a worker
+thread so the train loop never blocks on the filesystem.
+
+Elasticity: leaves are saved as FULL (host-gathered) arrays, so a restart
+may re-shard onto a different mesh/device-count — ``load`` just returns
+numpy and the caller ``device_put``s with the new sharding.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "__"
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = SEP.join(_key_str(k) for k in path) or "leaf"
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"i{k.idx}"
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def save(directory: str, step: int, tree, extra: Optional[Dict] = None) -> str:
+    """Synchronous atomic save.  Returns final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for name, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":          # numpy can't serialize ml_dtypes
+            np.save(os.path.join(tmp, name + ".npy"), arr.view(np.uint16))
+        else:
+            np.save(os.path.join(tmp, name + ".npy"), arr)
+        manifest["leaves"].append({"name": name, "shape": list(arr.shape),
+                                   "dtype": dtype})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # retention: keep last 3
+    ckpts = sorted(d for d in os.listdir(directory) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for old in ckpts[:-3]:
+        shutil.rmtree(os.path.join(directory, old), ignore_errors=True)
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot-on-call, write-on-thread.  At most one write in flight;
+    a new save waits for the previous (backpressure, bounded memory)."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save(self.directory, step, host_tree, extra)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load(directory: str, tree_like, step: Optional[int] = None
+         ) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``tree_like`` (shapes may be resharded
+    by the caller afterwards).  Returns (tree, step, extra)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = {}
+    for leaf_info in manifest["leaves"]:
+        n = leaf_info["name"]
+        a = np.load(os.path.join(path, n + ".npy"))
+        if leaf_info["dtype"] == "bfloat16":
+            import ml_dtypes
+            a = a.view(ml_dtypes.bfloat16)
+        arrays[n] = a
+    flat = _flatten_with_paths(tree_like)
+    new_leaves = []
+    for name, like in flat:
+        if name not in arrays:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        a = arrays[name]
+        want = tuple(np.shape(like))
+        if tuple(a.shape) != want:
+            raise ValueError(f"leaf {name}: ckpt {a.shape} != expected {want}")
+        new_leaves.append(a)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step, manifest["extra"]

@@ -1,0 +1,68 @@
+"""Assigned architecture configs (exact, from public literature) + shapes.
+
+``get_config(arch_id)`` returns the full-size ModelConfig;
+``SHAPES`` defines the assigned input-shape set;
+``cell_applicable(cfg, shape)`` implements the skip rules
+(full-attention archs skip long_500k; decoder-less archs skip decode —
+none here; see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "minitron_4b", "phi3_medium_14b", "llama3_405b", "granite_3_2b",
+    "internvl2_1b", "jamba_1_5_large_398b", "deepseek_v2_236b",
+    "olmoe_1b_7b", "whisper_medium", "mamba2_370m",
+)
+
+# canonical ids (with dashes) -> module names
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def sub_quadratic(cfg: ModelConfig) -> bool:
+    """True if the arch has a sub-quadratic long-context path."""
+    return cfg.family in ("ssm", "hybrid")
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, Optional[str]]:
+    spec = SHAPES[shape]
+    if spec.name == "long_500k" and not sub_quadratic(cfg):
+        return False, "full-attention arch: 524k dense-attention decode is quadratic by construction (DESIGN.md §6)"
+    return True, None
+
+
+def all_cells():
+    """Yield (arch, shape, applicable, reason)."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, reason = cell_applicable(cfg, shape)
+            yield arch, shape, ok, reason

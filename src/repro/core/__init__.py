@@ -1,0 +1,27 @@
+"""Core float-float (FF) library — the paper's contribution in JAX.
+
+Public API:
+    FF, add12, mul12, add22, add22_accurate, mul22, div22, sqrt22, fma22
+    two_sum, fast_two_sum, split, two_prod
+    ff_sum, ff_dot, kahan_sum, ff_logsumexp
+    matmul_compensated, matmul_split, matmul_dot2
+    PrecisionPolicy
+"""
+
+from repro.core.transforms import (  # noqa: F401
+    two_sum, fast_two_sum, split, split_safe, two_prod, two_prod_safe, two_diff,
+)
+from repro.core.ff import (  # noqa: F401
+    FF, FF_EPS, FF_PRECISION_BITS,
+    add12, mul12, add22, add22_accurate, add212, mul22, mul212,
+    div22, sqrt22, normalize, fma22, tree_from_f32, tree_to_f32,
+)
+from repro.core.compensated import (  # noqa: F401
+    kahan_sum, ff_sum, ff_sum_blocked, ff_dot, ff_mean, ff_logsumexp, kahan_update,
+)
+from repro.core.ffmatmul import (  # noqa: F401
+    matmul_compensated, matmul_split, matmul_dot2, matmul_ozaki,
+)
+from repro.core.policy import (  # noqa: F401
+    PrecisionPolicy, BASELINE, FF_MASTER, FF_REDUCE, FF_FULL,
+)

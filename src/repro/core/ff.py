@@ -1,0 +1,272 @@
+"""The float-float (FF) format — paper §4 — as a JAX pytree numeric type.
+
+An FF value represents ``x = hi + lo`` (unevaluated sum of two f32, with
+``|lo| <= ulp(hi)/2`` when normalized), giving ~49 significand bits of which
+the paper's error analysis guarantees 44.  The representation range is that
+of f32 (paper §7).
+
+Design notes
+------------
+* ``FF`` is a registered pytree of two equal-shape f32 arrays, so it shards,
+  ``jit``s, ``vmap``s, ``scan``s and checkpoints like any ordinary tensor.
+  (The GPU analogue in the paper stored hi/lo in two texture channels.)
+* All algorithms are the paper's branch-free variants.  The one algorithm the
+  paper benchmarked with a test in it (CPU Add22, §6) is provided as
+  ``add22_accurate`` in its modern branch-free TwoSum form.
+* f64 never appears in library code (the whole point is *no* wide hardware
+  type); f64 is used only in tests/benchmarks as the exact oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transforms as T
+
+Array = jnp.ndarray
+Scalar = Union[float, int]
+
+# Paper Theorem 6: |eps| <= 2^-44 for Mul22; Add22 bound in Theorem 5.
+FF_EPS = 2.0**-44
+FF_PRECISION_BITS = 44
+
+
+@jax.tree_util.register_pytree_node_class
+class FF:
+    """Unevaluated sum of two f32 arrays: value == hi + lo."""
+
+    __slots__ = ("hi", "lo")
+
+    def __init__(self, hi: Array, lo: Array):
+        self.hi = hi
+        self.lo = lo
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.hi, self.lo), None
+
+    @classmethod
+    def tree_unflatten(cls, aux: Any, children) -> "FF":
+        return cls(*children)
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_f32(cls, x: Array) -> "FF":
+        x = jnp.asarray(x, jnp.float32)
+        return cls(x, jnp.zeros_like(x))
+
+    @classmethod
+    def from_f64(cls, x) -> "FF":
+        """Exact-as-possible FF from a wide value (test/init convenience).
+
+        hi = fl32(x); lo = fl32(x - hi).  Only used at the host boundary
+        (weight init, test vectors) — never inside jitted compute.
+        """
+        import numpy as np
+
+        x64 = np.asarray(x, np.float64)
+        hi = x64.astype(np.float32)
+        lo = (x64 - hi.astype(np.float64)).astype(np.float32)
+        return cls(jnp.asarray(hi), jnp.asarray(lo))
+
+    @classmethod
+    def zeros(cls, shape, **kw) -> "FF":
+        z = jnp.zeros(shape, jnp.float32, **kw)
+        return cls(z, jnp.zeros_like(z))
+
+    # -- views --------------------------------------------------------------
+    @property
+    def shape(self):
+        return self.hi.shape
+
+    @property
+    def dtype(self):
+        return self.hi.dtype
+
+    @property
+    def ndim(self):
+        return self.hi.ndim
+
+    def to_f32(self) -> Array:
+        """Round to nearest f32 (hi is already the correctly rounded value)."""
+        return self.hi
+
+    def to_f64(self):
+        """Exact wide value — ONLY for host-side verification."""
+        import numpy as np
+
+        return np.asarray(self.hi, np.float64) + np.asarray(self.lo, np.float64)
+
+    def astuple(self) -> Tuple[Array, Array]:
+        return self.hi, self.lo
+
+    def __repr__(self):
+        return f"FF(hi={self.hi!r}, lo={self.lo!r})"
+
+    # -- shape ops (exact: they permute/slice both limbs identically) --------
+    def reshape(self, *s) -> "FF":
+        return FF(self.hi.reshape(*s), self.lo.reshape(*s))
+
+    def transpose(self, *axes) -> "FF":
+        return FF(self.hi.transpose(*axes), self.lo.transpose(*axes))
+
+    def __getitem__(self, idx) -> "FF":
+        return FF(self.hi[idx], self.lo[idx])
+
+    # -- arithmetic (operator sugar over the module-level functions) ---------
+    def __neg__(self) -> "FF":
+        return FF(-self.hi, -self.lo)
+
+    def __abs__(self) -> "FF":
+        neg = self.hi < 0
+        return FF(jnp.where(neg, -self.hi, self.hi), jnp.where(neg, -self.lo, self.lo))
+
+    def __add__(self, other) -> "FF":
+        return add22(self, _coerce(other))
+
+    __radd__ = __add__
+
+    def __sub__(self, other) -> "FF":
+        return add22(self, -_coerce(other))
+
+    def __rsub__(self, other) -> "FF":
+        return add22(_coerce(other), -self)
+
+    def __mul__(self, other) -> "FF":
+        return mul22(self, _coerce(other))
+
+    __rmul__ = __mul__
+
+    def __truediv__(self, other) -> "FF":
+        return div22(self, _coerce(other))
+
+
+def _coerce(x) -> FF:
+    if isinstance(x, FF):
+        return x
+    return FF.from_f32(jnp.asarray(x, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Paper algorithms (array-valued; every op maps over lanes branch-free).
+# ---------------------------------------------------------------------------
+
+def add12(a: Array, b: Array) -> FF:
+    """Paper Theorem 2 (Knuth Add12): exact a+b as an FF."""
+    s, r = T.two_sum(a, b)
+    return FF(s, r)
+
+
+def mul12(a: Array, b: Array) -> FF:
+    """Paper Theorem 4 (Dekker Mul12): exact a*b as an FF."""
+    x, y = T.two_prod(a, b)
+    return FF(x, y)
+
+
+def add22(a: FF, b: FF) -> FF:
+    """Paper Theorem 5 Add22 (branch-free, 'sloppy' variant).
+
+    Error bound: delta <= max(2^-24 |al+bl|, 2^-44 |a+b|).
+    """
+    sh, sl = T.two_sum(a.hi, b.hi)
+    v = sl + (a.lo + b.lo)
+    rh, rl = T.fast_two_sum(sh, v)
+    return FF(rh, rl)
+
+
+def add22_accurate(a: FF, b: FF) -> FF:
+    """Accurate Add22 (2-ulp bound, ~2^-44 relative always).
+
+    The branch-free descendant of the 'one test' variant the paper mentions:
+    the magnitude test is replaced by a second TwoSum on the low limbs.
+    ~8 extra flops over ``add22``; use where the |al+bl| term matters
+    (e.g. long compensated reductions).
+    """
+    sh, sl = T.two_sum(a.hi, b.hi)
+    th, tl = T.two_sum(a.lo, b.lo)
+    c = sl + th
+    vh, vl = T.fast_two_sum(sh, c)
+    w = tl + vl
+    rh, rl = T.fast_two_sum(vh, w)
+    return FF(rh, rl)
+
+
+def add212(a: FF, b: Array) -> FF:
+    """FF + f32 (cheaper than coercing b to FF then add22)."""
+    sh, sl = T.two_sum(a.hi, b)
+    v = sl + a.lo
+    rh, rl = T.fast_two_sum(sh, v)
+    return FF(rh, rl)
+
+
+def mul22(a: FF, b: FF) -> FF:
+    """Paper Theorem 6 Mul22: relative error <= 2^-44."""
+    th, tl = T.two_prod(a.hi, b.hi)
+    t = tl + (a.hi * b.lo + a.lo * b.hi)
+    rh, rl = T.fast_two_sum(th, t)
+    return FF(rh, rl)
+
+
+def mul212(a: FF, b: Array) -> FF:
+    """FF * f32."""
+    th, tl = T.two_prod(a.hi, b)
+    t = tl + a.lo * b
+    rh, rl = T.fast_two_sum(th, t)
+    return FF(rh, rl)
+
+
+def div22(a: FF, b: FF) -> FF:
+    """FF division (Dekker-style: quotient + one correction step).
+
+    The paper notes GPUs implement division as reciprocal×multiply with
+    doubled error (§3); this algorithm only needs the hardware quotient as a
+    *seed*, so it tolerates that.
+    """
+    ch = a.hi / b.hi
+    th, tl = T.two_prod(ch, b.hi)
+    cl = ((((a.hi - th) - tl) + a.lo) - ch * b.lo) / b.hi
+    rh, rl = T.fast_two_sum(ch, cl)
+    return FF(rh, rl)
+
+
+def sqrt22(a: FF) -> FF:
+    """FF square root via one Newton correction of the hardware sqrt."""
+    ch = jnp.sqrt(a.hi)
+    th, tl = T.two_prod(ch, ch)
+    num = ((a.hi - th) - tl) + a.lo
+    cl = num / (ch + ch)
+    rh, rl = T.fast_two_sum(ch, cl)
+    return FF(rh, rl)
+
+
+def normalize(a: FF) -> FF:
+    """Re-establish |lo| <= ulp(hi)/2 (Fast2Sum renormalization)."""
+    rh, rl = T.fast_two_sum(a.hi, a.lo)
+    return FF(rh, rl)
+
+
+def fma22(a: FF, b: FF, c: FF) -> FF:
+    """a*b + c in FF (fused at the algorithm level: one renormalization)."""
+    th, tl = T.two_prod(a.hi, b.hi)
+    t = tl + (a.hi * b.lo + a.lo * b.hi)
+    sh, sl = T.two_sum(th, c.hi)
+    v = sl + (t + c.lo)
+    rh, rl = T.fast_two_sum(sh, v)
+    return FF(rh, rl)
+
+
+# -- tree helpers (FF pytrees of parameters) ---------------------------------
+
+def tree_from_f32(tree):
+    return jax.tree_util.tree_map(FF.from_f32, tree)
+
+
+def tree_to_f32(tree):
+    return jax.tree_util.tree_map(
+        lambda x: x.to_f32() if isinstance(x, FF) else x,
+        tree,
+        is_leaf=lambda x: isinstance(x, FF),
+    )

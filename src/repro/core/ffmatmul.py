@@ -1,0 +1,223 @@
+"""FF matrix multiplication — the MXU adaptation of the paper's Mul12/Add22.
+
+The 2006 paper ran float-float *element-wise* in fragment shaders.  On TPU the
+compute workhorse is the MXU (128x128 systolic matmul), which does NOT do
+exact f32 products (f32 matmuls are composed of bf16 passes unless
+``precision=HIGHEST`` forces 6-pass, and even then K-accumulation rounds).
+Porting the paper mechanically (scalar Mul12 chains) would leave the MXU idle.
+
+Instead we restructure (DESIGN.md §2):
+
+* ``matmul_compensated``  — blocked K: each K-block is a hardware matmul
+  (``precision=HIGHEST``), blocks are combined with Add22.  Accumulation error
+  drops from O(K)·2^-24 to O(block)·2^-24 + O(K/block)·2^-44: the compensated
+  cascade of the paper applied at *block* granularity instead of element
+  granularity.  This is the fast production path (used for FF logits).
+
+* ``matmul_split``        — Dekker-split operands (12-bit halves) make every
+  elementwise product exact; the three significant cross terms are separate
+  MXU matmuls whose results are combined in FF.  Product error is eliminated
+  entirely; remaining error is K-accumulation only.  Composable with blocked K.
+
+* ``matmul_dot2``         — per-element Dot2 (two_prod + cascaded two_sum over
+  K via ``lax.scan``).  Full ~2^-44 quality; VPU-only.  This is the oracle-
+  grade path, also realized as a Pallas kernel in ``repro.kernels.ff_matmul``.
+
+All take f32 (M,K) x (K,N) and return FF (M,N).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import transforms as T
+from repro.core.ff import FF, add22, normalize
+
+Array = jnp.ndarray
+
+
+def _dot_f32(a: Array, b: Array) -> Array:
+    """Hardware matmul with forced f32-faithful passes (paper §5 lesson:
+    never let the toolchain silently lower your precision)."""
+    return lax.dot(a, b, precision=lax.Precision.HIGHEST,
+                   preferred_element_type=jnp.float32)
+
+
+def matmul_compensated(a: Array, b: Array, block_k: int = 512) -> FF:
+    """Blocked-K FF-accumulated matmul (fast path).
+
+    hypothesis: with K-blocks of size Bk, per-block error ~ Bk * 2^-24 * |.|
+    and the FF combine contributes ~ (K/Bk) * 2^-44; Bk=512 balances both for
+    K up to ~1M while keeping the MXU busy >99% of flops.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    nb = max(1, -(-K // block_k))
+    pad = nb * block_k - K
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((M, pad), jnp.float32)], axis=1)
+        b = jnp.concatenate([b, jnp.zeros((pad, N), jnp.float32)], axis=0)
+    a3 = a.reshape(M, nb, block_k).transpose(1, 0, 2)   # (nb, M, Bk)
+    b3 = b.reshape(nb, block_k, N)                      # (nb, Bk, N)
+
+    def body(acc: FF, ab):
+        ai, bi = ab
+        p = _dot_f32(ai, bi)
+        return add22(acc, FF.from_f32(p)), None
+
+    acc0 = FF.zeros((M, N))
+    acc, _ = lax.scan(body, acc0, (a3, b3))
+    return acc
+
+
+def matmul_split(a: Array, b: Array, block_k: Optional[int] = 512) -> FF:
+    """Split-operand FF matmul (exact products; TPU-native Mul12).
+
+    a = a_hi + a_lo, b = b_hi + b_lo with 12-bit halves (Dekker split), so
+    a_hi*b_hi, a_hi*b_lo, a_lo*b_hi, a_lo*b_lo are all exact f32 products.
+    Each cross-term matmul still rounds in its K-accumulation; the four
+    partial matrices are combined with Add22.  Composed with blocked K the
+    same way as ``matmul_compensated``.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    M, K = a.shape
+    _, N = b.shape
+    a_hi, a_lo = T.split(a)
+    b_hi, b_lo = T.split(b)
+
+    def partials(ai_hi, ai_lo, bi_hi, bi_lo):
+        # dominant term first; combine low-order terms in f32 (they are
+        # each <= 2^-12 of the dominant term; their own rounding is <=2^-48).
+        hh = _dot_f32(ai_hi, bi_hi)
+        hl = _dot_f32(ai_hi, bi_lo)
+        lh = _dot_f32(ai_lo, bi_hi)
+        ll = _dot_f32(ai_lo, bi_lo)
+        t = add22(FF.from_f32(hl), FF.from_f32(lh))
+        t = add22(t, FF.from_f32(ll))
+        return add22(FF.from_f32(hh), t)
+
+    if block_k is None or block_k >= K:
+        return partials(a_hi, a_lo, b_hi, b_lo)
+
+    nb = -(-K // block_k)
+    pad = nb * block_k - K
+
+    def padk(x, axis):
+        if not pad:
+            return x
+        w = [(0, 0)] * x.ndim
+        w[axis] = (0, pad)
+        return jnp.pad(x, w)
+
+    ah = padk(a_hi, 1).reshape(M, nb, block_k).transpose(1, 0, 2)
+    al = padk(a_lo, 1).reshape(M, nb, block_k).transpose(1, 0, 2)
+    bh = padk(b_hi, 0).reshape(nb, block_k, N)
+    bl = padk(b_lo, 0).reshape(nb, block_k, N)
+
+    def body(acc: FF, abi):
+        ahi, ali, bhi, bli = abi
+        return add22(acc, partials(ahi, ali, bhi, bli)), None
+
+    acc0 = FF.zeros((M, N))
+    acc, _ = lax.scan(body, acc0, (ah, al, bh, bl))
+    return acc
+
+
+def matmul_dot2(a: Array, b: Array) -> FF:
+    """Per-element Dot2 matmul: full float-float quality (~2^-44 relative).
+
+    Scans over K with exact products (Mul12) and a compensated cascade.
+    O(MN) state, VPU-only — use for small, numerically critical matmuls
+    (router logits, final LM-head rows under study) and as the oracle for the
+    Pallas kernel.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    M, K = a.shape
+    _, N = b.shape
+
+    def body(carry, ab):
+        s, c, cc = carry
+        ai, bi = ab                       # (M,), (N,)
+        p, pe = T.two_prod(ai[:, None], bi[None, :])
+        s2, se = T.two_sum(s, p)
+        c2, ce = T.two_sum(c, se + pe)    # Dot3-quality cascade
+        return (s2, c2, cc + ce), None
+
+    z = jnp.zeros((M, N), jnp.float32)
+    (s, c, cc), _ = lax.scan(body, (z, z, z), (a.T, b))
+    rh, rl = T.fast_two_sum(s, c + cc)
+    return FF(rh, rl)
+
+
+def matmul_ozaki(a: Array, b: Array, slices: int = 0) -> FF:
+    """Ozaki-scheme FF matmul: error-free slice products with error-free
+    in-matmul accumulation — paper-quality accuracy at MXU speed.
+
+    BEYOND-PAPER (DESIGN.md §2, EXPERIMENTS §Perf): the 2006 paper made
+    single *products* exact (Mul12).  For matmuls the accumulation over K
+    also has to be exact.  Slice each operand into ``n`` magnitude-aligned
+    pieces of ``beta`` significand bits, with
+        beta = (24 - ceil(log2 K)) // 2
+    so every slice-pair product (2*beta bits) summed K times (+log2 K bits)
+    still fits f32's 24-bit significand: each of the n^2 hardware matmuls is
+    EXACT.  The n^2 partial matrices are then combined with Add22.  Total
+    error: only the final FF merges (~2^-44) — versus O(K)*2^-24 for naive
+    f32 and ~2^-24 for the split/compensated paths.
+
+    Cost: n^2 MXU matmuls (n ~ 4-5 for K<=16k) vs dot2's K VPU steps.
+    """
+    import numpy as np
+
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    M, K = a.shape
+    _, N = b.shape
+    t = int(np.ceil(np.log2(max(K, 2))))
+    beta = max(2, (24 - t) // 2 - 1)     # -1: RN carry margin per slice
+    n = slices or int(np.ceil(26.0 / beta))
+
+    def extract(x, axis):
+        """n magnitude-aligned slices of <=beta(+1) bits each.
+
+        sigma = 2^(e_max + 24 - beta): adding/subtracting it truncates r to
+        granularity ulp(sigma) = 2^(e_max + 1 - beta), i.e. keeps the top
+        ~beta bits of the axis-aligned significand (Ozaki et al. 2012).
+        """
+        parts = []
+        r = x
+        for _ in range(n):
+            mu = jnp.max(jnp.abs(r), axis=axis, keepdims=True)
+            e = jnp.ceil(jnp.log2(jnp.maximum(mu, jnp.float32(1e-38))))
+            sigma = jnp.exp2(e + jnp.float32(24 - beta))
+            w = (r + sigma) - sigma          # top beta bits
+            parts.append(w)
+            r = r - w                        # exact (aligned granularities)
+        return parts, r
+
+    pa, ra = extract(a, axis=1)
+    pb, rb = extract(b, axis=0)
+
+    acc = FF.zeros((M, N))
+    # keep every pair contributing above FF precision (beta*(i+j) <= 50);
+    # largest-magnitude pairs first keeps the Add22 chain well-ordered
+    max_order = int(np.ceil(50.0 / beta))
+    for i in range(n):
+        for j in range(n):
+            if i + j > max_order:            # < 2^-50: below FF precision
+                continue
+            p = _dot_f32(pa[i], pb[j])       # EXACT: fits 24 bits
+            acc = add22(acc, FF.from_f32(p))
+    # residual correction (everything below the n slices)
+    if True:
+        acc = add22(acc, FF.from_f32(_dot_f32(ra, b)))
+        acc = add22(acc, FF.from_f32(_dot_f32(a - ra, rb)))
+    return acc

@@ -1,0 +1,54 @@
+"""Precision policy: where float-float is applied inside a model/optimizer.
+
+This is how the paper's technique becomes a *framework feature* rather than a
+micro-library: every model and the optimizer consult a ``PrecisionPolicy``
+and transparently route the numerically critical paths through FF.
+
+Policies (ordered by cost):
+  * ``baseline``   — plain f32 activations / f32 master weights (control arm;
+                     what you'd ship without the paper).
+  * ``ff_master``  — FF master weights + FF optimizer accumulators only
+                     (zero extra cost in forward/backward; the production
+                     default at scale).
+  * ``ff_reduce``  — ff_master + compensated reductions (loss, LN/RMS stats,
+                     softmax LSE, grad-norm).
+  * ``ff_full``    — ff_reduce + FF logits matmul (split-operand path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Level = Literal["baseline", "ff_master", "ff_reduce", "ff_full"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    level: Level = "ff_master"
+    # granular switches (derived from level, overridable)
+    ff_master_weights: bool = True
+    ff_reductions: bool = False
+    ff_logits: bool = False
+    # activation compute dtype for the bulk matmuls
+    compute_dtype: str = "bfloat16"
+    # block size for blocked-K compensated matmuls
+    ff_matmul_block_k: int = 512
+
+    @staticmethod
+    def make(level: Level = "ff_master", compute_dtype: str = "bfloat16",
+             **overrides) -> "PrecisionPolicy":
+        base = dict(
+            baseline=dict(ff_master_weights=False, ff_reductions=False, ff_logits=False),
+            ff_master=dict(ff_master_weights=True, ff_reductions=False, ff_logits=False),
+            ff_reduce=dict(ff_master_weights=True, ff_reductions=True, ff_logits=False),
+            ff_full=dict(ff_master_weights=True, ff_reductions=True, ff_logits=True),
+        )[level]
+        base.update(overrides)
+        return PrecisionPolicy(level=level, compute_dtype=compute_dtype, **base)
+
+
+BASELINE = PrecisionPolicy.make("baseline")
+FF_MASTER = PrecisionPolicy.make("ff_master")
+FF_REDUCE = PrecisionPolicy.make("ff_reduce")
+FF_FULL = PrecisionPolicy.make("ff_full")

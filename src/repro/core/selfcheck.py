@@ -1,0 +1,73 @@
+"""EFT-safety self-check — paper §5, automated.
+
+The paper discovered their DirectX toolchain rewrote ``(a+b)-a -> b`` and had
+to hand-patch shaders.  Our toolchain hazard is different but analogous:
+XLA:CPU's LLVM backend may contract ``s + a*b`` into ``fma(a, b, s)`` inside
+vectorized fusions (AVX2+), which changes ``fl(a*b)`` relative to its other
+use sites and silently breaks every EFT.
+
+``check_eft_safe()`` runs a jitted probe reproducing the hazard pattern and
+compares it with the op-by-op (eager) result.  Call sites:
+
+  * imported by tests (hard assert),
+  * called at trainer/benchmark startup (loud warning + remedy).
+
+Remedy on CPU: ``XLA_FLAGS=--xla_cpu_max_isa=SSE4_2`` (no FMA instruction ->
+no contraction).  This also matches the paper's hardware model: 2006 GPUs had
+no FMA either.  On TPU the VPU does not contract f32 mul/add, so the probe
+passes natively.
+"""
+
+from __future__ import annotations
+
+import os
+import warnings
+
+import numpy as np
+
+_REMEDY = (
+    "XLA is contracting mul+add into FMA, breaking float-float EFTs "
+    "(paper §5 'forbidden optimizations'). On CPU set "
+    "XLA_FLAGS=--xla_cpu_max_isa=SSE4_2 before importing jax."
+)
+
+
+def check_eft_safe() -> bool:
+    """True iff jitted TwoSum-of-product matches the op-by-op result."""
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32))
+    a = jnp.asarray(rng.standard_normal(8).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(16).astype(np.float32))
+
+    def probe(s, a, b):
+        p = a[:, None] * b[None, :]
+        s2 = s + p
+        bb = s2 - s
+        se = (p - bb) + (s - (s2 - bb))
+        return s2, se
+
+    eager = probe(s, a, b)
+    jitted = jax.jit(probe)(s, a, b)
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(eager, jitted)
+    )
+
+
+def require_eft_safe(strict: bool = False) -> bool:
+    ok = check_eft_safe()
+    if not ok:
+        if strict:
+            raise RuntimeError(_REMEDY)
+        warnings.warn(_REMEDY, RuntimeWarning, stacklevel=2)
+    return ok
+
+
+def set_cpu_eft_flags() -> None:
+    """Prepend the CPU anti-contraction flag to XLA_FLAGS.  MUST run before
+    the first jax import.  No-op on real TPU backends (flag is CPU-only)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_cpu_max_isa" not in flags:
+        os.environ["XLA_FLAGS"] = ("--xla_cpu_max_isa=SSE4_2 " + flags).strip()

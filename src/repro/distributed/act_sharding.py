@@ -1,0 +1,98 @@
+"""Activation sharding constraints for model internals.
+
+Model code is mesh-agnostic; the launcher/trainer wraps lowering in
+``activation_sharding(mesh, cfg, batch)`` and layer code calls
+``constrain_hidden(x)`` on its (B, S, d) carries.  Without the constraint
+XLA may keep scan carries replicated over 'model', blowing the activation
+memory floor by the TP factor.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_act_sharding", default=None)
+
+
+class _ActCtx:
+    def __init__(self, mesh: Mesh, dp: Optional[Tuple[str, ...]], tp_ok: bool):
+        self.mesh = mesh
+        self.dp = dp
+        self.tp_ok = tp_ok
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, d_model: int, batch_size: int):
+    from repro.distributed.sharding import _dp_for_batch, tp_size
+    dp = _dp_for_batch(batch_size, mesh)
+    tp_ok = d_model % tp_size(mesh) == 0
+    token = _CTX.set(_ActCtx(mesh, dp, tp_ok))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain_hidden(x):
+    """(B, S, d) activations between blocks -> P(dp, 'model', None).
+
+    Sequence-parallel (Megatron-SP) layout: S sharded over the TP axis at
+    block boundaries.  This (a) divides the remat scan-carry memory floor by
+    the TP degree, and (b) keeps the contracting dim (d) UNSHARDED so the
+    SPMD partitioner lowers FSDP weights as all-gather-weights (ZeRO-3)
+    instead of partial-sum all-reducing f32 activations (measured: d-dim
+    sharding produced (B,S,d_ff) f32 all-reduces dominating the collective
+    roofline term)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    if x.ndim != 3:
+        return x
+    b_entry = ctx.dp if (ctx.dp and x.shape[0] % _n(ctx.mesh, ctx.dp) == 0) \
+        else None
+    import os
+    mode = os.environ.get("REPRO_ACT_SHARDING", "batch")
+    tp = ctx.mesh.shape.get("model", 1)
+    if mode == "seq":
+        s_entry = "model" if x.shape[1] % tp == 0 and x.shape[1] >= tp else None
+        spec = P(b_entry, s_entry, None)
+    elif mode == "dmodel":
+        d_entry = "model" if x.shape[-1] % tp == 0 else None
+        spec = P(b_entry, None, d_entry)
+    else:  # batch-only
+        spec = P(b_entry, None, None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def _n(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, *entries):
+    """Generic validated sharding constraint using the active context.
+    entries: one per dim — None, 'model', or 'dp' (data axes)."""
+    ctx = _CTX.get()
+    if ctx is None or x.ndim != len(entries):
+        return x
+    tp = ctx.mesh.shape.get("model", 1)
+    spec = []
+    for dim, e in zip(x.shape, entries):
+        if e == "model":
+            spec.append("model" if dim % tp == 0 else None)
+        elif e == "dp":
+            n = _n(ctx.mesh, ctx.dp) if ctx.dp else 1
+            spec.append(ctx.dp if (ctx.dp and dim % n == 0) else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))

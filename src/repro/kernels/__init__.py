@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the FF hot spots + jit wrappers + oracles.
+
+The paper's contribution IS a compute hot-spot (elementwise FF operators and
+the reductions/matmuls built from them), so this layer is substantive:
+
+  eft.py             — branch-free EFT primitives for kernel bodies
+  ff_elementwise.py  — Add22/Mul22/TwoSum/TwoProd tile kernels
+  ff_matmul.py       — hybrid MXU FF matmul + paper-faithful Dot3 kernel
+  ff_reduce.py       — compensated row-reduction kernel
+  ops.py             — public wrappers (interpret on CPU, compiled on TPU)
+  ref.py             — pure-jnp oracles mirroring each kernel's order
+"""

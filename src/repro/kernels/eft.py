@@ -1,0 +1,58 @@
+"""EFT primitives for use INSIDE Pallas kernel bodies.
+
+Separate from ``repro.core.transforms`` because kernel bodies must not carry
+the CPU-only ``optimization_barrier`` workaround (the barrier is neither
+needed nor guaranteed to lower on TPU Pallas): on TPU the VPU executes f32
+mul/add as written (no FMA contraction), and in interpret mode the validation
+suite pins ``--xla_cpu_max_isa=SSE4_2`` (see tests/conftest.py).
+
+These are the same branch-free algorithms as the paper (§4).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SPLIT_CONST = 4097.0  # 2**12 + 1 (Dekker split point for binary32)
+
+
+def two_sum(a, b):
+    s = a + b
+    bb = s - a
+    return s, (a - (s - bb)) + (b - bb)
+
+
+def fast_two_sum(a, b):
+    s = a + b
+    return s, b - (s - a)
+
+
+def split(a):
+    c = jnp.float32(SPLIT_CONST) * a
+    a_big = c - a
+    a_hi = c - a_big
+    return a_hi, a - a_hi
+
+
+def two_prod(a, b):
+    x = a * b
+    a_hi, a_lo = split(a)
+    b_hi, b_lo = split(b)
+    err1 = x - (a_hi * b_hi)
+    err2 = err1 - (a_lo * b_hi)
+    err3 = err2 - (a_hi * b_lo)
+    return x, (a_lo * b_lo) - err3
+
+
+def add22(ah, al, bh, bl):
+    """Paper Theorem 5 (branch-free sloppy Add22) on raw limbs."""
+    sh, sl = two_sum(ah, bh)
+    v = sl + (al + bl)
+    return fast_two_sum(sh, v)
+
+
+def mul22(ah, al, bh, bl):
+    """Paper Theorem 6 (Mul22) on raw limbs."""
+    th, tl = two_prod(ah, bh)
+    t = tl + (ah * bl + al * bh)
+    return fast_two_sum(th, t)

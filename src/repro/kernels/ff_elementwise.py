@@ -1,0 +1,111 @@
+"""Pallas TPU kernels for elementwise FF operators (paper Add22/Mul22).
+
+The paper streamed texels through fragment shaders; the TPU analogue is
+streaming (8,128)-aligned VMEM tiles through the VPU.  Tiles are 2-D blocks
+``(block_rows, block_cols)`` of a flattened-to-2D operand; the last dim is
+kept a multiple of 128 (lane width) and rows a multiple of 8 (sublanes).
+
+Layout note: FF tensors arrive as separate hi/lo arrays (a pytree of two
+f32 planes — the GPU paper used two texture channels; two planes keep each
+plane contiguous and MXU/VPU-friendly).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import eft
+
+Array = jnp.ndarray
+
+DEFAULT_BLOCK = (256, 512)  # 256*512*4B = 512 KiB/plane; 6 planes < 4 MiB VMEM
+
+
+def _add22_kernel(ah_ref, al_ref, bh_ref, bl_ref, rh_ref, rl_ref):
+    rh, rl = eft.add22(ah_ref[...], al_ref[...], bh_ref[...], bl_ref[...])
+    rh_ref[...] = rh
+    rl_ref[...] = rl
+
+
+def _mul22_kernel(ah_ref, al_ref, bh_ref, bl_ref, rh_ref, rl_ref):
+    rh, rl = eft.mul22(ah_ref[...], al_ref[...], bh_ref[...], bl_ref[...])
+    rh_ref[...] = rh
+    rl_ref[...] = rl
+
+
+def _two_prod_kernel(a_ref, b_ref, x_ref, y_ref):
+    x, y = eft.two_prod(a_ref[...], b_ref[...])
+    x_ref[...] = x
+    y_ref[...] = y
+
+
+def _two_sum_kernel(a_ref, b_ref, s_ref, r_ref):
+    s, r = eft.two_sum(a_ref[...], b_ref[...])
+    s_ref[...] = s
+    r_ref[...] = r
+
+
+_KERNELS = {
+    "add22": (_add22_kernel, 4),
+    "mul22": (_mul22_kernel, 4),
+    "two_prod": (_two_prod_kernel, 2),
+    "two_sum": (_two_sum_kernel, 2),
+}
+
+
+def _to_2d(x: Array) -> Tuple[Array, Tuple[int, ...]]:
+    shape = x.shape
+    if x.ndim == 0:
+        return x.reshape(1, 1), shape
+    if x.ndim == 1:
+        return x.reshape(1, -1), shape
+    return x.reshape(-1, shape[-1]), shape
+
+
+def _pad_to(x: Array, br: int, bc: int) -> Array:
+    r, c = x.shape
+    pr, pc = (-r) % br, (-c) % bc
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block", "interpret"))
+def elementwise(op: str, *arrays: Array,
+                block: Tuple[int, int] = DEFAULT_BLOCK,
+                interpret: bool = False) -> Tuple[Array, Array]:
+    """Run a 2-output elementwise FF kernel over arbitrarily shaped operands.
+
+    Operands are flattened to 2-D, padded to block multiples, tiled over a
+    2-D grid, and the outputs un-padded/reshaped back.
+    """
+    kernel, n_in = _KERNELS[op]
+    assert len(arrays) == n_in, (op, len(arrays))
+    arrays = tuple(jnp.asarray(a, jnp.float32) for a in arrays)
+    a2, orig_shape = _to_2d(arrays[0])
+    rest = [_to_2d(a)[0] for a in arrays[1:]]
+    br, bc = block
+    br = min(br, max(8, a2.shape[0]))
+    bc = min(bc, max(128, a2.shape[1]))
+    padded = [_pad_to(x, br, bc) for x in (a2, *rest)]
+    R, C = padded[0].shape
+    grid = (R // br, C // bc)
+    spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    out_shape = jax.ShapeDtypeStruct((R, C), jnp.float32)
+    rh, rl = pl.pallas_call(
+        kernel,
+        out_shape=(out_shape, out_shape),
+        grid=grid,
+        in_specs=[spec] * n_in,
+        out_specs=(spec, spec),
+        interpret=interpret,
+    )(*padded)
+    r, c = a2.shape
+    rh = rh[:r, :c].reshape(orig_shape)
+    rl = rl[:r, :c].reshape(orig_shape)
+    return rh, rl

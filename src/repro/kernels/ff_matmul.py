@@ -1,0 +1,194 @@
+"""Pallas TPU kernels for FF matrix multiplication.
+
+Two kernels, mirroring ``repro.core.ffmatmul`` (DESIGN.md §2):
+
+* ``ff_matmul``  (production): hybrid MXU/VPU.  Grid (M/bm, N/bn, K/bk) with
+  K innermost; each step issues one MXU block-matmul (f32, HIGHEST) and folds
+  it into an FF accumulator held in VMEM scratch with Add22 (VPU).  This is
+  the paper's compensated-accumulation idea applied at MXU-block granularity:
+  >99% of flops stay on the MXU, accumulation error drops from O(K)u to
+  O(bk)u + O(K/bk)*2^-44.
+
+* ``ff_matmul_dot2`` (paper-faithful): every elementwise product is made
+  exact with Mul12 (Dekker split on the VPU) and accumulated with a TwoSum
+  cascade — the full float-float quality of the paper, at VPU cost.  Used for
+  small numerically critical matmuls and as the correctness anchor.
+
+VMEM budget at defaults (bm=bn=256, bk=512):
+  A tile 256*512*4 = 512 KiB, B tile 512*256*4 = 512 KiB,
+  acc scratch 2 * 256*256*4 = 512 KiB, out 2 * 256 KiB  ->  ~1.8 MiB << 16 MiB.
+MXU alignment: all block dims are multiples of 128.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import eft
+
+Array = jnp.ndarray
+
+
+def _block_dot(a, b):
+    # f32 MXU matmul; HIGHEST = 6-pass bf16 (f32-faithful) on TPU.
+    return lax.dot(a, b, precision=lax.Precision.HIGHEST,
+                   preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid kernel
+# ---------------------------------------------------------------------------
+
+def _ff_matmul_kernel(a_ref, b_ref, oh_ref, ol_ref, acc_hi, acc_lo, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_hi[...] = jnp.zeros_like(acc_hi)
+        acc_lo[...] = jnp.zeros_like(acc_lo)
+
+    p = _block_dot(a_ref[...], b_ref[...])
+    # add22(acc, (p, 0)) — fold the block product into the FF accumulator
+    sh, sl = eft.two_sum(acc_hi[...], p)
+    v = sl + acc_lo[...]
+    rh, rl = eft.fast_two_sum(sh, v)
+    acc_hi[...] = rh
+    acc_lo[...] = rl
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        oh_ref[...] = acc_hi[...]
+        ol_ref[...] = acc_lo[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def ff_matmul(a: Array, b: Array, *, bm: int = 256, bn: int = 256,
+              bk: int = 512, interpret: bool = False) -> Tuple[Array, Array]:
+    """FF(M,N) = a(M,K) @ b(K,N), hybrid MXU + compensated accumulation.
+
+    Returns (hi, lo) limbs.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    Mp, Kp = a.shape
+    _, Np = b.shape
+    nk = Kp // bk
+    grid = (Mp // bm, Np // bn, nk)
+    out = jax.ShapeDtypeStruct((Mp, Np), jnp.float32)
+    oh, ol = pl.pallas_call(
+        functools.partial(_ff_matmul_kernel, nk=nk),
+        out_shape=(out, out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b)
+    return oh[:M, :N], ol[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful Dot3 kernel
+# ---------------------------------------------------------------------------
+
+def _ff_matmul_dot2_kernel(a_ref, b_ref, oh_ref, ol_ref, s_acc, c_acc, cc_acc,
+                           *, nk: int, bk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        s_acc[...] = jnp.zeros_like(s_acc)
+        c_acc[...] = jnp.zeros_like(c_acc)
+        cc_acc[...] = jnp.zeros_like(cc_acc)
+
+    a = a_ref[...]          # (bm, bk)
+    b = b_ref[...]          # (bk, bn)
+
+    def body(j, carry):
+        s, c, cc = carry
+        aj = lax.dynamic_slice_in_dim(a, j, 1, axis=1)        # (bm, 1)
+        bj = lax.dynamic_slice_in_dim(b, j, 1, axis=0)        # (1, bn)
+        p, pe = eft.two_prod(aj, bj)                           # exact product
+        s2, se = eft.two_sum(s, p)
+        c2, ce = eft.two_sum(c, se + pe)
+        return s2, c2, cc + ce
+
+    s, c, cc = lax.fori_loop(
+        0, bk, body, (s_acc[...], c_acc[...], cc_acc[...]))
+    s_acc[...] = s
+    c_acc[...] = c
+    cc_acc[...] = cc
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        rh, rl = eft.fast_two_sum(s_acc[...], c_acc[...] + cc_acc[...])
+        oh_ref[...] = rh
+        ol_ref[...] = rl
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def ff_matmul_dot2(a: Array, b: Array, *, bm: int = 128, bn: int = 128,
+                   bk: int = 128, interpret: bool = False) -> Tuple[Array, Array]:
+    """Paper-faithful FF matmul: exact per-element products (Mul12) +
+    TwoSum cascade (Dot3 quality).  VPU-only; O(K) vector steps."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    Mp, Kp = a.shape
+    _, Np = b.shape
+    nk = Kp // bk
+    grid = (Mp // bm, Np // bn, nk)
+    out = jax.ShapeDtypeStruct((Mp, Np), jnp.float32)
+    oh, ol = pl.pallas_call(
+        functools.partial(_ff_matmul_dot2_kernel, nk=nk, bk=bk),
+        out_shape=(out, out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b)
+    return oh[:M, :N], ol[:M, :N]

@@ -1,0 +1,75 @@
+"""Public jit'd wrappers for the Pallas FF kernels.
+
+Selects interpret mode automatically on CPU (validation) and compiled mode
+on TPU.  All wrappers take/return ``repro.core.ff.FF`` where natural.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ff import FF
+from repro.kernels import ff_elementwise, ff_matmul, ff_reduce
+
+
+@functools.lru_cache(maxsize=1)
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def ff_add(a: FF, b: FF, *, interpret: Optional[bool] = None) -> FF:
+    """Elementwise Add22 via the Pallas kernel."""
+    interp = _interpret_default() if interpret is None else interpret
+    rh, rl = ff_elementwise.elementwise(
+        "add22", a.hi, a.lo, b.hi, b.lo, interpret=interp)
+    return FF(rh, rl)
+
+
+def ff_mul(a: FF, b: FF, *, interpret: Optional[bool] = None) -> FF:
+    """Elementwise Mul22 via the Pallas kernel."""
+    interp = _interpret_default() if interpret is None else interpret
+    rh, rl = ff_elementwise.elementwise(
+        "mul22", a.hi, a.lo, b.hi, b.lo, interpret=interp)
+    return FF(rh, rl)
+
+
+def two_prod(a, b, *, interpret: Optional[bool] = None) -> FF:
+    interp = _interpret_default() if interpret is None else interpret
+    x, y = ff_elementwise.elementwise("two_prod", a, b, interpret=interp)
+    return FF(x, y)
+
+
+def two_sum(a, b, *, interpret: Optional[bool] = None) -> FF:
+    interp = _interpret_default() if interpret is None else interpret
+    s, r = ff_elementwise.elementwise("two_sum", a, b, interpret=interp)
+    return FF(s, r)
+
+
+def matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 512,
+           interpret: Optional[bool] = None) -> FF:
+    """Hybrid MXU+Add22 FF matmul (production path)."""
+    interp = _interpret_default() if interpret is None else interpret
+    hi, lo = ff_matmul.ff_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=interp)
+    return FF(hi, lo)
+
+
+def matmul_dot2(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
+                interpret: Optional[bool] = None) -> FF:
+    """Paper-faithful FF matmul (exact products, Dot3 cascade)."""
+    interp = _interpret_default() if interpret is None else interpret
+    hi, lo = ff_matmul.ff_matmul_dot2(
+        a, b, bm=bm, bn=bn, bk=bk, interpret=interp)
+    return FF(hi, lo)
+
+
+def rowsum(x, *, br: int = 256, bc: int = 512, lane: int = 128,
+           interpret: Optional[bool] = None) -> FF:
+    """Compensated last-axis reduction of a 2-D array -> FF per row."""
+    interp = _interpret_default() if interpret is None else interpret
+    hi, lo = ff_reduce.ff_rowsum(
+        x, br=br, bc=bc, lane=lane, interpret=interp)
+    return FF(hi, lo)

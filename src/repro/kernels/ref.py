@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel (same algorithms, no tiling).
+
+Each ``ref_*`` mirrors its kernel's arithmetic ORDER so results agree to the
+last bits the order determines; accuracy vs the exact f64 oracle is asserted
+separately in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import transforms as T
+
+Array = jnp.ndarray
+
+
+def ref_add22(ah, al, bh, bl) -> Tuple[Array, Array]:
+    sh, sl = T.two_sum(ah, bh)
+    v = sl + (al + bl)
+    return T.fast_two_sum(sh, v)
+
+
+def ref_mul22(ah, al, bh, bl) -> Tuple[Array, Array]:
+    th, tl = T.two_prod(ah, bh)
+    t = tl + (ah * bl + al * bh)
+    return T.fast_two_sum(th, t)
+
+
+def ref_two_prod(a, b) -> Tuple[Array, Array]:
+    return T.two_prod(a, b)
+
+
+def ref_two_sum(a, b) -> Tuple[Array, Array]:
+    return T.two_sum(a, b)
+
+
+def ref_ff_matmul(a: Array, b: Array, bk: int = 512) -> Tuple[Array, Array]:
+    """Oracle for the hybrid kernel: blocked-K f32 dots + Add22 folding,
+    identical K-block order."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    M, K = a.shape
+    _, N = b.shape
+    bk = min(bk, K)
+    pk = (-K) % bk
+    if pk:
+        a = jnp.pad(a, ((0, 0), (0, pk)))
+        b = jnp.pad(b, ((0, pk), (0, 0)))
+    nk = a.shape[1] // bk
+    a3 = a.reshape(M, nk, bk).transpose(1, 0, 2)
+    b3 = b.reshape(nk, bk, N)
+
+    def body(carry, ab):
+        hi, lo = carry
+        ai, bi = ab
+        p = lax.dot(ai, bi, precision=lax.Precision.HIGHEST,
+                    preferred_element_type=jnp.float32)
+        sh, sl = T.two_sum(hi, p)
+        v = sl + lo
+        rh, rl = T.fast_two_sum(sh, v)
+        return (rh, rl), None
+
+    z = jnp.zeros((M, N), jnp.float32)
+    (hi, lo), _ = lax.scan(body, (z, z), (a3, b3))
+    return hi, lo
+
+
+def ref_ff_matmul_dot2(a: Array, b: Array) -> Tuple[Array, Array]:
+    """Oracle for the paper-faithful kernel: per-element Mul12 + Dot3
+    cascade in the same K order."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    M, K = a.shape
+    _, N = b.shape
+
+    def body(carry, ab):
+        s, c, cc = carry
+        ai, bi = ab
+        p, pe = T.two_prod(ai[:, None], bi[None, :])
+        s2, se = T.two_sum(s, p)
+        c2, ce = T.two_sum(c, se + pe)
+        return (s2, c2, cc + ce), None
+
+    z = jnp.zeros((M, N), jnp.float32)
+    (s, c, cc), _ = lax.scan(body, (z, z, z), (a.T, b))
+    return T.fast_two_sum(s, c + cc)
+
+
+def ref_ff_rowsum(x: Array, lane: int = 128) -> Tuple[Array, Array]:
+    """Oracle for ff_rowsum: lane-strided Sum3 cascade, then exact fold."""
+    x = jnp.asarray(x, jnp.float32)
+    R, C = x.shape
+    lane = min(lane, C)
+    pc = (-C) % lane
+    if pc:
+        x = jnp.pad(x, ((0, 0), (0, pc)))
+    xb = x.reshape(R, -1, lane)  # (R, steps, lane)
+
+    def body(carry, xt):
+        s, c, cc = carry
+        s2, e = T.two_sum(s, xt)
+        c2, e2 = T.two_sum(c, e)
+        return (s2, c2, cc + e2), None
+
+    z = jnp.zeros((R, lane), jnp.float32)
+    (s, c, cc), _ = lax.scan(body, (z, z, z), xb.transpose(1, 0, 2))
+
+    def fold(carry, scc):
+        fh, fl = carry
+        si, ci, cci = scc
+        sh, sl = T.two_sum(fh, si)
+        v = sl + (fl + ci + cci)
+        return T.fast_two_sum(sh, v), None
+
+    zr = jnp.zeros((R,), jnp.float32)
+    (fh, fl), _ = lax.scan(fold, (zr, zr),
+                           (s.T, c.T, cc.T))
+    return fh, fl

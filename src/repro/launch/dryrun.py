@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct inputs (no allocation), print
+memory_analysis / cost_analysis, parse collective bytes, and write the
+artifact JSON that benchmarks/roofline.py consumes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+Depth extrapolation: XLA's cost_analysis counts scan (while) bodies once,
+so per-cell we additionally lower depth-1/depth-2 (per scan unit) variants
+and extrapolate flops/bytes/collective-bytes linearly to the full depth.
+memory_analysis comes from the FULL-depth compile (stacked params are real).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, ShapeSpec, cell_applicable, get_config
+from repro.core.policy import PrecisionPolicy
+from repro.distributed import sharding as shd
+from repro.distributed import act_sharding as act_shd
+from repro.launch import hlo_analysis as hla
+from repro.launch import hlo_costs
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_params, init_cache
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamW
+from repro.train.train_step import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; weak-type-correct, shardable)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, spec: ShapeSpec) -> Dict[str, Any]:
+    B, S = spec.global_batch, spec.seq_len
+    if spec.kind == "train":
+        d = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    elif spec.kind == "prefill":
+        d = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    else:  # decode: one new token against a seq_len cache
+        d = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    if cfg.family == "vlm" and spec.kind != "decode":
+        d["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec" and spec.kind != "decode":
+        d["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return d
+
+
+def _shapes_of(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _depth_variants(cfg: ModelConfig):
+    """[(name, cfg, depth_value)] for linear flop extrapolation."""
+    if cfg.family == "encdec":
+        c11 = dataclasses.replace(cfg, num_layers=1, encoder_layers=1)
+        c21 = dataclasses.replace(cfg, num_layers=1, encoder_layers=2)
+        c12 = dataclasses.replace(cfg, num_layers=2, encoder_layers=1)
+        return ("encdec", [c11, c21, c12])
+    if cfg.family == "hybrid":
+        per = cfg.attn_every
+        c1 = dataclasses.replace(cfg, num_layers=per)
+        c2 = dataclasses.replace(cfg, num_layers=2 * per)
+        return ("stack", [c1, c2])
+    c1 = dataclasses.replace(cfg, num_layers=1)
+    c2 = dataclasses.replace(cfg, num_layers=2)
+    return ("stack", [c1, c2])
+
+
+def _full_depth(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    return cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+def _lower_cell(cfg: ModelConfig, spec: ShapeSpec, mesh,
+                policy: PrecisionPolicy) -> Tuple[Any, Any]:
+    """Return (lowered, compiled) for one (cfg, shape, mesh)."""
+    B, S = spec.global_batch, spec.seq_len
+    params_shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    p_sh = shd.param_shardings(params_shapes, cfg, mesh)
+    batch = input_specs(cfg, spec)
+    b_sh = shd.batch_shardings(batch, mesh)
+
+    if spec.kind == "train":
+        opt = AdamW(learning_rate=1e-3, ff=policy.ff_master_weights)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        o_sh = shd.opt_state_shardings(None, p_sh)
+        step = make_train_step(cfg, policy, opt, microbatches=1)
+        rep = NamedSharding(mesh, P())
+        metrics_sh = {"loss": rep, "aux": rep, "grad_norm": rep, "lr": rep}
+        fn = jax.jit(step,
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, metrics_sh),
+                     donate_argnums=(0, 1))
+        with mesh, act_shd.activation_sharding(mesh, cfg.d_model, B):
+            lowered = fn.lower(params_shapes, opt_shapes, batch)
+    else:
+        cache_len = S if spec.kind != "prefill" else S
+        extra = cfg.num_patches if cfg.family == "vlm" else 0
+        cache_shapes = jax.eval_shape(
+            lambda: init_cache(cfg, B, cache_len + extra, jnp.bfloat16))
+        c_sh = shd.cache_shardings(cache_shapes, cfg, mesh, B)
+        rep = NamedSharding(mesh, P())
+        daxes = shd._dp_for_batch(B, mesh)
+        logits_spec = shd.validate_spec(
+            P(daxes, "model"), (B, cfg.vocab_size), mesh)
+        logits_sh = NamedSharding(mesh, logits_spec)
+        if spec.kind == "prefill":
+            from repro.train.serve_step import make_prefill_step
+            step = make_prefill_step(cfg, policy)
+            fn = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                         out_shardings=(logits_sh, c_sh),
+                         donate_argnums=(2,))
+            with mesh, act_shd.activation_sharding(mesh, cfg.d_model, B):
+                lowered = fn.lower(params_shapes, batch, cache_shapes)
+        else:
+            from repro.train.serve_step import make_decode_step
+            step = make_decode_step(cfg, policy)
+            tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = jax.jit(step,
+                         in_shardings=(p_sh, b_sh["tokens"], rep, c_sh),
+                         out_shardings=(logits_sh, c_sh),
+                         donate_argnums=(3,))
+            with mesh, act_shd.activation_sharding(mesh, cfg.d_model, B):
+                lowered = fn.lower(params_shapes, tok, pos, cache_shapes)
+    compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             policy: Optional[PrecisionPolicy] = None,
+             cfg_override: Optional[ModelConfig] = None,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = cfg_override or get_config(arch)
+    spec = SHAPES[shape]
+    ok, reason = cell_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "kind": spec.kind, "seq_len": spec.seq_len,
+        "global_batch": spec.global_batch,
+    }
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        return result
+    policy = policy or PrecisionPolicy.make("ff_master")
+    result["policy"] = policy.level
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    # full-depth compile: memory analysis + trip-count-aware HLO cost walk
+    # (XLA's cost_analysis counts while bodies once — hlo_costs multiplies
+    # by the known_trip_count annotations instead; see hlo_costs.py)
+    lowered, compiled = _lower_cell(cfg, spec, mesh, policy)
+    result["memory"] = hla.memory_summary(compiled)
+    parsed = hlo_costs.analyze_text(compiled.as_text())
+    cost = {"flops": parsed["flops"], "bytes": parsed["hbm_bytes"]}
+    coll = {k: parsed.get(k, 0.0) for k in hlo_costs.COLLECTIVE_OPS}
+    coll["total"] = parsed["collective_bytes"]
+
+    result["cost"] = cost
+    result["cost_xla_while_body_once"] = hla.cost_summary(compiled)
+    result["collectives"] = coll
+    result["compile_seconds"] = time.time() - t0
+    result["status"] = "ok"
+
+    if verbose:
+        ma = result["memory"]
+        print(f"=== {arch} x {shape} x {mesh_name} ===")
+        print(f"  memory/device: args {ma['argument_size_in_bytes']/2**30:.2f} GiB, "
+              f"temp {ma['temp_size_in_bytes']/2**30:.2f} GiB, "
+              f"out {ma['output_size_in_bytes']/2**30:.2f} GiB "
+              f"(aliased {ma['alias_size_in_bytes']/2**30:.2f} GiB)")
+        print(f"  HLO flops (extrapolated): {cost['flops']:.3e}  "
+              f"bytes: {cost['bytes']:.3e}")
+        print(f"  collective bytes: {coll['total']:.3e} "
+              f"(AG {coll['all-gather']:.2e} AR {coll['all-reduce']:.2e} "
+              f"RS {coll['reduce-scatter']:.2e} A2A {coll['all-to-all']:.2e} "
+              f"CP {coll['collective-permute']:.2e})")
+        print(f"  compile: {result['compile_seconds']:.1f}s")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--policy", default="ff_master")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    policy = PrecisionPolicy.make(args.policy)
+    failures = 0
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            tag = f"{arch.replace('-', '_')}__{shape}__" + \
+                ("2x16x16" if multi_pod else "16x16")
+            out_path = os.path.join(args.out, tag + ".json")
+            try:
+                res = run_cell(arch, shape, multi_pod, policy=policy)
+            except Exception as e:  # a failing cell is a bug: record + count
+                traceback.print_exc()
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if multi_pod else "16x16",
+                       "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            with open(out_path, "w") as f:
+                json.dump(res, f, indent=1)
+    print(f"\ndry-run complete: {len(cells) * len(meshes)} cells, "
+          f"{failures} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

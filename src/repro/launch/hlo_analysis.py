@@ -1,0 +1,118 @@
+"""HLO artifact analysis for the roofline report.
+
+* ``cost_summary(compiled)``       — flops / bytes from cost_analysis()
+* ``collective_bytes(hlo_text)``   — per-collective-type byte totals parsed
+  from the HLO module (cost_analysis does not expose collectives)
+* ``depth_extrapolate``            — XLA counts ``while`` (scan) bodies ONCE
+  (verified empirically); lowering depth-1 and depth-2 variants and solving
+  linearly recovers exact full-depth totals.
+
+Collective byte accounting (ring algorithms, per participating device):
+  all-gather:          output is the gathered (full) tensor;  wire bytes
+                       ~ (n-1)/n * full          -> we record full output
+  reduce-scatter:      wire ~ (n-1)/n * input    -> record input (=out*n)
+  all-reduce:          wire ~ 2(n-1)/n * size    -> record 2*size
+  all-to-all:          wire ~ (n-1)/n * size     -> record size
+  collective-permute:  record size
+The (n-1)/n factor is applied in roofline.py where n is known.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' -> bytes.  Tuples handled by caller via findall."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum collective op sizes by type over the whole module.
+
+    Counts '-start' forms once (skips '-done').  Sizes taken from the
+    defining (output) shape; all-reduce doubled per the ring model;
+    reduce-scatter recorded as input size (= output * shards in the group,
+    conservatively approximated by output bytes when group size is absent —
+    roofline.py multiplies by group factors).
+    """
+    out: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[1][:60]:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        sz = _shape_bytes(shape_str)
+        if op == "all-reduce":
+            sz *= 2
+        out[op] += sz
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        out[k] = float(getattr(ma, k, 0) or 0)
+    out["per_device_total"] = (out["argument_size_in_bytes"]
+                               + out["output_size_in_bytes"]
+                               + out["temp_size_in_bytes"]
+                               - out.get("alias_size_in_bytes", 0.0))
+    return out
+
+
+def depth_extrapolate(vals_d1: Dict[str, float], vals_d2: Dict[str, float],
+                      depth: int) -> Dict[str, float]:
+    """Linear extrapolation: f(L) = f(1) + (L-1) * (f(2) - f(1)).
+
+    Negative per-layer deltas (parsing noise) are clamped to 0.
+    """
+    out = {}
+    keys = set(vals_d1) | set(vals_d2)
+    for k in keys:
+        a = vals_d1.get(k, 0.0)
+        b = vals_d2.get(k, 0.0)
+        per_layer = max(b - a, 0.0)
+        out[k] = a + (depth - 1) * per_layer
+    return out

@@ -1,0 +1,342 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's built-in ``cost_analysis()`` counts each ``while`` body ONCE, which
+undercounts scan-over-layers models by ~L x and misses in-loop collectives
+entirely (measured: a 40-layer model reported ~1 layer of flops).  This
+module parses the post-optimization HLO text — where XLA annotates every
+loop with ``backend_config={"known_trip_count":{"n":...}}`` — and walks the
+call graph multiplying per-computation costs by trip counts.
+
+Costs:
+  flops       — dots: 2 * prod(output dims) * prod(contracting dims)
+                (batch dims land in the output product, so this is exact);
+                other ops: 1 flop per output element (minor terms).
+  hbm_bytes   — produced-tensor flow model: every materialized (non-fused)
+                output counts write+read (2x output bytes).  Operand reads
+                are thereby attributed to their producer; sparse reads
+                (embedding gathers, dynamic slices of stacked weights) are
+                counted at slice size, not table size — counting operand
+                footprints instead was measured to overcount ~500x on
+                scanned FSDP models.
+  collectives — per-type byte totals: output-shape bytes, all-reduce
+                doubled (ring), '-start' counted / '-done' skipped.
+
+Validated against cost_analysis() on loop-free modules (exact match on
+dot flops) and against 6ND analytics on scanned transformers.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_ATOM = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\((.*)$")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|body|to_apply)=%([\w.\-]+)")
+_BODY = re.compile(r"body=%([\w.\-]+)")
+_COND = re.compile(r"condition=%([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_ATOM.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dl = [int(d) for d in dims.split(",") if d] if dims else []
+        out.append((dtype, dl))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    total = 0
+    for _, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+class Instr:
+    __slots__ = ("name", "shape", "op", "rest")
+
+    def __init__(self, name, shape, op, rest):
+        self.name = name
+        self.shape = shape
+        self.op = op
+        self.rest = rest
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.instr_shapes: Dict[Tuple[str, str], str] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Dict[str, float]] = {}
+
+    # ------------------------------------------------------------------
+    _COMMENT = re.compile(r"/\*.*?\*/")
+
+    def _parse(self, text: str) -> None:
+        current = None
+        for raw in text.splitlines():
+            if "/*" in raw:
+                raw = self._COMMENT.sub("", raw)
+            if raw and not raw.startswith(" ") and "{" in raw:
+                m = re.match(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(", raw)
+                if m:
+                    current = m.group(2)
+                    self.computations[current] = []
+                    if m.group(1):
+                        self.entry = current
+                    continue
+                current = None
+                continue
+            if current is None:
+                continue
+            if raw.strip() == "}":
+                current = None
+                continue
+            m = _INSTR.match(raw)
+            if not m:
+                continue
+            name, shape, op, rest = m.groups()
+            ins = Instr(name, shape, op, rest)
+            self.computations[current].append(ins)
+            self.instr_shapes[(current, name)] = shape
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        out_elems = _shape_elems(ins.shape)
+        mc = _LHS_C.search(ins.rest)
+        cdims = [int(x) for x in mc.group(1).split(",") if x] if mc else []
+        ops = _OPERAND.findall(ins.rest.split(", lhs_contracting")[0])
+        contract = 1
+        if ops:
+            lhs_shape = self.instr_shapes.get((comp, ops[0]))
+            if lhs_shape:
+                dims = _shape_dims(lhs_shape)
+                if dims:
+                    dl = dims[0][1]
+                    for c in cdims:
+                        if c < len(dl):
+                            contract *= dl[c]
+        return 2.0 * out_elems * contract
+
+    _SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "copy-start", "copy-done", "after-all",
+                   "partition-id", "replica-id", "iota"}
+
+    def _instr_cost(self, comp: str, ins: Instr) -> Dict[str, float]:
+        cost = {"flops": 0.0, "hbm_bytes": 0.0}
+        for c in COLLECTIVE_OPS:
+            cost[c] = 0.0
+        op = ins.op
+
+        if op == "while":
+            trips = 1.0
+            mt = _TRIP.search(ins.rest)
+            if mt:
+                trips = float(mt.group(1))
+            body = _BODY.search(ins.rest)
+            cond = _COND.search(ins.rest)
+            for ref in (body, cond):
+                if ref:
+                    sub = self.comp_cost(ref.group(1))
+                    for k, v in sub.items():
+                        cost[k] += trips * v
+            return cost
+
+        if op == "conditional":
+            mb = _BRANCHES.search(ins.rest)
+            if mb:
+                branches = _OPERAND.findall(mb.group(1))
+                subs = [self.comp_cost(b) for b in branches]
+                if subs:
+                    for k in cost:
+                        cost[k] += max(s.get(k, 0.0) for s in subs)
+            return cost
+
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in COLLECTIVE_OPS:
+            sz = float(_shape_bytes(ins.shape))
+            if base_op == "all-gather" and op.endswith("-start"):
+                # -start output includes the (input, output) tuple; halve-ish:
+                # use output entry = gathered tensor ≈ 2/3 of tuple bytes;
+                # keep full tuple as a conservative upper bound instead.
+                pass
+            if base_op == "all-reduce":
+                sz *= 2.0
+            cost[base_op] += sz
+            cost["hbm_bytes"] += float(_shape_bytes(ins.shape))
+            return cost
+        if op.endswith("-done"):
+            return cost
+
+        if op in ("fusion", "call", "async-start"):
+            mc = _CALLS.search(ins.rest)
+            sub_root_dus_bytes = None
+            if mc:
+                sub = self.comp_cost(mc.group(1))
+                for k, v in sub.items():
+                    if op == "fusion" and k == "hbm_bytes":
+                        continue   # fusion internals are VMEM-resident
+                    cost[k] += v
+                sub_root_dus_bytes = (self._dus_root_bytes(mc.group(1))
+                                      if op == "fusion" else None)
+            if sub_root_dus_bytes is not None:
+                # fusion rooted in dynamic-update-slice: an IN-PLACE slice
+                # write (XLA aliases the buffer); only the slice moves.
+                cost["hbm_bytes"] += 2.0 * sub_root_dus_bytes
+            else:
+                cost["hbm_bytes"] += self._boundary_bytes(comp, ins)
+            return cost
+
+        if op == "dynamic-update-slice":
+            upd = self._operand_shape(comp, ins, 1)
+            cost["hbm_bytes"] += 2.0 * (_shape_bytes(upd) if upd else
+                                        _shape_bytes(ins.shape))
+            return cost
+
+        if op == "dot":
+            cost["flops"] += self._dot_flops(comp, ins)
+            cost["hbm_bytes"] += self._boundary_bytes(comp, ins)
+            return cost
+
+        if op in ("reduce", "reduce-window", "scatter", "select-and-scatter",
+                  "sort", "custom-call"):
+            cost["flops"] += float(_shape_elems(ins.shape))
+            cost["hbm_bytes"] += self._boundary_bytes(comp, ins)
+            return cost
+
+        if op in self._SKIP_BYTES:
+            return cost
+
+        # generic elementwise-ish op
+        cost["flops"] += float(_shape_elems(ins.shape))
+        cost["hbm_bytes"] += self._boundary_bytes(comp, ins)
+        return cost
+
+    def _boundary_bytes(self, comp: str, ins: Instr) -> float:
+        # produced-bytes flow model: write + one subsequent read
+        return 2.0 * float(_shape_bytes(ins.shape))
+
+    def _operand_shape(self, comp: str, ins: Instr, idx: int):
+        args = ins.rest.split("),")[0]
+        names = _OPERAND.findall(args)
+        if idx < len(names):
+            return self.instr_shapes.get((comp, names[idx]))
+        return None
+
+    def _dus_root_bytes(self, comp: str):
+        """If the computation's ROOT is a dynamic-update-slice (possibly
+        wrapped in convert/bitcast/copy — XLA:CPU round-trips the carried
+        buffer through f32), return the update slice's bytes, else None.
+        DUS is an in-place slice write under buffer aliasing; counting the
+        full buffer per scan step overstated llama-405b bytes by ~40%."""
+        instrs = self.computations.get(comp, [])
+        if not instrs:
+            return None
+        by_name = {i.name: i for i in instrs}
+        root = instrs[-1]
+        for _ in range(4):  # look through wrapper chain
+            if root.op == "dynamic-update-slice":
+                upd = self._operand_shape(comp, root, 1)
+                return float(_shape_bytes(upd)) if upd else None
+            if root.op in ("convert", "bitcast", "copy"):
+                args = _OPERAND.findall(root.rest.split("),")[0])
+                if args and args[0] in by_name:
+                    root = by_name[args[0]]
+                    continue
+            break
+        return None
+
+    # ------------------------------------------------------------------
+    def comp_cost(self, comp: str) -> Dict[str, float]:
+        if comp in self._memo:
+            return self._memo[comp]
+        cost = {"flops": 0.0, "hbm_bytes": 0.0}
+        for c in COLLECTIVE_OPS:
+            cost[c] = 0.0
+        self._memo[comp] = cost  # break cycles defensively
+        for ins in self.computations.get(comp, []):
+            # fused computations' internal elementwise costs are intra-VMEM:
+            # counted as flops but their hbm handled at the boundary; we add
+            # both (flops inside, bytes at fusion site in _instr_cost).
+            sub = self._instr_cost(comp, ins)
+            for k, v in sub.items():
+                cost[k] += v
+        return cost
+
+    def totals(self) -> Dict[str, float]:
+        if not self.entry:
+            return {}
+        out = dict(self.comp_cost(self.entry))
+        out["collective_bytes"] = sum(out[c] for c in COLLECTIVE_OPS)
+        return out
+
+
+def analyze_text(hlo_text: str) -> Dict[str, float]:
+    return HloCostModel(hlo_text).totals()
+
+
+_METADATA_NAME = re.compile(r'op_name="([^"]*)"')
+
+
+def top_bytes(hlo_text: str, k: int = 20):
+    """Largest HBM-byte contributors (trip-multiplied), attributed to the
+    producing JAX op via HLO metadata — the profiler substitute for the
+    §Perf loop."""
+    m = HloCostModel(hlo_text)
+    contrib: Dict[str, float] = {}
+
+    def walk(comp: str, mult: float):
+        for ins in m.computations.get(comp, []):
+            if ins.op == "while":
+                mt = _TRIP.search(ins.rest)
+                trips = float(mt.group(1)) if mt else 1.0
+                for r in (_BODY.search(ins.rest), _COND.search(ins.rest)):
+                    if r:
+                        walk(r.group(1), mult * trips)
+                continue
+            if ins.op in m._SKIP_BYTES or ins.op.endswith("-done"):
+                continue
+            b = m._instr_cost(comp, ins)["hbm_bytes"] * mult
+            if b <= 0:
+                continue
+            mm = _METADATA_NAME.search(ins.rest)
+            name = mm.group(1) if mm else ins.op
+            # collapse per-instruction noise to the jax-level op path
+            key = f"{ins.op}:{name}"
+            contrib[key] = contrib.get(key, 0.0) + b
+
+    if m.entry:
+        walk(m.entry, 1.0)
+    return sorted(contrib.items(), key=lambda kv: -kv[1])[:k]

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax
+device state; the dry-run sets XLA_FLAGS for 512 host devices BEFORE
+calling this.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the same axis names (smoke tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

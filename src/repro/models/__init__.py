@@ -1,0 +1,6 @@
+"""Model zoo: unified config + families (dense/MoE/MLA, SSM, hybrid,
+enc-dec, VLM) as pure functions over parameter pytrees."""
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    init_params, train_forward, prefill, decode_step, init_cache,
+)

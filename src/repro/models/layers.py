@@ -1,0 +1,327 @@
+"""Shared transformer layers: norms, RoPE, flash (blockwise) attention with
+GQA + KV cache, SwiGLU MLP, embeddings.
+
+Everything is a pure function over parameter pytrees (dicts of jnp arrays) —
+no framework objects — so pjit/shard_map, scan and remat compose freely.
+
+Precision-policy integration (the paper's technique as a feature):
+  * ``rms_norm(..., ff_stats=True)`` computes the variance with a compensated
+    (TwoSum-cascade) reduction — exact enough that bf16/f32 layernorm drift
+    disappears at 500k-token sequence scale.
+  * attention softmax accumulators are always f32 (standard), with the
+    log-sum-exp renormalization structured like the paper's branch-free ops.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import compensated
+from repro.models.config import ModelConfig
+
+Array = jnp.ndarray
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, w: Array, eps: float, ff_stats: bool = False) -> Array:
+    """RMSNorm; with ff_stats=True the mean-square is a compensated sum.
+
+    Layout note (§Perf iter 2): the statistics are f32 (and optionally FF),
+    but NO f32 (B,S,d) tensor is materialized — only the (B,S,1) scale is
+    f32.  With TP-sharded activations, XLA otherwise all-gathers the f32
+    pre-convert tensor, doubling the dominant collective (measured on
+    llama3-405b train_4k: activation AG/AR were f32, 2x wire bytes).
+    """
+    xf = x.astype(jnp.float32)
+    if ff_stats:
+        ms = compensated.ff_sum_blocked(xf * xf, axis=-1, block=128).to_f32() / x.shape[-1]
+        ms = ms[..., None]
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    scale = lax.rsqrt(ms + eps).astype(x.dtype)      # (B,S,1), cheap in bf16
+    return x * scale * w.astype(x.dtype)
+
+
+def layer_norm(x: Array, w: Array, b: Array, eps: float,
+               ff_stats: bool = False) -> Array:
+    xf = x.astype(jnp.float32)
+    if ff_stats:
+        n = x.shape[-1]
+        mu = (compensated.ff_sum_blocked(xf, axis=-1, block=128).to_f32() / n)[..., None]
+        var = (compensated.ff_sum_blocked((xf - mu) ** 2, axis=-1, block=128).to_f32() / n)[..., None]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd) ; positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise ("flash") attention — the only memory-feasible form at 32k+
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                    block_q: int, block_kv: int, q_offset=0) -> Array:
+    """Online-softmax blockwise attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd); H = KV * G (GQA).
+    Never materializes (Sq, Skv); peak extra memory is
+    (B, KV, G, block_q, block_kv).  q_offset: absolute position of q[0]
+    (for cached decode/prefill continuation).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    pq, pkv = (-Sq) % bq, (-Skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    nq, nkv = q.shape[1] // bq, k.shape[1] // bkv
+    scale = 1.0 / math.sqrt(hd)
+
+    # (nq, B, KV, G, bq, hd)
+    qb = q.reshape(B, nq, bq, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 3, 2, 4)  # (nkv,B,KV,bkv,hd)
+    vb = v.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 3, 2, 4)
+
+    q_pos_base = jnp.asarray(q_offset, jnp.int32)
+
+    def one_q_block(iq, qi):
+        # qi: (B, KV, G, bq, hd)
+        qi32 = qi.astype(jnp.float32) * scale
+        q_pos = q_pos_base + iq * bq + jnp.arange(bq, dtype=jnp.int32)
+
+        def kv_step(carry, jk):
+            m, l, acc = carry
+            kj = kb[jk].astype(jnp.float32)   # (B,KV,bkv,hd)
+            vj = vb[jk].astype(jnp.float32)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qi32, kj)   # (B,KV,G,bq,bkv)
+            kv_pos = jk * bkv + jnp.arange(bkv, dtype=jnp.int32)
+            mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
+                jnp.ones((bq, bkv), bool)
+            # mask out kv padding
+            mask = jnp.logical_and(mask, (kv_pos < Skv)[None, :])
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vj)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  jnp.arange(nkv, dtype=jnp.int32))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B,KV,G,bq,hd)
+
+    outs = lax.map(lambda args: one_q_block(*args),
+                   (jnp.arange(nq, dtype=jnp.int32), qb))
+    # (nq,B,KV,G,bq,hd) -> (B, Sq, H, hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * bq, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cache_len: Array) -> Array:
+    """Single-position attention against a (possibly partially filled) cache.
+
+    q: (B, 1, H, hd); caches: (B, Smax, KV, hd); cache_len: () int32 —
+    number of valid cache positions (the new token's K/V must already be
+    written at cache_len-1).
+    """
+    B, _, H, hd = q.shape
+    _, Smax, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    q4 = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
+    kf = k_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", q4, kf)            # (B,KV,G,Smax)
+    valid = jnp.arange(Smax, dtype=jnp.int32) < cache_len
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30),
+                     v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (params + apply, train & decode)
+# ---------------------------------------------------------------------------
+
+def attn_params(key, cfg: ModelConfig) -> Params:
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (cfg.d_model, cfg.num_heads * hd)),
+        "wk": dense_init(k2, (cfg.d_model, cfg.num_kv_heads * hd)),
+        "wv": dense_init(k3, (cfg.d_model, cfg.num_kv_heads * hd)),
+        "wo": dense_init(k4, (cfg.num_heads * hd, cfg.d_model)),
+    }
+
+
+def attn_apply(p: Params, x: Array, cfg: ModelConfig, *,
+               positions: Array, causal: bool = True) -> Array:
+    """Full-sequence attention (training / prefill)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, cfg.num_heads, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=causal,
+                        block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+    return o.reshape(B, S, cfg.num_heads * hd) @ p["wo"].astype(dt)
+
+
+def attn_prefill(p: Params, x: Array, cfg: ModelConfig, *, positions: Array,
+                 cache: Params) -> Tuple[Array, Params]:
+    """Prefill: same as train but also writes the KV cache."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, cfg.num_heads, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=True,
+                        block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+    cache = dict(cache)
+    cache["k"] = lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+    cache["v"] = lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+    return o.reshape(B, S, cfg.num_heads * hd) @ p["wo"].astype(dt), cache
+
+
+def attn_decode(p: Params, x: Array, cfg: ModelConfig, *,
+                pos: Array, cache: Params) -> Tuple[Array, Params]:
+    """One-token decode: update cache at ``pos``, attend to cache[:pos+1]."""
+    B, S, _ = x.shape
+    assert S == 1
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, 1, cfg.num_heads, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, 1, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, 1, cfg.num_kv_heads, hd)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    cache = dict(cache)
+    cache["k"] = lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    cache["v"] = lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    o = decode_attention(q, cache["k"], cache["v"], pos + 1)
+    return o.reshape(B, 1, cfg.num_heads * hd) @ p["wo"].astype(dt), cache
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Params:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (cfg.d_model, d_ff)),
+        "w_up": dense_init(k2, (cfg.d_model, d_ff)),
+        "w_down": dense_init(k3, (d_ff, cfg.d_model)),
+    }
+
+
+def mlp_apply(p: Params, x: Array) -> Array:
+    dt = x.dtype
+    g = jax.nn.silu(x @ p["w_gate"].astype(dt))
+    u = x @ p["w_up"].astype(dt)
+    return (g * u) @ p["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed_params(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": dense_init(k1, (cfg.vocab_size, cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def embed_apply(p: Params, tokens: Array, dtype) -> Array:
+    return p["tok"].astype(dtype)[tokens]
+
+
+def unembed_apply(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    dt = x.dtype
+    w = p["unembed"].astype(dt) if "unembed" in p else p["tok"].astype(dt).T
+    logits = x @ w
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

@@ -1,0 +1,237 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block in pure JAX.
+
+Chunked SSD: intra-chunk terms are quadratic attention-like einsums over
+chunk length Q; inter-chunk recurrence carries the (H, P, N) state with a
+``lax.scan`` over chunks — O(S) total, the sub-quadratic path the long_500k
+shape requires.
+
+Decode is a single recurrent state update per token (state: (B, H, P, N)).
+Depthwise causal conv (width 4) over the x/B/C projections with a rolling
+cache for decode, as in the reference implementation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+Array = jnp.ndarray
+Params = Dict[str, Any]
+
+CHUNK = 256
+
+
+def ssd_params(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    conv_dim = di + 2 * N   # x plus B and C (single group)
+    ks = jax.random.split(key, 6)
+    # separate projections (z | x | BC | dt) instead of one fused in_proj:
+    # each gets a clean tensor-parallel sharding (di -> 'model' axis) without
+    # cutting across semantic segment boundaries.
+    return {
+        "w_z": dense_init(ks[0], (d, di)),
+        "w_x": dense_init(ks[3], (d, di)),
+        "w_bc": dense_init(ks[4], (d, 2 * N)),
+        "w_dt": dense_init(ks[5], (d, H)),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                     jnp.float32) * 0.1),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], (di, d)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over (B, S, C) with kernel (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+              for i in range(W))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _segsum(a: Array) -> Array:
+    """Stable 'segment sum' producing L[i,j] = sum_{j<m<=i} a[m] for j<=i.
+
+    a: (..., Q) -> (..., Q, Q) lower-triangular cumulative sums.
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum over (j, i]
+    idx = jnp.arange(Q)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+             state: Array | None = None) -> Tuple[Array, Array]:
+    """Chunked SSD.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B, S, N)  (single SSM group, broadcast over heads);
+    state: optional initial (B, H, P, N).
+    Returns (y (B,S,H,P), final_state).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(CHUNK, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // Q
+
+    # reshape to chunks: (B, nc, Q, ...)
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    a = dtc * A[None, None, None, :]                    # (B,nc,Q,H) negative
+    a_t = a.transpose(0, 1, 3, 2)                       # (B,nc,H,Q)
+    a_cum = jnp.cumsum(a_t, axis=-1)                    # within-chunk
+    L = jnp.exp(_segsum(a_t))                           # (B,nc,H,Q,Q)
+
+    # weighted inputs
+    xdt = xc * dtc[..., None]                           # (B,nc,Q,H,P)
+
+    # 1) intra-chunk (diagonal) term
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)      # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp",
+                        scores, L, xdt.transpose(0, 1, 2, 3, 4))
+    # note: einsum above needs xdt as (B,nc,K,H,P): same layout ✓
+
+    # 2) chunk-final states: decay from position k to end of chunk
+    decay_end = jnp.exp(a_cum[..., -1:] - a_cum)        # (B,nc,H,Q)
+    states = jnp.einsum("bckn,bchk,bckhp->bchpn",
+                        Bc, decay_end, xdt)             # (B,nc,H,P,N)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])               # (B,nc,H)
+
+    def step(carry, inp):
+        st = carry                                      # (B,H,P,N)
+        s_new, dec = inp                                # (B,H,P,N), (B,H)
+        st2 = st * dec[..., None, None] + s_new
+        return st2, st                                  # emit state BEFORE chunk
+
+    st0 = state if state is not None else jnp.zeros(
+        (Bsz, H, P, N), x.dtype)
+    final, prev_states = lax.scan(
+        step, st0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # 4) inter-chunk output: decay from chunk start to position q
+    decay_in = jnp.exp(a_cum)                           # (B,nc,H,Q)
+    y_off = jnp.einsum("bcqn,bchq,bchpn->bcqhp",
+                       Cc, decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, final
+
+
+def ssd_block_apply(p: Params, x: Array, cfg: ModelConfig,
+                    state: Params | None = None,
+                    return_state: bool = False):
+    """Full mamba2 mixer: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+    B, S, d = x.shape
+    di = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    dt_x = x.dtype
+    z = x @ p["w_z"].astype(dt_x)
+    xin = x @ p["w_x"].astype(dt_x)
+    bc = x @ p["w_bc"].astype(dt_x)
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    dt_raw = x @ p["w_dt"].astype(dt_x)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xin = conv_out[..., :di]
+    Bm = conv_out[..., di:di + N]
+    Cm = conv_out[..., di + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])                            # (H,) negative
+    xh = xin.reshape(B, S, H, P)
+    y, final = ssd_scan(xh.astype(jnp.float32), dt, A,
+                        Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                        None if state is None else state["ssm"])
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(dt_x)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_x)
+    if return_state:
+        new_state = {"ssm": final,
+                     "conv": conv_in[:, -(cfg.ssm_conv_width - 1):, :]}
+        return out, new_state
+    return out
+
+
+def ssd_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                           cfg.ssm_d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def ssd_decode_step(p: Params, x: Array, cfg: ModelConfig,
+                    state: Params) -> Tuple[Array, Params]:
+    """One-token recurrent update.  x: (B, 1, d)."""
+    B, S, d = x.shape
+    assert S == 1
+    di = cfg.ssm_d_inner
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    dt_x = x.dtype
+    z = x @ p["w_z"].astype(dt_x)
+    xin = x @ p["w_x"].astype(dt_x)
+    bc = x @ p["w_bc"].astype(dt_x)
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    dt_raw = x @ p["w_dt"].astype(dt_x)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)    # (B,1,conv_dim)
+    window = jnp.concatenate(
+        [state["conv"].astype(dt_x), conv_in], axis=1)   # (B,W,conv_dim)
+    w = p["conv_w"].astype(dt_x)
+    conv_out = jax.nn.silu(
+        (window * w[None]).sum(axis=1, keepdims=True)
+        + p["conv_b"].astype(dt_x))
+    xin = conv_out[..., :di]
+    Bm = conv_out[..., di:di + N].astype(jnp.float32)
+    Cm = conv_out[..., di + N:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])[:, 0]     # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])                               # (B,H)
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm[:, 0], xh)
+    st = state["ssm"].astype(jnp.float32) * decay[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", st, Cm[:, 0])
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(dt_x)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_x)
+    new_state = {"ssm": st.astype(state["ssm"].dtype),
+                 "conv": window[:, 1:].astype(state["conv"].dtype)}
+    return out, new_state

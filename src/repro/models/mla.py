@@ -1,0 +1,148 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with compressed KV cache.
+
+Faithful structure: queries via low-rank (q_lora) path; K/V via a shared
+``kv_lora_rank`` latent that IS the cache (plus a decoupled RoPE key slice).
+Decode uses the absorbed formulation (q projected into latent space), so
+per-token decode touches only (B, S, kv_lora + rope_dim) — the reason MLA
+exists.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (NEG_INF, apply_rope, dense_init,
+                                 flash_attention, rms_norm)
+
+Array = jnp.ndarray
+Params = Dict[str, Any]
+
+
+def mla_params(key, cfg: ModelConfig) -> Params:
+    H = cfg.num_heads
+    dq = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], (cfg.d_model, cfg.q_lora_rank)),
+        "q_norm": jnp.ones((cfg.q_lora_rank,), jnp.float32),
+        "wq_b": dense_init(ks[1], (cfg.q_lora_rank, H * dq)),
+        "wkv_a": dense_init(ks[2], (cfg.d_model,
+                                    cfg.kv_lora_rank + cfg.qk_rope_head_dim)),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), jnp.float32),
+        "wk_b": dense_init(ks[3], (cfg.kv_lora_rank, H * cfg.qk_nope_head_dim)),
+        "wv_b": dense_init(ks[4], (cfg.kv_lora_rank, H * cfg.v_head_dim)),
+        "wo": dense_init(ks[5], (H * cfg.v_head_dim, cfg.d_model)),
+    }
+
+
+def _project_q(p: Params, x: Array, cfg: ModelConfig, positions: Array):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dt = x.dtype
+    q_lat = rms_norm(x @ p["wq_a"].astype(dt), p["q_norm"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"].astype(dt)).reshape(
+        B, S, H, cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_latent(p: Params, x: Array, cfg: ModelConfig, positions: Array):
+    B, S, _ = x.shape
+    dt = x.dtype
+    kv = x @ p["wkv_a"].astype(dt)
+    c_kv = rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., cfg.kv_lora_rank:][:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0]  # (B,S,rope_dim)
+    return c_kv, k_rope
+
+
+def mla_apply(p: Params, x: Array, cfg: ModelConfig, *,
+              positions: Array) -> Array:
+    """Training / prefill path: up-project latent to per-head K/V and run
+    blockwise attention (memory-feasible: latent is recomputed per block by
+    XLA remat rather than cached)."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dt = x.dtype
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    c_kv, k_rope = _project_latent(p, x, cfg, positions)
+    k_nope = (c_kv @ p["wk_b"].astype(dt)).reshape(B, S, H, cfg.qk_nope_head_dim)
+    v = (c_kv @ p["wv_b"].astype(dt)).reshape(B, S, H, cfg.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (B, S, H, cfg.qk_rope_head_dim))],
+                        axis=-1)
+    # pad v to qk head dim for the shared flash kernel, then slice back
+    dq = q.shape[-1]
+    if cfg.v_head_dim < dq:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dq - cfg.v_head_dim)))
+    o = flash_attention(q, k, v, causal=True, block_q=cfg.attn_block_q,
+                        block_kv=cfg.attn_block_kv)
+    o = o[..., :cfg.v_head_dim].reshape(B, S, H * cfg.v_head_dim)
+    return o @ p["wo"].astype(dt)
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Params:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_prefill(p: Params, x: Array, cfg: ModelConfig, *, positions: Array,
+                cache: Params) -> Tuple[Array, Params]:
+    B, S, _ = x.shape
+    c_kv, k_rope = _project_latent(p, x, cfg, positions)
+    cache = dict(cache)
+    cache["c_kv"] = lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1)
+    cache["k_rope"] = lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0, axis=1)
+    return mla_apply(p, x, cfg, positions=positions), cache
+
+
+def mla_decode(p: Params, x: Array, cfg: ModelConfig, *, pos: Array,
+               cache: Params) -> Tuple[Array, Params]:
+    """Absorbed decode: score = q_nope·Wk_b·c_kv + q_rope·k_rope over the
+    latent cache; output = (softmax @ c_kv) absorbed through Wv_b."""
+    B, S, _ = x.shape
+    assert S == 1
+    H = cfg.num_heads
+    dt = x.dtype
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _project_q(p, x, cfg, posv)          # (B,1,H,*)
+    c_new, kr_new = _project_latent(p, x, cfg, posv)
+    cache = dict(cache)
+    cache["c_kv"] = lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    cache["k_rope"] = lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    c_kv = cache["c_kv"].astype(jnp.float32)              # (B,Smax,r)
+    k_rope = cache["k_rope"].astype(jnp.float32)          # (B,Smax,dr)
+    Smax = c_kv.shape[1]
+
+    wk_b = p["wk_b"].astype(jnp.float32).reshape(
+        cfg.kv_lora_rank, H, cfg.qk_nope_head_dim)
+    # absorb: q_eff (B,H,r) = q_nope . wk_b^T
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32), wk_b)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    s = (jnp.einsum("bhr,bsr->bhs", q_eff, c_kv)
+         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32), k_rope))
+    s = s * scale
+    valid = jnp.arange(Smax, dtype=jnp.int32) <= pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    lat = jnp.einsum("bhs,bsr->bhr", pr, c_kv)            # (B,H,r)
+    wv_b = p["wv_b"].astype(jnp.float32).reshape(
+        cfg.kv_lora_rank, H, cfg.v_head_dim)
+    o = jnp.einsum("bhr,rhd->bhd", lat, wv_b).reshape(B, 1, H * cfg.v_head_dim)
+    return o.astype(dt) @ p["wo"].astype(dt), cache

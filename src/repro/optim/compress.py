@@ -1,0 +1,75 @@
+"""Gradient compression with float-float error feedback.
+
+Distributed-optimization trick for 1000+-node DP: gradients are quantized
+to int8 (per-tensor scale) before the cross-pod reduce, cutting inter-pod
+collective bytes 4x.  The quantization residual is carried in an FF error-
+feedback buffer and re-injected next step — the compensated-accumulation
+idea of the paper applied to communication: over T steps the *integrated*
+gradient error stays ~2^-44-bounded instead of growing like T * q_err.
+
+Usage (pure functions, pytree-wise):
+    state = init_feedback(grads_like)
+    q, scales, state = compress(grads, state)      # before the collective
+    grads_hat = decompress(q, scales)              # after the collective
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ff import FF
+from repro.core import transforms as T
+
+Array = jnp.ndarray
+
+
+class FeedbackState(NamedTuple):
+    err_hi: Any
+    err_lo: Any
+
+
+def init_feedback(grads_like) -> FeedbackState:
+    z = jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    z2 = jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    return FeedbackState(err_hi=z, err_lo=z2)
+
+
+def _q_leaf(g: Array, eh: Array, el: Array) -> Tuple[Array, Array, Array, Array]:
+    g = g.astype(jnp.float32)
+    # inject carried error exactly: v = g + (eh + el) via TwoSum chain
+    s, r = T.two_sum(g, eh)
+    v = s
+    v_lo = r + el
+    scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    # residual = (v + v_lo) - deq, kept in FF so it never dissolves
+    d, dr = T.two_diff(v, deq)
+    new_hi, new_lo = T.fast_two_sum(d, dr + v_lo)
+    return q, scale, new_hi, new_lo
+
+
+def compress(grads, state: FeedbackState):
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_eh = treedef.flatten_up_to(state.err_hi)
+    flat_el = treedef.flatten_up_to(state.err_lo)
+    qs, scales, nhs, nls = [], [], [], []
+    for g, eh, el in zip(flat_g, flat_eh, flat_el):
+        q, s, nh, nl = _q_leaf(g, eh, el)
+        qs.append(q)
+        scales.append(s)
+        nhs.append(nh)
+        nls.append(nl)
+    return (treedef.unflatten(qs), treedef.unflatten(scales),
+            FeedbackState(err_hi=treedef.unflatten(nhs),
+                          err_lo=treedef.unflatten(nls)))
+
+
+def decompress(q, scales):
+    return jax.tree_util.tree_map(
+        lambda qi, s: qi.astype(jnp.float32) * s, q, scales)

@@ -1,0 +1,48 @@
+"""Serving steps: batched prefill + single-token decode, plus a simple
+continuous-batching loop used by the serving example."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy, BASELINE
+from repro.models import prefill, decode_step, init_cache
+from repro.models.config import ModelConfig
+
+Array = jnp.ndarray
+
+
+def make_prefill_step(cfg: ModelConfig, policy: PrecisionPolicy = BASELINE):
+    def step(params, batch: Dict[str, Array], cache):
+        return prefill(params, batch, cfg, cache, policy)
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, policy: PrecisionPolicy = BASELINE):
+    def step(params, token: Array, pos: Array, cache):
+        return decode_step(params, token, pos, cache, cfg, policy)
+    return step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: Array, max_new: int,
+                    cache_len: int, policy: PrecisionPolicy = BASELINE,
+                    extra_inputs: Dict[str, Array] | None = None
+                    ) -> Array:
+    """Greedy decoding loop (jit per step).  prompt: (B, S) int32."""
+    B, S = prompt.shape
+    cache = init_cache(cfg, B, cache_len)
+    batch = {"tokens": prompt}
+    if extra_inputs:
+        batch.update(extra_inputs)
+    pf = jax.jit(make_prefill_step(cfg, policy))
+    dc = jax.jit(make_decode_step(cfg, policy))
+    logits, cache = pf(params, batch, cache)
+    toks = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    pos0 = S + (cfg.num_patches if cfg.family == "vlm" else 0)
+    for t in range(max_new - 1):
+        logits, cache = dc(params, toks[-1][:, None], jnp.int32(pos0 + t), cache)
+        toks.append(jnp.argmax(logits, -1).astype(jnp.int32))
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,85 @@
+"""Jittable train/serve step builders shared by trainer, dry-run, benches.
+
+``make_train_step(cfg, policy, optimizer)`` returns
+    step(params, opt_state, batch) -> (params, opt_state, metrics)
+with optional microbatch gradient accumulation (scan over microbatches —
+the standard memory/throughput knob at scale).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.policy import PrecisionPolicy, BASELINE
+from repro.models import train_forward
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamW, AdamWState, clip_by_global_norm
+
+Array = jnp.ndarray
+
+
+def make_loss_fn(cfg: ModelConfig, policy: PrecisionPolicy):
+    def loss_fn(params, batch):
+        loss, metrics = train_forward(params, batch, cfg, policy)
+        return loss, metrics
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, policy: PrecisionPolicy,
+                    optimizer: AdamW, *, microbatches: int = 1,
+                    clip_norm: Optional[float] = 1.0) -> Callable:
+    loss_fn = make_loss_fn(cfg, policy)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state: AdamWState, batch: Dict[str, Array]):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # split batch leading dim into microbatches and scan-accumulate
+            def reshape(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree_util.tree_map(reshape, batch)
+
+            def acc_body(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mbatch)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = lax.scan(acc_body, (g0, jnp.float32(0)), mb)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {"loss": loss, "aux": jnp.float32(0)}
+
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(
+                grads, clip_norm, ff=policy.ff_reductions)
+        else:
+            gnorm = jnp.float32(0)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = optimizer._lr(new_state.count)
+        return new_params, new_state, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig, policy: PrecisionPolicy = BASELINE):
+    loss_fn = make_loss_fn(cfg, policy)
+
+    def step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return metrics
+    return step

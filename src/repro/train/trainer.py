@@ -1,0 +1,130 @@
+"""Production training loop: checkpoint/restart, straggler detection,
+elastic resume, compensated metric accumulation.
+
+Fault-tolerance model (single-controller JAX):
+  * atomic+async checkpoints every ``ckpt_every`` steps;
+  * on (re)start, auto-resume from the latest checkpoint — the data
+    pipeline is index-deterministic so no sample is lost or repeated;
+  * an injectable ``fault_hook(step)`` lets tests kill the loop at an
+    arbitrary step and assert bit-identical resume;
+  * elastic: checkpoints store full (host) arrays, so a restart may map
+    them onto a different mesh (device count) — ``Trainer.restore``
+    re-device_puts with the current shardings.
+
+Straggler mitigation: per-step wall-times in a ring buffer; a step slower
+than ``median * straggler_factor`` is logged and counted.  On a real
+multi-host deployment this signal feeds the scheduler (re-slice / hot
+standby); here it is surfaced as a metric + callback so the policy is
+testable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.core.compensated import kahan_update
+from repro.core.ff import FF
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    straggler_window: int = 32
+    straggler_factor: float = 3.0
+
+
+class Trainer:
+    def __init__(self, tcfg: TrainerConfig, step_fn: Callable, params, opt_state,
+                 data_iter, *, fault_hook: Optional[Callable[[int], None]] = None,
+                 log_fn: Callable[[str], None] = print):
+        self.tcfg = tcfg
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.data_iter = data_iter
+        self.fault_hook = fault_hook
+        self.log = log_fn
+        self.step = 0
+        self.times = deque(maxlen=tcfg.straggler_window)
+        self.straggler_events = 0
+        # running loss with FF compensation (the paper's technique applied
+        # to the humble metrics accumulator — exact over 10^6 steps)
+        self.loss_acc = FF.from_f32(jax.numpy.float32(0))
+        self.loss_count = 0
+        self.ckpt = (ckpt_lib.AsyncCheckpointer(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+
+    # ------------------------------------------------------------------
+    def restore(self, shardings=None) -> bool:
+        """Resume from the latest checkpoint if present."""
+        if not self.tcfg.ckpt_dir:
+            return False
+        latest = ckpt_lib.latest_step(self.tcfg.ckpt_dir)
+        if latest is None:
+            return False
+        tree = {"params": self.params, "opt": self.opt_state}
+        restored, step, extra = ckpt_lib.load(self.tcfg.ckpt_dir, tree, latest)
+        if shardings is not None:
+            restored = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), restored, shardings)
+        else:
+            restored = jax.tree_util.tree_map(jax.numpy.asarray, restored)
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.step = step
+        self.log(f"[trainer] resumed from step {step}")
+        return True
+
+    # ------------------------------------------------------------------
+    def _maybe_checkpoint(self, force: bool = False):
+        if self.ckpt and (force or self.step % self.tcfg.ckpt_every == 0):
+            self.ckpt.save(self.step,
+                           {"params": self.params, "opt": self.opt_state},
+                           extra={"step": self.step})
+
+    def _record_time(self, dt: float):
+        self.times.append(dt)
+        if len(self.times) >= 8:
+            med = float(np.median(self.times))
+            if dt > med * self.tcfg.straggler_factor:
+                self.straggler_events += 1
+                self.log(f"[trainer] straggler step {self.step}: "
+                         f"{dt*1e3:.1f}ms vs median {med*1e3:.1f}ms")
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        while self.step < self.tcfg.total_steps:
+            if self.fault_hook:
+                self.fault_hook(self.step)   # may raise (simulated failure)
+            batch = self.data_iter(self.step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            loss = jax.device_get(metrics["loss"])
+            self._record_time(time.perf_counter() - t0)
+            self.loss_acc = kahan_update(self.loss_acc,
+                                         jax.numpy.float32(loss))
+            self.loss_count += 1
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0:
+                self.log(f"[trainer] step {self.step} "
+                         f"loss {float(loss):.4f} "
+                         f"gnorm {float(jax.device_get(metrics.get('grad_norm', 0))):.3f}")
+            self._maybe_checkpoint()
+        self._maybe_checkpoint(force=True)
+        if self.ckpt:
+            self.ckpt.wait()
+        mean_loss = float(self.loss_acc.to_f64() / max(self.loss_count, 1))
+        return {"step": self.step, "mean_loss": mean_loss,
+                "straggler_events": self.straggler_events,
+                "last_loss": float(loss)}

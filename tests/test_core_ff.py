@@ -1,0 +1,412 @@
+"""Unit + property tests for the FF core (paper §4 theorems).
+
+Oracle: float64.  Every EFT result (pairs with <=48 significand bits) is
+exactly representable in f64, so `hi + lo == exact` can be asserted
+BIT-EXACTLY — strictly stronger than the paper's sampled Table 5.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FF, add12, mul12, add22, add22_accurate, add212, mul22, mul212, div22,
+    sqrt22, fma22, normalize, two_sum, fast_two_sum, split, split_safe,
+    two_prod, two_prod_safe, two_diff, ff_sum, ff_sum_blocked, ff_dot,
+    kahan_sum, ff_mean, ff_logsumexp,
+    matmul_compensated, matmul_split, matmul_dot2,
+)
+
+from conftest import f32_vec
+
+
+def _f64(x):
+    return np.asarray(x).astype(np.float64)
+
+
+def ff64(x: FF):
+    return _f64(x.hi) + _f64(x.lo)
+
+
+# ---------------------------------------------------------------------------
+# EFT exactness (Theorems 2, 3, 4)
+# ---------------------------------------------------------------------------
+
+def test_two_sum_exact(rng):
+    a, b = f32_vec(rng, 50000), f32_vec(rng, 50000)
+    s, r = two_sum(jnp.asarray(a), jnp.asarray(b))
+    assert np.array_equal(_f64(s) + _f64(r), _f64(a) + _f64(b))
+
+
+def test_two_diff_exact(rng):
+    a, b = f32_vec(rng, 50000), f32_vec(rng, 50000)
+    s, r = two_diff(jnp.asarray(a), jnp.asarray(b))
+    assert np.array_equal(_f64(s) + _f64(r), _f64(a) - _f64(b))
+
+
+def test_fast_two_sum_exact_when_ordered(rng):
+    a, b = f32_vec(rng, 50000), f32_vec(rng, 50000)
+    hi = np.where(np.abs(a) >= np.abs(b), a, b)
+    lo = np.where(np.abs(a) >= np.abs(b), b, a)
+    s, r = fast_two_sum(jnp.asarray(hi), jnp.asarray(lo))
+    assert np.array_equal(_f64(s) + _f64(r), _f64(a) + _f64(b))
+
+
+def test_split_theorem(rng):
+    """Theorem 3: hi+lo == a, halves fit in 12 bits (products exact)."""
+    a = f32_vec(rng, 50000)
+    hi, lo = split(jnp.asarray(a))
+    hi, lo = np.asarray(hi), np.asarray(lo)
+    assert np.array_equal(_f64(hi) + _f64(lo), _f64(a))
+    # halves are 12-bit: squaring them is exact in f32
+    assert np.array_equal(_f64(np.float32(hi * hi)), _f64(hi) * _f64(hi))
+    assert np.array_equal(_f64(np.float32(lo * lo)), _f64(lo) * _f64(lo))
+
+
+def test_split_safe_large_magnitude():
+    a = np.array([3e38, -3e38, 2.0**120, -(2.0**126), 1.5, 0.0], np.float32)
+    hi, lo = split_safe(jnp.asarray(a))
+    assert np.all(np.isfinite(np.asarray(hi)))
+    assert np.array_equal(_f64(hi) + _f64(lo), _f64(a))
+    # plain split overflows here
+    hi2, _ = split(jnp.asarray(a))
+    assert not np.all(np.isfinite(np.asarray(hi2)))
+
+
+def test_two_prod_exact(rng):
+    a, b = f32_vec(rng, 50000), f32_vec(rng, 50000)
+    x, y = two_prod(jnp.asarray(a), jnp.asarray(b))
+    assert np.array_equal(_f64(x) + _f64(y), _f64(a) * _f64(b))
+
+
+def test_two_prod_safe_exact_large():
+    # magnitudes chosen inside the documented domain [2^-100, 2^115] x safe
+    # rescale range: plain split overflows on |a| >= ~2^115, safe split works.
+    a = np.array([3e30, 1e36, -2e32], np.float32)
+    b = np.array([1e-30, 2e-34, 3e-30], np.float32)
+    x, y = two_prod_safe(jnp.asarray(a), jnp.asarray(b))
+    assert np.array_equal(_f64(x) + _f64(y), _f64(a) * _f64(b))
+
+
+def test_add12_mul12_ff(rng):
+    a, b = f32_vec(rng, 10000), f32_vec(rng, 10000)
+    assert np.array_equal(ff64(add12(jnp.asarray(a), jnp.asarray(b))), _f64(a) + _f64(b))
+    assert np.array_equal(ff64(mul12(jnp.asarray(a), jnp.asarray(b))), _f64(a) * _f64(b))
+
+
+# ---------------------------------------------------------------------------
+# Compound operators (Theorems 5, 6) — error-bound tests
+# ---------------------------------------------------------------------------
+
+def _rand_ff(rng, n, lo=-5, hi=5):
+    v = rng.standard_normal(n) * 10.0 ** rng.uniform(lo, hi, n)
+    return FF.from_f64(v)
+
+
+def test_add22_paper_bound(rng):
+    fa, fb = _rand_ff(rng, 20000), _rand_ff(rng, 20000)
+    exact = fa.to_f64() + fb.to_f64()
+    err = np.abs(ff64(add22(fa, fb)) - exact)
+    bound = np.maximum(
+        2.0**-24 * np.abs(_f64(fa.lo) + _f64(fb.lo)),
+        2.0**-44 * np.abs(exact),
+    )
+    assert np.all(err <= bound * (1 + 1e-6))
+
+
+def test_add22_accurate_relative_bound(rng):
+    fa, fb = _rand_ff(rng, 20000), _rand_ff(rng, 20000)
+    exact = fa.to_f64() + fb.to_f64()
+    rel = np.abs(ff64(add22_accurate(fa, fb)) - exact) / np.maximum(np.abs(exact), 1e-300)
+    assert rel.max() < 3 * 2.0**-44
+
+
+def test_mul22_theorem6_bound(rng):
+    fa, fb = _rand_ff(rng, 20000), _rand_ff(rng, 20000)
+    exact = fa.to_f64() * fb.to_f64()
+    rel = np.abs(ff64(mul22(fa, fb)) - exact) / np.abs(exact)
+    assert rel.max() <= 2.0**-44 * (1 + 1e-3)
+
+
+def test_div22_bound(rng):
+    fa, fb = _rand_ff(rng, 20000), _rand_ff(rng, 20000)
+    exact = fa.to_f64() / fb.to_f64()
+    rel = np.abs(ff64(div22(fa, fb)) - exact) / np.abs(exact)
+    assert rel.max() < 2.0**-42
+
+
+def test_sqrt22_bound(rng):
+    v = np.abs(rng.standard_normal(20000)) * 10.0 ** rng.uniform(-5, 5, 20000)
+    fa = FF.from_f64(v)
+    exact = np.sqrt(fa.to_f64())
+    rel = np.abs(ff64(sqrt22(fa)) - exact) / exact
+    assert rel.max() < 2.0**-42
+
+
+def test_fma22_bound(rng):
+    fa, fb, fc = _rand_ff(rng, 20000), _rand_ff(rng, 20000), _rand_ff(rng, 20000)
+    exact = fa.to_f64() * fb.to_f64() + fc.to_f64()
+    err = np.abs(ff64(fma22(fa, fb, fc)) - exact)
+    mag = np.abs(fa.to_f64() * fb.to_f64()) + np.abs(fc.to_f64())
+    assert (err / mag).max() < 2.0**-40
+
+
+def test_add212_mul212(rng):
+    fa = _rand_ff(rng, 10000)
+    b = f32_vec(rng, 10000, -5, 5)
+    exact = fa.to_f64() + _f64(b)
+    err = np.abs(ff64(add212(fa, jnp.asarray(b))) - exact)
+    mag = np.abs(fa.to_f64()) + np.abs(_f64(b))
+    assert (err / mag).max() < 2.0**-43
+    exact = fa.to_f64() * _f64(b)
+    rel = np.abs(ff64(mul212(fa, jnp.asarray(b))) - exact) / np.abs(exact)
+    assert rel.max() < 2.0**-43
+
+
+def test_normalize_and_operator_sugar(rng):
+    fa, fb = _rand_ff(rng, 100), _rand_ff(rng, 100)
+    r = normalize(fa + fb * fa - fb)
+    assert np.all(np.abs(np.asarray(r.lo)) <= np.spacing(np.abs(np.asarray(r.hi))))
+    exact = (fa.to_f64() + fb.to_f64() * fa.to_f64()) - fb.to_f64()
+    got = ff64(r)
+    mag = np.abs(fa.to_f64()) + np.abs(fb.to_f64() * fa.to_f64()) + np.abs(fb.to_f64())
+    assert (np.abs(got - exact) / mag).max() < 2.0**-40
+
+
+# ---------------------------------------------------------------------------
+# Property-based tests (hypothesis): invariants on adversarial scalars
+# ---------------------------------------------------------------------------
+
+finite_f32 = st.floats(
+    allow_nan=False, allow_infinity=False, width=32,
+).filter(lambda x: x == 0.0 or 1e-30 < abs(x) < 1e30)
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite_f32, finite_f32)
+def test_prop_two_sum_exact(a, b):
+    s, r = two_sum(jnp.float32(a), jnp.float32(b))
+    assert float(s) + float(r) == float(np.float64(np.float32(a)) + np.float64(np.float32(b)))
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite_f32, finite_f32)
+def test_prop_two_prod_exact(a, b):
+    p = np.float64(np.float32(a)) * np.float64(np.float32(b))
+    if p != 0 and (abs(p) > 3e38 or abs(p) < 1e-25):
+        return  # overflow/underflow (incl. subnormal split residues, FTZ)
+        # excluded, like the paper §6.1
+    x, y = two_prod(jnp.float32(a), jnp.float32(b))
+    assert float(x) + float(y) == p
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite_f32)
+def test_prop_split_nonoverlap(a):
+    hi, lo = split(jnp.float32(a))
+    hi, lo = float(hi), float(lo)
+    assert hi + lo == float(np.float32(a))
+    assert abs(lo) <= abs(hi) or hi == 0.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(finite_f32, finite_f32, finite_f32, finite_f32)
+def test_prop_add22_associativity_error(a, b, c, d):
+    """FF addition is not associative, but both orders stay within 2^-40 of
+    exact — the invariant applications rely on."""
+    fa, fb = add12(jnp.float32(a), jnp.float32(b)), add12(jnp.float32(c), jnp.float32(d))
+    exact = (np.float64(np.float32(a)) + np.float64(np.float32(b))
+             + np.float64(np.float32(c)) + np.float64(np.float32(d)))
+    mag = (abs(np.float64(np.float32(a))) + abs(np.float64(np.float32(b)))
+           + abs(np.float64(np.float32(c))) + abs(np.float64(np.float32(d))))
+    if mag == 0:
+        return
+    r1 = ff64(add22_accurate(fa, fb))
+    assert abs(r1 - exact) / mag < 2.0**-40
+
+
+# ---------------------------------------------------------------------------
+# Compensated reductions
+# ---------------------------------------------------------------------------
+
+def test_ff_sum_vs_oracle(rng):
+    x = f32_vec(rng, 1 << 14, -6, 6)
+    exact = np.sum(_f64(x))
+    got = ff64(ff_sum(jnp.asarray(x)))
+    naive = np.float64(np.float32(np.sum(x)))
+    s_abs = np.sum(np.abs(_f64(x)))
+    assert abs(got - exact) <= 2.0**-40 * s_abs
+    assert abs(got - exact) <= abs(naive - exact) + 2.0**-40 * s_abs
+
+
+def test_ff_sum_blocked_matches(rng):
+    x = f32_vec(rng, 10000, -6, 6)
+    a = ff64(ff_sum(jnp.asarray(x)))
+    b = ff64(ff_sum_blocked(jnp.asarray(x), block=128))
+    exact = np.sum(_f64(x))
+    s_abs = np.sum(np.abs(_f64(x)))
+    assert abs(a - exact) <= 2.0**-40 * s_abs
+    assert abs(b - exact) <= 2.0**-40 * s_abs
+
+
+def test_ff_sum_axis(rng):
+    x = f32_vec(rng, 4 * 33 * 7).reshape(4, 33, 7)
+    r = ff_sum(jnp.asarray(x), axis=1)
+    assert r.shape == (4, 7)
+    exact = np.sum(_f64(x), axis=1)
+    s_abs = np.sum(np.abs(_f64(x)), axis=1)
+    assert np.all(np.abs(ff64(r) - exact) <= 2.0**-40 * s_abs)
+
+
+def test_ff_dot_dot2_bound(rng):
+    n = 4096
+    a, b = f32_vec(rng, n, -3, 3), f32_vec(rng, n, -3, 3)
+    exact = np.dot(_f64(a), _f64(b))
+    s = np.dot(np.abs(_f64(a)), np.abs(_f64(b)))
+    got = ff64(ff_dot(jnp.asarray(a), jnp.asarray(b)))
+    u = 2.0**-24
+    assert abs(got - exact) <= u * abs(exact) + 2 * n * n * u * u * s
+
+
+def test_kahan_sum_beats_naive(rng):
+    # adversarial: large value plus many tiny ones
+    x = np.concatenate([[1e8], np.full(100000, 0.11, np.float32), [-1e8]]).astype(np.float32)
+    exact = np.sum(_f64(x))
+    k = float(kahan_sum(jnp.asarray(x)))
+    naive = float(np.float32(np.sum(x, dtype=np.float32)))
+    assert abs(k - exact) < abs(naive - exact)
+    assert abs(k - exact) / abs(exact) < 1e-6
+
+
+def test_ff_logsumexp(rng):
+    x = f32_vec(rng, 8 * 512, -1, 2).reshape(8, 512)
+    m, s = ff_logsumexp(jnp.asarray(x), axis=-1)
+    exact = np.log(np.sum(np.exp(_f64(x) - _f64(m)[:, None]), axis=-1)) + _f64(m)
+    got = np.log(ff64(s)) + _f64(m)
+    assert np.abs(got - exact).max() < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# FF matmuls
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mk", [(8, 64, 16), (32, 1024, 8), (17, 333, 5)])
+def test_matmul_paths_bounds(rng, mk):
+    M, K, N = mk
+    A = (rng.standard_normal((M, K))).astype(np.float32)
+    B = (rng.standard_normal((K, N))).astype(np.float32)
+    E = _f64(A) @ _f64(B)
+    S = np.abs(_f64(A)) @ np.abs(_f64(B))
+    u = 2.0**-24
+    # comp/split bound: within-block accumulation may be sequential on the
+    # backend -> worst case ~K.u.S; dot2 is Dot2-quality.
+    for fn, bound in [
+        (matmul_dot2, u * np.abs(E) + 2 * K * K * u * u * S),
+        (matmul_compensated, 2 * K * u * S),
+        (matmul_split, 2 * K * u * S),
+    ]:
+        R = fn(jnp.asarray(A), jnp.asarray(B))
+        assert np.all(np.abs(ff64(R) - E) <= bound + 1e-30), fn.__name__
+
+
+def test_matmul_better_than_naive(rng):
+    M, K, N = 16, 8192, 16
+    A = rng.standard_normal((M, K)).astype(np.float32)
+    B = rng.standard_normal((K, N)).astype(np.float32)
+    E = _f64(A) @ _f64(B)
+    S = np.abs(_f64(A)) @ np.abs(_f64(B))
+    naive = _f64(np.asarray(jnp.asarray(A) @ jnp.asarray(B)))
+    e_naive = (np.abs(naive - E) / S).max()
+    e_dot2 = (np.abs(ff64(matmul_dot2(jnp.asarray(A), jnp.asarray(B))) - E) / S).max()
+    assert e_dot2 < e_naive
+
+
+# ---------------------------------------------------------------------------
+# pytree / jit / vmap / scan integration
+# ---------------------------------------------------------------------------
+
+def test_ff_pytree_jit(rng):
+    """jit vs eager: XLA:CPU contracts a*b+c into FMA under jit, which is
+    Dekker-compatible (it computes the residual terms MORE exactly), so the
+    hi limb is bit-identical while lo may differ below 2^-44.  Paper §5's
+    'forbidden optimizations' (reassociation like (a+b)-a -> b) are NOT
+    performed by XLA — asserted by test_jit_preserves_eft below."""
+    fa, fb = _rand_ff(rng, 256), _rand_ff(rng, 256)
+    f = jax.jit(lambda x, y: mul22(x, y))
+    r_eager, r_jit = mul22(fa, fb), f(fa, fb)
+    assert np.array_equal(np.asarray(r_eager.hi), np.asarray(r_jit.hi))
+    exact = fa.to_f64() * fb.to_f64()
+    for r in (r_eager, r_jit):
+        rel = np.abs(ff64(r) - exact) / np.abs(exact)
+        assert rel.max() <= 2.0**-44 * (1 + 1e-3)
+
+
+def test_jit_preserves_eft(rng):
+    """The EFT exactness guarantees must survive jit compilation (the paper
+    had to hand-patch DirectX shaders for this; XLA is safe)."""
+    a, b = f32_vec(rng, 20000, -5, 5), f32_vec(rng, 20000, -5, 5)
+    s, r = jax.jit(two_sum)(jnp.asarray(a), jnp.asarray(b))
+    assert np.array_equal(_f64(s) + _f64(r), _f64(a) + _f64(b))
+    x, y = jax.jit(two_prod)(jnp.asarray(a), jnp.asarray(b))
+    assert np.array_equal(_f64(x) + _f64(y), _f64(a) * _f64(b))
+
+
+def test_ff_vmap(rng):
+    fa = _rand_ff(rng, 4 * 7).reshape(4, 7)
+    fb = _rand_ff(rng, 4 * 7).reshape(4, 7)
+    r1 = add22(fa, fb)
+    r2 = jax.vmap(add22)(fa, fb)
+    assert np.allclose(np.asarray(r1.hi), np.asarray(r2.hi))
+
+
+def test_ff_scan_carry(rng):
+    fa = _rand_ff(rng, 64)
+    xs = jnp.asarray(f32_vec(rng, 64, -2, 2))
+
+    def body(c, x):
+        return add212(c, x), None
+
+    c0 = FF.zeros(())
+    import jax.lax as lax
+    c, _ = lax.scan(body, c0, xs)
+    exact = np.sum(_f64(np.asarray(xs)))
+    assert abs(ff64(c) - exact) < 1e-6 * max(1.0, abs(exact))
+
+
+# ---------------------------------------------------------------------------
+# Toolchain EFT-safety (paper §5 'forbidden optimizations', automated)
+# ---------------------------------------------------------------------------
+
+def test_toolchain_eft_safe():
+    from repro.core.selfcheck import check_eft_safe
+    assert check_eft_safe(), (
+        "backend contracts mul+add into FMA across EFT boundaries; "
+        "conftest should have set --xla_cpu_max_isa=SSE4_2")
+
+
+def test_jit_matches_eager_dot_cascade(rng):
+    """Regression for the FMA-contraction bug: jitted Dot3 cascade must match
+    the op-by-op result bit-for-bit."""
+    from repro.core import matmul_dot2
+    A = rng.standard_normal((8, 64)).astype(np.float32)
+    B = rng.standard_normal((64, 16)).astype(np.float32)
+    E = _f64(A) @ _f64(B)
+    S = np.abs(_f64(A)) @ np.abs(_f64(B))
+    R = matmul_dot2(jnp.asarray(A), jnp.asarray(B))
+    u = 2.0**-24
+    assert np.all(np.abs(ff64(R) - E) <= u * np.abs(E) + 2 * 64 * 64 * u * u * S)
+
+
+def test_matmul_ozaki_beyond_ff_precision(rng):
+    """Beyond-paper Ozaki matmul: exact slice products + exact in-matmul
+    accumulation -> better than the 2^-44 FF target, on MXU ops only."""
+    from repro.core import matmul_ozaki
+    for K in (300, 2048):
+        A = rng.standard_normal((32, K)).astype(np.float32)
+        B = rng.standard_normal((K, 16)).astype(np.float32)
+        E = _f64(A) @ _f64(B)
+        S = np.abs(_f64(A)) @ np.abs(_f64(B))
+        R = matmul_ozaki(jnp.asarray(A), jnp.asarray(B))
+        assert np.all(np.abs(ff64(R) - E) <= 2.0**-44 * S + 1e-30), K

@@ -1,0 +1,132 @@
+"""Per-kernel validation: interpret=True execution vs ref.py oracles vs the
+exact f64 oracle, swept over shapes (ragged, aligned, tiny, large)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.ff import FF
+from repro.kernels import ops, ref
+from conftest import f32_vec
+
+
+def _f64(x):
+    return np.asarray(x).astype(np.float64)
+
+
+def ff64(x: FF):
+    return _f64(x.hi) + _f64(x.lo)
+
+
+SHAPES = [(1,), (7,), (128,), (8, 128), (3, 130), (256, 512), (2, 3, 65), (513, 257)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("op", ["add22", "mul22"])
+def test_elementwise_kernel_vs_ref(rng, shape, op):
+    n = int(np.prod(shape))
+    ah = f32_vec(rng, n, -3, 3).reshape(shape)
+    al = (ah * 1e-8 * rng.standard_normal(n).reshape(shape)).astype(np.float32)
+    bh = f32_vec(rng, n, -3, 3).reshape(shape)
+    bl = (bh * 1e-8 * rng.standard_normal(n).reshape(shape)).astype(np.float32)
+    a, b = FF(jnp.asarray(ah), jnp.asarray(al)), FF(jnp.asarray(bh), jnp.asarray(bl))
+    got = ops.ff_add(a, b, interpret=True) if op == "add22" else ops.ff_mul(a, b, interpret=True)
+    ref_fn = ref.ref_add22 if op == "add22" else ref.ref_mul22
+    want_hi, want_lo = ref_fn(a.hi, a.lo, b.hi, b.lo)
+    # identical algorithm & order -> bit-exact
+    assert np.array_equal(np.asarray(got.hi), np.asarray(want_hi)), (op, shape)
+    assert np.array_equal(np.asarray(got.lo), np.asarray(want_lo)), (op, shape)
+    # and correct vs f64
+    ea = _f64(ah) + _f64(al)
+    eb = _f64(bh) + _f64(bl)
+    exact = ea + eb if op == "add22" else ea * eb
+    err = np.abs(ff64(got) - exact)
+    mag = np.abs(ea) + np.abs(eb) if op == "add22" else np.abs(exact)
+    assert (err / np.maximum(mag, 1e-300)).max() < 2.0**-40
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("op", ["two_sum", "two_prod"])
+def test_eft_kernels_exact(rng, shape, op):
+    n = int(np.prod(shape))
+    a = f32_vec(rng, n, -5, 5).reshape(shape)
+    b = f32_vec(rng, n, -5, 5).reshape(shape)
+    fn = ops.two_sum if op == "two_sum" else ops.two_prod
+    got = fn(jnp.asarray(a), jnp.asarray(b), interpret=True)
+    exact = _f64(a) + _f64(b) if op == "two_sum" else _f64(a) * _f64(b)
+    assert np.array_equal(ff64(got), exact), (op, shape)
+
+
+MM_SHAPES = [
+    (8, 16, 8), (128, 128, 128), (100, 300, 50), (256, 1024, 128),
+    (1, 2048, 1), (257, 513, 129),
+]
+
+
+@pytest.mark.parametrize("mkn", MM_SHAPES)
+def test_ff_matmul_hybrid_vs_ref(rng, mkn):
+    M, K, N = mkn
+    A = rng.standard_normal((M, K)).astype(np.float32)
+    B = rng.standard_normal((K, N)).astype(np.float32)
+    got = ops.matmul(jnp.asarray(A), jnp.asarray(B), interpret=True)
+    # oracle with identical K-block order (bk=512 default, incl. padding)
+    want_hi, want_lo = ref.ref_ff_matmul(jnp.asarray(A), jnp.asarray(B), bk=512)
+    E = _f64(A) @ _f64(B)
+    S = np.abs(_f64(A)) @ np.abs(_f64(B))
+    u = 2.0**-24
+    assert np.all(np.abs(ff64(got) - E) <= 2 * K * u * S + 1e-30)
+    # kernel vs ref: same block order -> tight agreement
+    ref64 = _f64(want_hi) + _f64(want_lo)
+    assert np.all(np.abs(ff64(got) - ref64) <= 2.0**-44 * S + 1e-30)
+
+
+@pytest.mark.parametrize("mkn", [(8, 16, 8), (32, 128, 16), (64, 256, 8), (17, 100, 5)])
+def test_ff_matmul_dot2_vs_ref(rng, mkn):
+    M, K, N = mkn
+    A = rng.standard_normal((M, K)).astype(np.float32)
+    B = rng.standard_normal((K, N)).astype(np.float32)
+    got = ops.matmul_dot2(jnp.asarray(A), jnp.asarray(B), interpret=True)
+    E = _f64(A) @ _f64(B)
+    S = np.abs(_f64(A)) @ np.abs(_f64(B))
+    u = 2.0**-24
+    assert np.all(np.abs(ff64(got) - E) <= u * np.abs(E) + 2 * K * K * u * u * S)
+    want_hi, want_lo = ref.ref_ff_matmul_dot2(jnp.asarray(A), jnp.asarray(B))
+    ref64 = _f64(want_hi) + _f64(want_lo)
+    assert np.all(np.abs(ff64(got) - ref64) <= 2.0**-44 * S + 1e-30)
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (16, 1000), (256, 512), (3, 4096), (1, 64)])
+def test_ff_rowsum_vs_ref_and_oracle(rng, shape):
+    R, C = shape
+    x = f32_vec(rng, R * C, -4, 4).reshape(R, C)
+    got = ops.rowsum(jnp.asarray(x), interpret=True)
+    exact = np.sum(_f64(x), axis=1)
+    s_abs = np.sum(np.abs(_f64(x)), axis=1)
+    assert np.all(np.abs(ff64(got) - exact) <= 2.0**-40 * s_abs)
+    want_hi, want_lo = ref.ref_ff_rowsum(jnp.asarray(x))
+    ref64 = _f64(want_hi) + _f64(want_lo)
+    assert np.all(np.abs(ff64(got) - ref64) <= 2.0**-44 * s_abs + 1e-30)
+
+
+def test_kernel_beats_naive_sum(rng):
+    """The FF rowsum must beat a plain f32 sum on an adversarial vector."""
+    x = np.concatenate([[1e8], np.full(65536, 0.11, np.float32), [-1e8]]).astype(np.float32)
+    x = x.reshape(1, -1)
+    exact = np.sum(_f64(x))
+    got = float(ff64(ops.rowsum(jnp.asarray(x), interpret=True))[0])
+    naive = float(np.float32(np.asarray(jnp.sum(jnp.asarray(x)))))
+    assert abs(got - exact) < abs(naive - exact) / 100
+
+
+def test_matmul_grad_flow(rng):
+    """Kernels are used in inference/optimizer paths (no custom VJP); the
+    wrapper must still be jittable inside larger graphs."""
+    A = jnp.asarray(rng.standard_normal((16, 32)).astype(np.float32))
+    B = jnp.asarray(rng.standard_normal((32, 8)).astype(np.float32))
+
+    @jax.jit
+    def f(a, b):
+        r = ops.matmul(a, b, interpret=True)
+        return r.hi.sum() + r.lo.sum()
+
+    assert np.isfinite(float(f(A, B)))

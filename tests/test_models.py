@@ -1,0 +1,184 @@
+"""Model-layer correctness: flash attention vs naive, SSD vs recurrence,
+decode-vs-forward consistency, MoE invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.layers import flash_attention, decode_attention, apply_rope
+from repro.models import mamba2
+from repro.models import init_params, train_forward, prefill, decode_step, init_cache
+
+
+def naive_attention(q, k, v, causal):
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    q5 = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q5, k.astype(jnp.float32))
+    s = s / np.sqrt(hd)
+    if causal:
+        mask = jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [(2, 128, 128, 8, 2, 32),
+                                   (1, 100, 260, 4, 4, 16),
+                                   (2, 64, 64, 6, 3, 64)])
+def test_flash_vs_naive(rng, shape, causal):
+    B, Sq, Skv, H, KV, hd = shape
+    if causal:
+        Skv = Sq
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, Skv, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, Skv, KV, hd)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=causal, block_q=32, block_kv=48)
+    want = naive_attention(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_naive(rng):
+    B, Smax, H, KV, hd = 2, 96, 8, 4, 32
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, Smax, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, Smax, KV, hd)).astype(np.float32))
+    n = 57
+    got = decode_attention(q, k, v, jnp.int32(n))
+    want = naive_attention(q, k[:, :n], v[:, :n], causal=False)
+    np.testing.assert_allclose(np.asarray(got)[:, 0], np.asarray(want)[:, 0],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_vs_naive_recurrence(rng):
+    """Chunked SSD must equal the O(S·N) sequential recurrence."""
+    B, S, H, P, N = 2, 300, 4, 8, 16
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, H))).astype(np.float32) * 0.1)
+    A = -jnp.asarray(np.abs(rng.standard_normal(H)).astype(np.float32))
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+
+    y_got, final_got = mamba2.ssd_scan(x, dt, A, Bm, Cm)
+
+    # naive recurrence: h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t ; y = C_t h_t
+    def step(h, t):
+        decay = jnp.exp(dt[:, t] * A[None, :])                # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, t], Bm[:, t], x[:, t])
+        h = h * decay[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, t])
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    final_want, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y_want = ys.transpose(1, 0, 2, 3)                          # (B,S,H,P)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final_got), np.asarray(final_want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_decode_continues_scan(rng):
+    """ssd_scan state then ssd one-token recurrence == scan over S+1."""
+    B, S, H, P, N = 1, 130, 2, 4, 8
+    x = jnp.asarray(rng.standard_normal((B, S + 1, H, P)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S + 1, H))).astype(np.float32) * 0.1)
+    A = -jnp.asarray(np.abs(rng.standard_normal(H)).astype(np.float32))
+    Bm = jnp.asarray(rng.standard_normal((B, S + 1, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.standard_normal((B, S + 1, N)).astype(np.float32))
+
+    y_full, _ = mamba2.ssd_scan(x, dt, A, Bm, Cm)
+    _, state = mamba2.ssd_scan(x[:, :S], dt[:, :S], A, Bm[:, :S], Cm[:, :S])
+    # one manual recurrence step
+    decay = jnp.exp(dt[:, S] * A[None, :])
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, S], Bm[:, S], x[:, S])
+    h = state * decay[..., None, None] + dBx
+    y_last = jnp.einsum("bhpn,bn->bhp", h, Cm[:, S])
+    np.testing.assert_allclose(np.asarray(y_last), np.asarray(y_full[:, S]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch_kw", [
+    dict(name="t-dense", family="dense"),
+    dict(name="t-moe", family="moe", moe_num_experts=4, moe_top_k=2,
+         moe_d_ff=64, moe_capacity_factor=4.0),
+    dict(name="t-mla", family="moe", use_mla=True, moe_num_experts=4,
+         moe_top_k=2, moe_d_ff=64, moe_capacity_factor=4.0,
+         kv_lora_rank=32, q_lora_rank=48, qk_nope_head_dim=16,
+         qk_rope_head_dim=8, v_head_dim=16),
+    dict(name="t-ssm", family="ssm", ssm_state=16, ssm_head_dim=16),
+])
+def test_prefill_decode_matches_forward(rng, arch_kw):
+    """Teacher-forced decode must reproduce the training-forward logits.
+
+    This is the strongest serving-correctness test: run S tokens through
+    prefill, then decode token S; compare against train_forward logits at
+    position S computed on the S+1-token sequence.  f32 compute to keep the
+    comparison tight.
+    """
+    base = dict(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab_size=97, head_dim=16, max_seq_len=128, attn_block_q=32,
+        attn_block_kv=32, compute_dtype="float32", remat=False,
+        moe_capacity_factor=4.0)
+    base.update(arch_kw)
+    cfg = ModelConfig(**base)
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    B, S = 2, 33
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    batch_full = {"tokens": tokens, "targets": tokens}
+
+    # full-forward logits at position S-? : train_forward returns loss only,
+    # so recompute logits via prefill on S+1 (its last-position logits are
+    # position S's next-token distribution)
+    cache1 = init_cache(cfg, B, 64, dtype=jnp.float32)
+    want, _ = prefill(params, {"tokens": tokens}, cfg, cache1)
+
+    cache2 = init_cache(cfg, B, 64, dtype=jnp.float32)
+    _, cache2 = prefill(params, {"tokens": tokens[:, :S]}, cfg, cache2)
+    got, _ = decode_step(params, tokens[:, S:S + 1], jnp.int32(S), cache2, cfg)
+
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_routing_invariants(rng):
+    from repro.models import moe as moe_lib
+    cfg = ModelConfig(name="t", family="moe", d_model=32,
+                      moe_num_experts=8, moe_top_k=2, moe_d_ff=64,
+                      moe_capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p = moe_lib.moe_params(key, cfg)
+    x = jnp.asarray(rng.standard_normal((2, 16, 32)).astype(np.float32))
+    out, aux = moe_lib.moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(aux) >= 1.0 - 1e-3   # Switch aux >= 1 at perfect balance
+    # with huge capacity nothing is dropped: doubling capacity is a no-op
+    cfg2 = ModelConfig(name="t", family="moe", d_model=32,
+                       moe_num_experts=8, moe_top_k=2, moe_d_ff=64,
+                       moe_capacity_factor=16.0)
+    out2, _ = moe_lib.moe_apply(p, x, cfg2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rope_relative_shift_invariance(rng):
+    """RoPE: scores depend only on relative positions."""
+    hd = 32
+    q = jnp.asarray(rng.standard_normal((1, 4, 1, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 4, 1, hd)).astype(np.float32))
+    p0 = jnp.arange(4)[None, :]
+    p1 = p0 + 1000
+    s0 = jnp.einsum("bqhd,bkhd->bqk",
+                    apply_rope(q, p0, 1e4), apply_rope(k, p0, 1e4))
+    s1 = jnp.einsum("bqhd,bkhd->bqk",
+                    apply_rope(q, p1, 1e4), apply_rope(k, p1, 1e4))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-3, atol=1e-3)
