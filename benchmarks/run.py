@@ -5,7 +5,9 @@ Prints ``name,us_per_call,derived`` CSV per table:
     compiled ('GPU') vs eager ('CPU') arms, sizes 4k..1M.
   * table5 (accuracy): benchmarks.table_accuracy — max sampled error vs
     the exact f64 oracle (2^22 vectors; --full for the paper's 2^24).
-  * ffmatmul (beyond paper): FF matmul path accuracy/throughput.
+  * ffmatmul (beyond paper): FF matmul paths through the ``repro.ff``
+    dispatch registry (per-backend variant selection); also emits
+    ``BENCH_ffmatmul.json`` for the perf trajectory.
   * optimizer (beyond paper): FF master-weight AdamW cost + the
     f32-stagnation experiment.
 
@@ -32,7 +34,7 @@ def main() -> None:
     table_timing.main()
     print("\n# paper Table 5 analogue — operator accuracy")
     table_accuracy.main()
-    print("\n# beyond paper — FF matmul paths")
+    print("\n# beyond paper — FF matmul paths (repro.ff dispatch)")
     table_ffmatmul.main()
     print("\n# beyond paper — FF master-weight optimizer")
     table_optimizer.main()

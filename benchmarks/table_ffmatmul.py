@@ -1,31 +1,45 @@
-"""Beyond-paper table: FF matmul path accuracy/throughput trade-off.
+"""Beyond-paper table: FF matmul path accuracy/throughput trade-off,
+measured through the unified ``repro.ff.matmul`` dispatch.
 
 The 2006 paper only had elementwise operators.  The TPU-era question is:
-what does each FF matmul strategy cost vs deliver?
+what does each FF matmul strategy cost vs deliver?  Every path below is a
+registered implementation of the SAME op (``ff.matmul(..., impl=...)``),
+so this table doubles as a benchmark of the dispatch registry's variants
+on the current backend:
 
-  naive     — plain f32 matmul (control)
+  naive     — plain f32 matmul (control; not FF, not dispatched)
   ozaki     — exponent-aligned slicing: exact products AND exact in-matmul
-              accumulation; n^2 MXU matmuls; beyond-paper, beats dot2
-              accuracy at MXU-speed cost structure
-  comp      — blocked-K compensated (MXU-dominant, the production path)
+              accumulation; n^2 MXU matmuls
+  hybrid    — blocked-K compensated (MXU-dominant, the default the registry
+              picks; backend-aware: compiled Pallas on TPU, jnp on CPU)
   split     — Dekker split-operand (exact products, 4 MXU passes)
   dot2      — per-element Mul12 + Dot3 cascade (paper-faithful quality)
 
-Reports us_per_call (CPU backend; relative cost is the signal) and max
-err/S vs the f64 oracle (S = |A||B| condition normalizer).
+Reports us_per_call and max err/S vs the f64 oracle (S = |A||B| condition
+normalizer), and emits ``BENCH_ffmatmul.json`` so the perf trajectory is
+recorded per backend across PRs.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Dict, List
+
+# EFT-safe CPU mode when run standalone (benchmarks/run.py sets this too;
+# must precede the first jax import — see repro/core/selfcheck.py)
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_cpu_max_isa" not in _flags:
+    os.environ["XLA_FLAGS"] = ("--xla_cpu_max_isa=SSE4_2 " + _flags).strip()
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (matmul_compensated, matmul_dot2, matmul_ozaki,
-                        matmul_split)
+import repro.ff as ff
+
+IMPLS = ("hybrid", "split", "dot2", "ozaki")
 
 
 def _timeit(fn, *args, reps=10):
@@ -48,13 +62,16 @@ def run() -> List[Dict]:
         E = A.astype(np.float64) @ B.astype(np.float64)
         S = np.abs(A).astype(np.float64) @ np.abs(B).astype(np.float64)
         Aj, Bj = jnp.asarray(A), jnp.asarray(B)
-        paths = {
-            "naive": jax.jit(lambda a, b: a @ b),
-            "comp": jax.jit(lambda a, b: matmul_compensated(a, b).astuple()),
-            "split": jax.jit(lambda a, b: matmul_split(a, b).astuple()),
-            "dot2": jax.jit(lambda a, b: matmul_dot2(a, b).astuple()),
-            "ozaki": jax.jit(lambda a, b: matmul_ozaki(a, b).astuple()),
-        }
+
+        paths = {"naive": jax.jit(lambda a, b: a @ b)}
+        for impl in IMPLS:
+            paths[impl] = jax.jit(
+                lambda a, b, impl=impl: ff.matmul(a, b, impl=impl).astuple())
+        # the registry's own pick for this backend (what ff.matmul does
+        # with no override)
+        paths["dispatch_default"] = jax.jit(
+            lambda a, b: ff.matmul(a, b).astuple())
+
         for name, fn in paths.items():
             t = _timeit(fn, Aj, Bj)
             out = fn(Aj, Bj)
@@ -68,10 +85,23 @@ def run() -> List[Dict]:
     return rows
 
 
-def main():
+def main(out_json: str = "BENCH_ffmatmul.json"):
+    rows = run()
     print("ffmatmul: name,us_per_call,derived")
-    for r in run():
+    for r in rows:
         print(f"{r['path']}_K{r['K']},{r['us']:.1f},log2err={r['log2_err']:.1f}")
+    payload = {
+        "bench": "ffmatmul",
+        "backend": ff.backend(),
+        "default_impl": ff.resolve_name("matmul"),
+        "shape": {"M": 128, "N": 128, "K": [512, 4096]},
+        "rows": rows,
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_json} (backend={payload['backend']}, "
+          f"default={payload['default_impl']})")
+    return rows
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionPolicy
+import repro.ff as ff_ns
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import init_params
 from repro.models.config import ModelConfig
@@ -49,9 +49,9 @@ def main():
 
     results = {}
     for level in ("baseline", "ff_master", "ff_reduce", "ff_full"):
-        policy = PrecisionPolicy.make(level, compute_dtype="float32")
-        opt = AdamW(learning_rate=3e-4, ff=policy.ff_master_weights)
-        step_fn = jax.jit(make_train_step(cfg, policy, opt))
+        with ff_ns.policy(level, compute_dtype="float32") as policy:
+            opt = AdamW(learning_rate=3e-4, ff=policy.ff_master_weights)
+            step_fn = jax.jit(make_train_step(cfg, optimizer=opt))
         params, opt_state = params0, opt.init(params0)
         losses = []
         for i in range(args.steps):

@@ -1,4 +1,4 @@
-"""Quickstart: the float-float core in 60 seconds.
+"""Quickstart: the unified ``repro.ff`` namespace in 60 seconds.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,52 +8,71 @@ if "--xla_cpu_max_isa" not in _f:      # EFT-safe CPU mode (core/selfcheck.py)
     os.environ["XLA_FLAGS"] = ("--xla_cpu_max_isa=SSE4_2 " + _f).strip()
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core import (FF, add12, mul12, add22, mul22, ff_sum, ff_dot,
-                        matmul_split, matmul_dot2)
+import repro.ff as ff
 from repro.core.selfcheck import require_eft_safe
 
 require_eft_safe()
 
-print("=== 1. Error-free transformations (paper Theorems 2-4) ===")
+print(f"=== repro.ff on backend: {ff.backend()} ===")
+print(f"registered ops: {ff.ops()}")
+
+print("\n=== 1. Error-free transformations (paper Theorems 2-4) ===")
 a = jnp.float32(1.0 + 2**-23)      # 1 + ulp
 b = jnp.float32(2**-30)            # far below ulp(a)
-s = add12(a, b)
+s = ff.two_sum(a, b)
 print(f"a + b in f32      : {float(a + b)!r}   (b vanishes)")
-print(f"Add12 (hi, lo)    : ({float(s.hi)!r}, {float(s.lo)!r})   (b preserved in lo)")
+print(f"two_sum (hi, lo)  : ({float(s.hi)!r}, {float(s.lo)!r})   (b preserved in lo)")
 exact = np.float64(a) + np.float64(b)
 print(f"hi+lo == exact f64: {float(np.float64(s.hi) + np.float64(s.lo)) == exact}")
 
-p = mul12(jnp.float32(1.2345678), jnp.float32(7.654321))
-exact = np.float64(np.float32(1.2345678)) * np.float64(np.float32(7.654321))
-print(f"Mul12 exact       : {float(np.float64(p.hi) + np.float64(p.lo)) == exact}")
-
 print("\n=== 2. 44-bit compound arithmetic (Theorems 5-6) ===")
-x = FF.from_f64(np.pi)             # pi to ~48 bits in two f32
-y = FF.from_f64(np.e)
-z = mul22(x, y)
+x = ff.from_f64(np.pi)             # pi to ~48 bits in two f32
+y = ff.from_f64(np.e)
+z = ff.mul(x, y)
 print(f"pi * e  (f32)     : {np.float32(np.pi) * np.float32(np.e):.10f}")
 print(f"pi * e  (FF)      : {float(z.to_f64()):.15f}")
 print(f"pi * e  (f64 ref) : {np.pi * np.e:.15f}")
+q = ff.div(1.0, x)                 # FF.__rtruediv__ sugar: 1.0 / x
+print(f"1/pi    (FF)      : {float(q.to_f64()):.15f}")
+print(f"x == x, x < y     : {bool((x == x).all())}, {bool((x < y).all())}")
 
 print("\n=== 3. Compensated reductions ===")
 rng = np.random.default_rng(0)
 v = (rng.standard_normal(1 << 20) * 10 ** rng.uniform(-6, 6, 1 << 20)).astype(np.float32)
 naive = float(jnp.sum(jnp.asarray(v)))
-comp = ff_sum(jnp.asarray(v))
+comp = ff.sum(jnp.asarray(v))
 exact = float(np.sum(v.astype(np.float64)))
 print(f"naive f32 sum rel err : {abs(naive - exact) / abs(exact):.2e}")
-print(f"ff_sum rel err        : {abs(float(comp.to_f64()) - exact) / abs(exact):.2e}")
+print(f"ff.sum rel err        : {abs(float(comp.to_f64()) - exact) / abs(exact):.2e}")
 
-print("\n=== 4. FF matmul (MXU adaptation, DESIGN.md §2) ===")
+print("\n=== 4. Backend-dispatched FF matmul ===")
 A = rng.standard_normal((64, 2048)).astype(np.float32)
 B = rng.standard_normal((2048, 64)).astype(np.float32)
 E = A.astype(np.float64) @ B.astype(np.float64)
 S = np.abs(A.astype(np.float64)) @ np.abs(B.astype(np.float64))
 naive = np.asarray(jnp.asarray(A) @ jnp.asarray(B), np.float64)
-for name, fn in (("split-operand", matmul_split), ("dot2 (paper-faithful)", matmul_dot2)):
-    R = fn(jnp.asarray(A), jnp.asarray(B))
-    err = (np.abs(R.to_f64() - E) / S).max()
-    print(f"{name:22s}: max err/|A||B| = {err:.2e}")
-print(f"{'naive f32':22s}: max err/|A||B| = {(np.abs(naive - E) / S).max():.2e}")
+print(f"{'impl':22s}  max err/|A||B|")
+print(f"{'naive f32':22s}: {(np.abs(naive - E) / S).max():.2e}")
+for impl in ("hybrid", "split", "dot2", "ozaki"):
+    R = ff.matmul(jnp.asarray(A), jnp.asarray(B), impl=impl)
+    print(f"{impl:22s}: {(np.abs(R.to_f64() - E) / S).max():.2e}")
+
+print("\n=== 5. Scoped precision policy ===")
+with ff.policy("ff_full", matmul="dot2") as p:
+    print(f"inside scope : level={p.level} matmul={p.matmul_impl} "
+          f"ff_reductions={ff.current_policy().ff_reductions}")
+    R = ff.matmul(jnp.asarray(A), jnp.asarray(B))      # routed to dot2
+    print(f"scoped matmul: max err/|A||B| = {(np.abs(R.to_f64() - E) / S).max():.2e}")
+print(f"outside scope: level={ff.current_policy().level}")
+
+print("\n=== 6. Differentiable FF (custom_vjp: d(a*b) = a db + b da in FF) ===")
+xv = ff.from_f64(rng.standard_normal(8))
+yv = ff.from_f64(rng.standard_normal(8))
+g = jax.grad(lambda t: ff.mul(t, yv).to_f32().sum())(xv)
+got = np.float64(g.hi) + np.float64(g.lo)
+want = yv.to_f64()
+print(f"grad(ff.mul) vs analytic rel err: "
+      f"{(np.abs(got - want) / np.maximum(np.abs(want), 1e-30)).max():.2e}")

@@ -15,6 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import repro.ff as ff
 from repro.models import init_params, prefill, init_cache
 from repro.models.config import ModelConfig
 from repro.train.serve_step import greedy_generate
@@ -47,14 +48,18 @@ def main():
         num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=4096, head_dim=64,
         max_seq_len=256, attn_block_q=64, attn_block_kv=64,
         compute_dtype="float32", remat=False)
-    serve(dense, "dense GQA")
+    # serving reads the scoped precision policy (ff_reduce = compensated
+    # LSE/norm statistics in prefill+decode, no extra matmul cost)
+    with ff.policy("ff_reduce", compute_dtype="float32"):
+        serve(dense, "dense GQA")
 
     ssm = ModelConfig(
         name="serve-ssm", family="ssm", num_layers=4, d_model=256,
         num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=4096,
         ssm_state=32, ssm_head_dim=32, max_seq_len=256,
         compute_dtype="float32", remat=False)
-    serve(ssm, "mamba2 (SSD)")
+    with ff.policy("ff_reduce", compute_dtype="float32"):
+        serve(ssm, "mamba2 (SSD)")
 
 
 if __name__ == "__main__":

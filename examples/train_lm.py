@@ -15,7 +15,7 @@ if "--xla_cpu_max_isa" not in _f:
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionPolicy
+import repro.ff as ff
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import init_params
 from repro.models.config import ModelConfig
@@ -46,16 +46,18 @@ def main():
     args = ap.parse_args()
 
     cfg = model_100m()
-    policy = PrecisionPolicy.make(args.policy, compute_dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
-    print(f"model: {n/1e6:.1f}M params, policy={policy.level}")
 
-    opt = AdamW(learning_rate=cosine_schedule(3e-4, 20, args.steps),
-                ff=policy.ff_master_weights)
-    opt_state = opt.init(params)
-    step_fn = jax.jit(make_train_step(cfg, policy, opt),
-                      donate_argnums=(0, 1))
+    # Scoped policy: the step builder (and everything under it) reads the
+    # ambient ff.policy scope — no positional threading.
+    with ff.policy(args.policy, compute_dtype="float32") as policy:
+        print(f"model: {n/1e6:.1f}M params, policy={policy.level}")
+        opt = AdamW(learning_rate=cosine_schedule(3e-4, 20, args.steps),
+                    ff=policy.ff_master_weights)
+        opt_state = opt.init(params)
+        step_fn = jax.jit(make_train_step(cfg, optimizer=opt),
+                          donate_argnums=(0, 1))
 
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
                                   seq_len=args.seq, global_batch=args.batch))

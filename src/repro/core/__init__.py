@@ -1,5 +1,10 @@
 """Core float-float (FF) library — the paper's contribution in JAX.
 
+This is the *algorithm layer* the ``repro.ff`` dispatch registry targets.
+Application code (models/optim/train/examples) should import ``repro.ff``
+instead: it adds backend dispatch, custom differentiation rules, and the
+scoped precision policy on top of these algorithms.
+
 Public API:
     FF, add12, mul12, add22, add22_accurate, mul22, div22, sqrt22, fma22
     two_sum, fast_two_sum, split, two_prod

@@ -143,6 +143,40 @@ class FF:
     def __truediv__(self, other) -> "FF":
         return div22(self, _coerce(other))
 
+    def __rtruediv__(self, other) -> "FF":
+        return div22(_coerce(other), self)
+
+    # -- comparisons on the represented value hi + lo ------------------------
+    # Library ops always return *normalized* FF (|lo| <= ulp(hi)/2), for
+    # which value order == lexicographic (hi, lo) order and value equality
+    # == limb equality.  All return boolean arrays (elementwise, like jnp);
+    # consequently FF is unhashable, matching jnp.ndarray semantics.
+    def __eq__(self, other):  # type: ignore[override]
+        o = _coerce(other)
+        return (self.hi == o.hi) & (self.lo == o.lo)
+
+    def __ne__(self, other):  # type: ignore[override]
+        o = _coerce(other)
+        return (self.hi != o.hi) | (self.lo != o.lo)
+
+    def __lt__(self, other):
+        o = _coerce(other)
+        return (self.hi < o.hi) | ((self.hi == o.hi) & (self.lo < o.lo))
+
+    def __le__(self, other):
+        o = _coerce(other)
+        return (self.hi < o.hi) | ((self.hi == o.hi) & (self.lo <= o.lo))
+
+    def __gt__(self, other):
+        o = _coerce(other)
+        return (self.hi > o.hi) | ((self.hi == o.hi) & (self.lo > o.lo))
+
+    def __ge__(self, other):
+        o = _coerce(other)
+        return (self.hi > o.hi) | ((self.hi == o.hi) & (self.lo >= o.lo))
+
+    __hash__ = None  # type: ignore[assignment]
+
 
 def _coerce(x) -> FF:
     if isinstance(x, FF):

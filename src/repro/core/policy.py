@@ -34,16 +34,24 @@ class PrecisionPolicy:
     compute_dtype: str = "bfloat16"
     # block size for blocked-K compensated matmuls
     ff_matmul_block_k: int = 512
+    # which ``repro.ff`` matmul implementation the dispatch registry selects
+    # inside this policy's scope ("auto" = backend default; see
+    # ``repro.ff.dispatch`` for the registered names: hybrid/split/dot2/ozaki)
+    matmul_impl: str = "auto"
 
     @staticmethod
     def make(level: Level = "ff_master", compute_dtype: str = "bfloat16",
              **overrides) -> "PrecisionPolicy":
-        base = dict(
+        table = dict(
             baseline=dict(ff_master_weights=False, ff_reductions=False, ff_logits=False),
             ff_master=dict(ff_master_weights=True, ff_reductions=False, ff_logits=False),
             ff_reduce=dict(ff_master_weights=True, ff_reductions=True, ff_logits=False),
             ff_full=dict(ff_master_weights=True, ff_reductions=True, ff_logits=True),
-        )[level]
+        )
+        if level not in table:
+            raise ValueError(f"unknown precision-policy level {level!r}; "
+                             f"choose from {tuple(table)}")
+        base = table[level]
         base.update(overrides)
         return PrecisionPolicy(level=level, compute_dtype=compute_dtype, **base)
 

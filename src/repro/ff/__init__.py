@@ -1,0 +1,55 @@
+"""``repro.ff`` — the unified float-float namespace.
+
+One numpy-like API surface for the paper's float-float operators, with the
+backend hidden behind a dispatch registry (compiled Pallas on TPU,
+interpret-Pallas or pure-jnp on CPU), ``jax.custom_vjp`` differentiation
+rules for the core ops, and a scoped precision-policy API::
+
+    import repro.ff as ff
+
+    z = ff.mul(ff.from_f64(np.pi), ff.from_f64(np.e))   # ~2^-44 accurate
+    s = ff.sum(x, axis=-1)                              # compensated, FF
+    C = ff.matmul(A, B)                                 # blocked-K MXU path
+    C = ff.matmul(A, B, impl="dot2")                    # paper-faithful
+
+    with ff.policy("ff_full", matmul="hybrid"):
+        loss, grads = jax.value_and_grad(loss_fn)(params)   # scope-aware
+
+Layering: ``repro.core`` holds the paper's algorithms (the registry
+targets), ``repro.kernels`` the Pallas kernels, and this namespace is the
+only import model/optimizer/training code needs.
+"""
+
+from repro.core.ff import (  # noqa: F401
+    FF, FF_EPS, FF_PRECISION_BITS, normalize, tree_from_f32, tree_to_f32,
+)
+from repro.core.policy import (  # noqa: F401
+    PrecisionPolicy, BASELINE, FF_MASTER, FF_REDUCE, FF_FULL,
+)
+from repro.ff.scope import (  # noqa: F401
+    policy, use, current_policy, set_default_policy, resolve_policy,
+)
+from repro.ff.dispatch import (  # noqa: F401
+    backend, register, ops, impls, resolve_name,
+)
+from repro.ff.autodiff import (  # noqa: F401
+    add, sub, mul, div, sqrt, matmul, sum, mean, dot, logsumexp,
+    two_sum, two_prod,
+)
+
+# -- constructors / views (constructor sugar over the FF class) --------------
+from_f32 = FF.from_f32
+from_f64 = FF.from_f64
+zeros = FF.zeros
+
+
+def to_f32(x):
+    """Round an FF (or pass through an array) to f32."""
+    return x.to_f32() if isinstance(x, FF) else x
+
+
+def asff(x) -> FF:
+    """Coerce an array/scalar/FF to FF."""
+    if isinstance(x, FF):
+        return x
+    return FF.from_f32(x)

@@ -1,0 +1,467 @@
+"""Differentiable public FF ops: dispatch + ``jax.custom_vjp`` rules.
+
+Why custom rules: autodiff through raw TwoSum/TwoProd graphs is both wrong
+under reassociation (the EFT error terms have zero derivative a.e., so the
+transpose visits ~6x the flops to compute what the calculus already knows)
+and numerically pointless.  The rules here are the FF-arithmetic calculus:
+
+    d(a + b) = da + db          d(a * b) = a*db + b*da
+    d(a / b) = da/b - (a/b)*db/b        d(sqrt a) = da / (2*sqrt a)
+
+computed *in FF*, so gradients inherit the ~2^-44 operator accuracy.
+
+Cotangent convention ("value convention"): the cotangent of an FF output is
+itself FF-structured, and its *represented value* ``ct.hi + ct.lo`` is the
+cotangent of the represented value ``hi + lo``.  All ops here produce and
+consume that convention; ``FF.to_f32()`` (reads ``hi``) is the compatible
+boundary to plain-f32 autodiff.  Do not feed FF outputs of these ops into
+raw ``repro.core`` EFT graphs *inside a differentiated region* — per-leaf
+cotangents from raw graphs double-count against the value convention.
+
+Implementation note: every op is a ``custom_vjp`` primitive whose first
+(``nondiff_argnums``) argument is a hashable ``meta`` tuple carrying the
+resolved implementation name, the operand kinds ("ff"/"arr"), static shape
+or axis info, and impl options — resolution against the dispatch registry
+and the ambient scope happens once, in the public wrapper, at trace time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ff as core_ff
+from repro.core.ff import FF
+from repro.core.ffmatmul import _dot_f32
+from repro.ff import dispatch, scope
+
+Array = jnp.ndarray
+Operand = Union[FF, Array, float, int]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _kind(x) -> str:
+    return "ff" if isinstance(x, FF) else "arr"
+
+
+def _g_val(g: FF) -> FF:
+    """Incoming cotangent (FF-structured) -> normalized FF cotangent value."""
+    return core_ff.add12(g.hi, g.lo)
+
+
+def _ct(kind: str, gv: FF):
+    """Cotangent for an input of the given kind (arr = rounded value)."""
+    return gv if kind == "ff" else gv.hi
+
+
+def _ff_mul_any(g: FF, x) -> FF:
+    return core_ff.mul22(g, x) if isinstance(x, FF) else core_ff.mul212(g, x)
+
+
+def _ff_div_any(g: FF, x) -> FF:
+    return core_ff.div22(g, x if isinstance(x, FF) else FF.from_f32(x))
+
+
+def _operand(x) -> Union[FF, Array]:
+    if isinstance(x, FF):
+        return x
+    return jnp.asarray(x, jnp.float32)
+
+
+def _broadcast2(a, b):
+    """Broadcast limbs OUTSIDE the primitives so standard autodiff handles
+    the summing over broadcast dimensions."""
+    shape = jnp.broadcast_shapes(jnp.shape(a.hi if isinstance(a, FF) else a),
+                                 jnp.shape(b.hi if isinstance(b, FF) else b))
+
+    def bc(x):
+        if isinstance(x, FF):
+            if x.shape == shape:
+                return x
+            return FF(jnp.broadcast_to(x.hi, shape),
+                      jnp.broadcast_to(x.lo, shape))
+        return x if jnp.shape(x) == shape else jnp.broadcast_to(x, shape)
+
+    return bc(a), bc(b)
+
+
+def _opts_tuple(opts: dict) -> tuple:
+    return tuple(sorted(opts.items()))
+
+
+def _norm_axes(axis, ndim) -> Optional[Tuple[int, ...]]:
+    if axis is None:
+        return None
+    axes = (axis,) if isinstance(axis, int) else tuple(axis)
+    return tuple(a % ndim for a in axes)
+
+
+# ---------------------------------------------------------------------------
+# elementwise: add / mul / div / sqrt
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _add_p(meta, a, b):
+    return dispatch.lookup("add", meta[0])(a, b, **dict(meta[3]))
+
+
+def _add_fwd(meta, a, b):
+    return _add_p(meta, a, b), None
+
+
+def _add_bwd(meta, _res, g):
+    gv = _g_val(g)
+    return _ct(meta[1], gv), _ct(meta[2], gv)
+
+
+_add_p.defvjp(_add_fwd, _add_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mul_p(meta, a, b):
+    return dispatch.lookup("mul", meta[0])(a, b, **dict(meta[3]))
+
+
+def _mul_fwd(meta, a, b):
+    return _mul_p(meta, a, b), (a, b)
+
+
+def _mul_bwd(meta, res, g):
+    a, b = res
+    gv = _g_val(g)
+    return _ct(meta[1], _ff_mul_any(gv, b)), _ct(meta[2], _ff_mul_any(gv, a))
+
+
+_mul_p.defvjp(_mul_fwd, _mul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _div_p(meta, a, b):
+    return dispatch.lookup("div", meta[0])(a, b, **dict(meta[3]))
+
+
+def _div_fwd(meta, a, b):
+    out = _div_p(meta, a, b)
+    return out, (b, out)
+
+
+def _div_bwd(meta, res, g):
+    b, out = res
+    gv = _g_val(g)
+    q = _ff_div_any(gv, b)                       # g / b
+    db = -_ff_mul_any(q, out)                    # -(g/b) * (a/b)
+    return _ct(meta[1], q), _ct(meta[2], db)
+
+
+_div_p.defvjp(_div_fwd, _div_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sqrt_p(meta, a):
+    return dispatch.lookup("sqrt", meta[0])(a, **dict(meta[3]))
+
+
+def _sqrt_fwd(meta, a):
+    out = _sqrt_p(meta, a)
+    return out, out
+
+
+def _sqrt_bwd(meta, out, g):
+    gv = _g_val(g)
+    da = core_ff.div22(gv, core_ff.mul212(out, jnp.float32(2.0)))
+    return (_ct(meta[1], da),)
+
+
+_sqrt_p.defvjp(_sqrt_fwd, _sqrt_bwd)
+
+
+def _ew_meta(op, impl, a, b, opts):
+    name = dispatch.resolve_name(op, impl)
+    return (name, _kind(a), _kind(b), _opts_tuple(opts))
+
+
+def add(a: Operand, b: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF addition (paper Add22).  Accepts FF or f32 operands."""
+    a, b = _broadcast2(_operand(a), _operand(b))
+    return _add_p(_ew_meta("add", impl, a, b, opts), a, b)
+
+
+def sub(a: Operand, b: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF subtraction: add(a, -b)."""
+    b = _operand(b)
+    return add(a, -b if isinstance(b, FF) else -jnp.asarray(b, jnp.float32),
+               impl=impl, **opts)
+
+
+def mul(a: Operand, b: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF multiplication (paper Mul22, relative error <= 2^-44)."""
+    a, b = _broadcast2(_operand(a), _operand(b))
+    return _mul_p(_ew_meta("mul", impl, a, b, opts), a, b)
+
+
+def div(a: Operand, b: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF division (Dekker quotient + correction)."""
+    a, b = _broadcast2(_operand(a), _operand(b))
+    return _div_p(_ew_meta("div", impl, a, b, opts), a, b)
+
+
+def sqrt(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF square root (hardware sqrt + one Newton correction)."""
+    a = _operand(a)
+    name = dispatch.resolve_name("sqrt", impl)
+    return _sqrt_p((name, _kind(a), None, _opts_tuple(opts)), a)
+
+
+# ---------------------------------------------------------------------------
+# EFTs: two_sum / two_prod  (f32, f32) -> FF, exact
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _two_sum_p(meta, a, b):
+    return dispatch.lookup("two_sum", meta[0])(a, b, **dict(meta[1]))
+
+
+def _two_sum_fwd(meta, a, b):
+    return _two_sum_p(meta, a, b), None
+
+
+def _two_sum_bwd(meta, _res, g):
+    gv = _g_val(g).hi
+    return gv, gv
+
+
+_two_sum_p.defvjp(_two_sum_fwd, _two_sum_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _two_prod_p(meta, a, b):
+    return dispatch.lookup("two_prod", meta[0])(a, b, **dict(meta[1]))
+
+
+def _two_prod_fwd(meta, a, b):
+    return _two_prod_p(meta, a, b), (a, b)
+
+
+def _two_prod_bwd(meta, res, g):
+    a, b = res
+    gv = _g_val(g)
+    return core_ff.mul212(gv, b).hi, core_ff.mul212(gv, a).hi
+
+
+_two_prod_p.defvjp(_two_prod_fwd, _two_prod_bwd)
+
+
+def two_sum(a, b, *, impl: Optional[str] = None, **opts) -> FF:
+    """Exact a + b as FF (paper Theorem 2)."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    name = dispatch.resolve_name("two_sum", impl)
+    return _two_sum_p((name, _opts_tuple(opts)), a, b)
+
+
+def two_prod(a, b, *, impl: Optional[str] = None, **opts) -> FF:
+    """Exact a * b as FF (paper Theorem 4)."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    name = dispatch.resolve_name("two_prod", impl)
+    return _two_prod_p((name, _opts_tuple(opts)), a, b)
+
+
+# ---------------------------------------------------------------------------
+# matmul: f32 or FF operands -> FF
+# ---------------------------------------------------------------------------
+
+def _mm_any(impl: str, opts: tuple, a, b) -> FF:
+    """Dispatch-selected f32 base matmul, extended to FF operands with the
+    two significant cross terms (a.lo@b.lo is < 2^-48, below FF precision)."""
+    base = dispatch.lookup("matmul", impl)
+    kw = dict(opts)
+    if not isinstance(a, FF) and not isinstance(b, FF):
+        return base(a, b, **kw)
+    ah = a.hi if isinstance(a, FF) else a
+    bh = b.hi if isinstance(b, FF) else b
+    out = base(ah, bh, **kw)
+    if isinstance(b, FF):
+        out = core_ff.add22(out, FF.from_f32(_dot_f32(ah, b.lo)))
+    if isinstance(a, FF):
+        out = core_ff.add22(out, FF.from_f32(_dot_f32(a.lo, bh)))
+    return out
+
+
+def _t(x):
+    if isinstance(x, FF):
+        return FF(jnp.swapaxes(x.hi, -1, -2), jnp.swapaxes(x.lo, -1, -2))
+    return jnp.swapaxes(x, -1, -2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _matmul_p(meta, a, b):
+    return _mm_any(meta[0], meta[3], a, b)
+
+
+def _matmul_fwd(meta, a, b):
+    return _matmul_p(meta, a, b), (a, b)
+
+
+def _matmul_bwd(meta, res, g):
+    a, b = res
+    gv = _g_val(g)
+    da = _mm_any(meta[0], meta[3], gv, _t(b))
+    db = _mm_any(meta[0], meta[3], _t(a), gv)
+    return _ct(meta[1], da), _ct(meta[2], db)
+
+
+_matmul_p.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul(a: Union[FF, Array], b: Union[FF, Array], *,
+           impl: Optional[str] = None, **opts) -> FF:
+    """FF matrix product of (M,K) x (K,N) operands (f32 or FF).
+
+    The implementation is registry-dispatched (``hybrid`` blocked-K MXU
+    path by default; ``split``/``dot2``/``ozaki`` selectable per call,
+    per ``ff.use`` scope, or via ``policy(matmul=...)``).  The blocked-K
+    block size defaults to the ambient policy's ``ff_matmul_block_k``.
+    """
+    name = dispatch.resolve_name("matmul", impl)
+    if name in ("hybrid", "compensated", "split"):
+        opts = dict(opts)
+        if "bk" in opts:            # pallas-style knob name: same meaning
+            opts.setdefault("block_k", opts.pop("bk"))
+        opts.setdefault("block_k", scope.current_policy().ff_matmul_block_k)
+    a = a if isinstance(a, FF) else jnp.asarray(a, jnp.float32)
+    b = b if isinstance(b, FF) else jnp.asarray(b, jnp.float32)
+    return _matmul_p((name, _kind(a), _kind(b), _opts_tuple(opts)), a, b)
+
+
+# ---------------------------------------------------------------------------
+# reductions: sum / mean / dot / logsumexp
+# ---------------------------------------------------------------------------
+
+def _expand(gval: Array, axes: Optional[Tuple[int, ...]], shape) -> Array:
+    if axes is None:
+        axes = tuple(range(len(shape)))
+    full = gval
+    for ax in sorted(axes):
+        full = jnp.expand_dims(full, ax)
+    return jnp.broadcast_to(full, shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sum_p(meta, x):
+    impl, axes, _shape, opts = meta
+    return dispatch.lookup("sum", impl)(x, axis=axes, **dict(opts))
+
+
+def _sum_fwd(meta, x):
+    return _sum_p(meta, x), None
+
+
+def _sum_bwd(meta, _res, g):
+    _impl, axes, shape, _opts = meta
+    return (_expand(_g_val(g).hi, axes, shape),)
+
+
+_sum_p.defvjp(_sum_fwd, _sum_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mean_p(meta, x):
+    impl, axes, _shape, opts = meta
+    return dispatch.lookup("mean", impl)(x, axis=axes, **dict(opts))
+
+
+def _mean_fwd(meta, x):
+    return _mean_p(meta, x), None
+
+
+def _mean_bwd(meta, _res, g):
+    _impl, axes, shape, _opts = meta
+    n = 1
+    for ax in (range(len(shape)) if axes is None else axes):
+        n *= shape[ax]
+    return (_expand(_g_val(g).hi, axes, shape) / jnp.float32(n),)
+
+
+_mean_p.defvjp(_mean_fwd, _mean_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dot_p(meta, a, b):
+    impl, axes, _shape, opts = meta
+    return dispatch.lookup("dot", impl)(a, b, axis=axes, **dict(opts))
+
+
+def _dot_fwd(meta, a, b):
+    return _dot_p(meta, a, b), (a, b)
+
+
+def _dot_bwd(meta, res, g):
+    _impl, axes, shape, _opts = meta
+    a, b = res
+    gfull = _expand(_g_val(g).hi, axes, shape)
+    return gfull * b, gfull * a
+
+
+_dot_p.defvjp(_dot_fwd, _dot_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _lse_p(meta, x):
+    impl, axis, opts = meta
+    return dispatch.lookup("logsumexp", impl)(x, axis=axis, **dict(opts))
+
+
+def _lse_fwd(meta, x):
+    out = _lse_p(meta, x)
+    return out, (x, out)
+
+
+def _lse_bwd(meta, res, g):
+    _impl, axis, _opts = meta
+    x, out = res
+    ge = jnp.expand_dims(g, axis)
+    return (ge * jnp.exp(x - jnp.expand_dims(out, axis)),)
+
+
+_lse_p.defvjp(_lse_fwd, _lse_bwd)
+
+
+def sum(x: Array, axis=None, *, impl: Optional[str] = None, **opts) -> FF:
+    """Compensated sum of an f32 array -> FF (~44-bit accurate)."""
+    x = jnp.asarray(x, jnp.float32)
+    name = dispatch.resolve_name("sum", impl)
+    return _sum_p((name, _norm_axes(axis, x.ndim), x.shape,
+                   _opts_tuple(opts)), x)
+
+
+def mean(x: Array, axis=None, *, impl: Optional[str] = None, **opts) -> FF:
+    """Compensated mean of an f32 array -> FF."""
+    x = jnp.asarray(x, jnp.float32)
+    name = dispatch.resolve_name("mean", impl)
+    return _mean_p((name, _norm_axes(axis, x.ndim), x.shape,
+                    _opts_tuple(opts)), x)
+
+
+def dot(a: Array, b: Array, axis=None, *, impl: Optional[str] = None,
+        **opts) -> FF:
+    """Compensated dot product (Dot2/Dot3 quality) -> FF."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    name = dispatch.resolve_name("dot", impl)
+    return _dot_p((name, _norm_axes(axis, a.ndim), a.shape,
+                   _opts_tuple(opts)), a, b)
+
+
+def logsumexp(x: Array, axis: int = -1, *, impl: Optional[str] = None,
+              **opts) -> Array:
+    """Compensated log-sum-exp -> f32 array (gradient = softmax)."""
+    x = jnp.asarray(x, jnp.float32)
+    name = dispatch.resolve_name("logsumexp", impl)
+    return _lse_p((name, axis % x.ndim, _opts_tuple(opts)), x)

@@ -1,0 +1,314 @@
+"""Backend dispatch registry for ``repro.ff``.
+
+The paper presents float-float operators as a *library the application calls
+uniformly*, with the GPU backend hidden behind the operator.  This module is
+that seam for the JAX port: each public op name maps to a set of named
+implementations, and resolution picks one per call site at trace time:
+
+    per-call ``impl=`` kwarg
+      > ``ff.use(op=impl)`` scope
+      > policy (``PrecisionPolicy.matmul_impl``, for ``matmul``)
+      > per-backend default registered here
+      > first registered implementation
+
+Implementations are plain callables over ``repro.core`` algorithms and
+``repro.kernels`` Pallas kernels; several are themselves backend-aware
+(compiled Pallas on TPU, interpret-Pallas or pure-jnp on CPU) so "best
+implementation per backend" lives in exactly one place.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compensated, ffmatmul
+from repro.core import ff as core_ff
+from repro.core import transforms as T
+from repro.core.ff import FF
+from repro.ff import scope
+
+Array = jnp.ndarray
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+_DEFAULTS: Dict[str, Dict[str, str]] = {}     # op -> {backend|"*": impl}
+
+
+def backend() -> str:
+    """The JAX backend the dispatcher routes for ("cpu", "tpu", "gpu")."""
+    return jax.default_backend()
+
+
+def register(op: str, impl: str, fn: Callable, *,
+             default_for: Tuple[str, ...] = ()) -> Callable:
+    """Register ``fn`` as implementation ``impl`` of ``op``.
+
+    ``default_for`` lists backends this impl is the default on ("*" = any
+    backend without a more specific default).
+    """
+    _REGISTRY.setdefault(op, {})[impl] = fn
+    for b in default_for:
+        _DEFAULTS.setdefault(op, {})[b] = impl
+    return fn
+
+
+def ops() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def impls(op: str) -> Tuple[str, ...]:
+    """Registered implementation names for ``op``."""
+    return tuple(sorted(_REGISTRY.get(op, ())))
+
+
+def resolve_name(op: str, impl: Optional[str] = None) -> str:
+    """Resolve which implementation a call to ``op`` uses (see module doc)."""
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown ff op {op!r}; registered: {ops()}")
+    name = impl or scope.current_impl(op)
+    if name is None and op == "matmul":
+        pol = scope.current_policy().matmul_impl
+        if pol and pol != "auto":
+            name = pol
+    if name is None:
+        d = _DEFAULTS.get(op, {})
+        name = d.get(backend(), d.get("*"))
+    if name is None:
+        name = next(iter(_REGISTRY[op]))
+    if name not in _REGISTRY[op]:
+        raise KeyError(
+            f"ff op {op!r} has no implementation {name!r}; "
+            f"available: {impls(op)}")
+    return name
+
+
+def lookup(op: str, impl: str) -> Callable:
+    return _REGISTRY[op][impl]
+
+
+def call(op: str, impl: Optional[str], *args, **kw):
+    return lookup(op, resolve_name(op, impl))(*args, **kw)
+
+
+# ===========================================================================
+# implementation registrations
+# ===========================================================================
+
+def _interpret(flag: Optional[bool]) -> bool:
+    """Pallas interpret mode: explicit flag wins, else compiled on TPU only."""
+    return (backend() != "tpu") if flag is None else flag
+
+
+def _as_ff(x) -> FF:
+    if isinstance(x, FF):
+        return x
+    return FF.from_f32(jnp.asarray(x, jnp.float32))
+
+
+# -- elementwise add/mul/div/sqrt -------------------------------------------
+
+def _add_jnp(a, b) -> FF:
+    if isinstance(a, FF) and not isinstance(b, FF):
+        return core_ff.add212(a, jnp.asarray(b, jnp.float32))
+    if isinstance(b, FF) and not isinstance(a, FF):
+        return core_ff.add212(b, jnp.asarray(a, jnp.float32))
+    return core_ff.add22(_as_ff(a), _as_ff(b))
+
+
+def _add_accurate(a, b) -> FF:
+    return core_ff.add22_accurate(_as_ff(a), _as_ff(b))
+
+
+def _mul_jnp(a, b) -> FF:
+    if isinstance(a, FF) and not isinstance(b, FF):
+        return core_ff.mul212(a, jnp.asarray(b, jnp.float32))
+    if isinstance(b, FF) and not isinstance(a, FF):
+        return core_ff.mul212(b, jnp.asarray(a, jnp.float32))
+    return core_ff.mul22(_as_ff(a), _as_ff(b))
+
+
+def _elementwise_pallas(op22):
+    def fn(a, b, *, interpret: Optional[bool] = None) -> FF:
+        from repro.kernels import ff_elementwise
+        af, bf = _as_ff(a), _as_ff(b)
+        rh, rl = ff_elementwise.elementwise(
+            op22, af.hi, af.lo, bf.hi, bf.lo, interpret=_interpret(interpret))
+        return FF(rh, rl)
+    return fn
+
+
+def _div_jnp(a, b) -> FF:
+    return core_ff.div22(_as_ff(a), _as_ff(b))
+
+
+def _sqrt_jnp(a) -> FF:
+    return core_ff.sqrt22(_as_ff(a))
+
+
+# Elementwise default is jnp on EVERY backend: a 4-20 flop FF op fuses into
+# the surrounding XLA graph, while a standalone pallas_call pads operands to
+# (8,128) tiles and breaks fusion — Pallas only wins where a kernel owns a
+# loop (matmul/rowsum below).  The pallas impls stay registered for
+# validation and for fused-kernel callers that want them explicitly.
+register("add", "jnp", _add_jnp, default_for=("*",))
+register("add", "accurate", _add_accurate)
+register("add", "pallas", _elementwise_pallas("add22"))
+register("mul", "jnp", _mul_jnp, default_for=("*",))
+register("mul", "pallas", _elementwise_pallas("mul22"))
+register("div", "jnp", _div_jnp, default_for=("*",))
+register("sqrt", "jnp", _sqrt_jnp, default_for=("*",))
+
+
+# -- EFTs (f32, f32) -> FF ---------------------------------------------------
+
+def _two_sum_jnp(a, b) -> FF:
+    s, r = T.two_sum(jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))
+    return FF(s, r)
+
+
+def _two_prod_jnp(a, b) -> FF:
+    x, y = T.two_prod(jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))
+    return FF(x, y)
+
+
+def _eft_pallas(op):
+    def fn(a, b, *, interpret: Optional[bool] = None) -> FF:
+        from repro.kernels import ff_elementwise
+        x, y = ff_elementwise.elementwise(
+            op, jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+            interpret=_interpret(interpret))
+        return FF(x, y)
+    return fn
+
+
+register("two_sum", "jnp", _two_sum_jnp, default_for=("*",))
+register("two_sum", "pallas", _eft_pallas("two_sum"))
+register("two_prod", "jnp", _two_prod_jnp, default_for=("*",))
+register("two_prod", "pallas", _eft_pallas("two_prod"))
+
+
+# -- matmul (f32/FF operands handled by the autodiff layer; these take f32) --
+
+def _mm_hybrid(a: Array, b: Array, *, block_k: int = 512,
+               bm: int = 256, bn: int = 256,
+               interpret: Optional[bool] = None, **_kw) -> FF:
+    """Blocked-K MXU + Add22 — the production path.  Compiled Pallas on TPU,
+    pure-jnp (identical K-block order) elsewhere."""
+    if backend() == "tpu" and interpret is not True:
+        from repro.kernels import ff_matmul
+        hi, lo = ff_matmul.ff_matmul(a, b, bm=bm, bn=bn, bk=block_k,
+                                     interpret=False)
+        return FF(hi, lo)
+    return ffmatmul.matmul_compensated(a, b, block_k=block_k)
+
+
+def _mm_pallas_hybrid(a: Array, b: Array, *, bm: int = 256, bn: int = 256,
+                      bk: int = 512, interpret: Optional[bool] = None,
+                      **_kw) -> FF:
+    from repro.kernels import ff_matmul
+    hi, lo = ff_matmul.ff_matmul(a, b, bm=bm, bn=bn, bk=bk,
+                                 interpret=_interpret(interpret))
+    return FF(hi, lo)
+
+
+def _mm_dot2(a: Array, b: Array, *, bm: int = 128, bn: int = 128,
+             bk: int = 128, interpret: Optional[bool] = None, **_kw) -> FF:
+    """Paper-faithful Mul12 + Dot3 cascade (~2^-44).  Pallas kernel on TPU,
+    pure-jnp scan elsewhere."""
+    if backend() == "tpu" and interpret is not True:
+        from repro.kernels import ff_matmul
+        hi, lo = ff_matmul.ff_matmul_dot2(a, b, bm=bm, bn=bn, bk=bk,
+                                          interpret=False)
+        return FF(hi, lo)
+    return ffmatmul.matmul_dot2(a, b)
+
+
+def _mm_pallas_dot2(a: Array, b: Array, *, bm: int = 128, bn: int = 128,
+                    bk: int = 128, interpret: Optional[bool] = None,
+                    **_kw) -> FF:
+    from repro.kernels import ff_matmul
+    hi, lo = ff_matmul.ff_matmul_dot2(a, b, bm=bm, bn=bn, bk=bk,
+                                      interpret=_interpret(interpret))
+    return FF(hi, lo)
+
+
+def _mm_split(a: Array, b: Array, *, block_k: int = 512, **_kw) -> FF:
+    return ffmatmul.matmul_split(a, b, block_k=block_k)
+
+
+def _mm_compensated(a: Array, b: Array, *, block_k: int = 512, **_kw) -> FF:
+    return ffmatmul.matmul_compensated(a, b, block_k=block_k)
+
+
+def _mm_ozaki(a: Array, b: Array, *, slices: int = 0, **_kw) -> FF:
+    return ffmatmul.matmul_ozaki(a, b, slices=slices)
+
+
+register("matmul", "hybrid", _mm_hybrid, default_for=("*",))
+register("matmul", "pallas_hybrid", _mm_pallas_hybrid)
+register("matmul", "compensated", _mm_compensated)
+register("matmul", "split", _mm_split)
+register("matmul", "dot2", _mm_dot2)
+register("matmul", "pallas_dot2", _mm_pallas_dot2)
+register("matmul", "ozaki", _mm_ozaki)
+
+
+# -- reductions --------------------------------------------------------------
+
+def _sum_blocked(x: Array, axis=None, *, block: int = 128, **_kw) -> FF:
+    return compensated.ff_sum_blocked(x, axis=axis, block=block)
+
+
+def _sum_cascade(x: Array, axis=None, **_kw) -> FF:
+    return compensated.ff_sum(x, axis=axis)
+
+
+def _sum_pallas_rowsum(x: Array, axis=None, *, br: int = 256, bc: int = 512,
+                       lane: int = 128,
+                       interpret: Optional[bool] = None, **_kw) -> FF:
+    """Pallas row-reduction kernel: 2-D input, last axis only."""
+    from repro.kernels import ff_reduce
+    if isinstance(axis, tuple) and len(axis) == 1:
+        axis = axis[0]
+    if x.ndim != 2 or axis not in (-1, 1):
+        raise ValueError(
+            f"pallas_rowsum needs a 2-D input reduced over the last axis, "
+            f"got shape {x.shape}, axis {axis}")
+    hi, lo = ff_reduce.ff_rowsum(x, br=br, bc=bc, lane=lane,
+                                 interpret=_interpret(interpret))
+    return FF(hi, lo)
+
+
+def _dot_jnp(a: Array, b: Array, axis=None, **_kw) -> FF:
+    return compensated.ff_dot(a, b, axis=axis)
+
+
+def _mean_jnp(x: Array, axis=None, *, block: int = 128, **_kw) -> FF:
+    n = x.size if axis is None else 1
+    if axis is not None:
+        axes = (axis,) if isinstance(axis, int) else tuple(axis)
+        for ax in axes:
+            n *= x.shape[ax]
+    s = compensated.ff_sum_blocked(x, axis=axis, block=block)
+    # divide in FF: multiplying by an f32-rounded 1/n would cap the op at
+    # ~2^-24 (FF.from_f64 keeps n exact to 2^48, covering any real axis)
+    return core_ff.div22(s, FF.from_f64(float(n)))
+
+
+def _logsumexp_jnp(x: Array, axis: int = -1, *, block: int = 256, **_kw):
+    """Compensated LSE: returns the f32 log-sum-exp values."""
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    s = compensated.ff_sum_blocked(e, axis=axis, block=block)
+    return jnp.squeeze(m, axis=axis) + jnp.log(s.to_f32())
+
+
+register("sum", "blocked", _sum_blocked, default_for=("*",))
+register("sum", "cascade", _sum_cascade)
+register("sum", "pallas_rowsum", _sum_pallas_rowsum)
+register("dot", "jnp", _dot_jnp, default_for=("*",))
+register("mean", "jnp", _mean_jnp, default_for=("*",))
+register("logsumexp", "jnp", _logsumexp_jnp, default_for=("*",))

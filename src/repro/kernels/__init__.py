@@ -7,6 +7,7 @@ the reductions/matmuls built from them), so this layer is substantive:
   ff_elementwise.py  — Add22/Mul22/TwoSum/TwoProd tile kernels
   ff_matmul.py       — hybrid MXU FF matmul + paper-faithful Dot3 kernel
   ff_reduce.py       — compensated row-reduction kernel
-  ops.py             — public wrappers (interpret on CPU, compiled on TPU)
+  ops.py             — DEPRECATED shim over ``repro.ff`` (the dispatch
+                       registry now owns backend/interpret selection)
   ref.py             — pure-jnp oracles mirroring each kernel's order
 """

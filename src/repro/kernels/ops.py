@@ -1,75 +1,70 @@
-"""Public jit'd wrappers for the Pallas FF kernels.
+"""DEPRECATED shim — use the unified ``repro.ff`` namespace instead.
 
-Selects interpret mode automatically on CPU (validation) and compiled mode
-on TPU.  All wrappers take/return ``repro.core.ff.FF`` where natural.
+These wrappers predate the dispatch registry: callers had to pick the Pallas
+path by hand and thread ``interpret`` flags themselves.  They now route
+through ``repro.ff`` with the Pallas implementation pinned (so behavior —
+including bit-exactness against ``repro.kernels.ref`` — is unchanged), and
+warn on use.  New code should call ``repro.ff.add`` / ``mul`` / ``matmul`` /
+``sum`` and let the registry pick the backend.
 """
 
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.ff import FF
-from repro.kernels import ff_elementwise, ff_matmul, ff_reduce
+import repro.ff as _ff
 
 
-@functools.lru_cache(maxsize=1)
-def _interpret_default() -> bool:
-    return jax.default_backend() == "cpu"
+def _warn(name: str, repl: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{name} is deprecated; use {repl} "
+        f"(backend dispatch replaces manual interpret= threading)",
+        DeprecationWarning, stacklevel=3)
 
 
 def ff_add(a: FF, b: FF, *, interpret: Optional[bool] = None) -> FF:
     """Elementwise Add22 via the Pallas kernel."""
-    interp = _interpret_default() if interpret is None else interpret
-    rh, rl = ff_elementwise.elementwise(
-        "add22", a.hi, a.lo, b.hi, b.lo, interpret=interp)
-    return FF(rh, rl)
+    _warn("ff_add", "repro.ff.add")
+    return _ff.add(a, b, impl="pallas", interpret=interpret)
 
 
 def ff_mul(a: FF, b: FF, *, interpret: Optional[bool] = None) -> FF:
     """Elementwise Mul22 via the Pallas kernel."""
-    interp = _interpret_default() if interpret is None else interpret
-    rh, rl = ff_elementwise.elementwise(
-        "mul22", a.hi, a.lo, b.hi, b.lo, interpret=interp)
-    return FF(rh, rl)
+    _warn("ff_mul", "repro.ff.mul")
+    return _ff.mul(a, b, impl="pallas", interpret=interpret)
 
 
 def two_prod(a, b, *, interpret: Optional[bool] = None) -> FF:
-    interp = _interpret_default() if interpret is None else interpret
-    x, y = ff_elementwise.elementwise("two_prod", a, b, interpret=interp)
-    return FF(x, y)
+    _warn("two_prod", "repro.ff.two_prod")
+    return _ff.two_prod(a, b, impl="pallas", interpret=interpret)
 
 
 def two_sum(a, b, *, interpret: Optional[bool] = None) -> FF:
-    interp = _interpret_default() if interpret is None else interpret
-    s, r = ff_elementwise.elementwise("two_sum", a, b, interpret=interp)
-    return FF(s, r)
+    _warn("two_sum", "repro.ff.two_sum")
+    return _ff.two_sum(a, b, impl="pallas", interpret=interpret)
 
 
 def matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 512,
            interpret: Optional[bool] = None) -> FF:
     """Hybrid MXU+Add22 FF matmul (production path)."""
-    interp = _interpret_default() if interpret is None else interpret
-    hi, lo = ff_matmul.ff_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=interp)
-    return FF(hi, lo)
+    _warn("matmul", "repro.ff.matmul")
+    return _ff.matmul(a, b, impl="pallas_hybrid", bm=bm, bn=bn, bk=bk,
+                      interpret=interpret)
 
 
 def matmul_dot2(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
                 interpret: Optional[bool] = None) -> FF:
     """Paper-faithful FF matmul (exact products, Dot3 cascade)."""
-    interp = _interpret_default() if interpret is None else interpret
-    hi, lo = ff_matmul.ff_matmul_dot2(
-        a, b, bm=bm, bn=bn, bk=bk, interpret=interp)
-    return FF(hi, lo)
+    _warn("matmul_dot2", "repro.ff.matmul(impl='pallas_dot2')")
+    return _ff.matmul(a, b, impl="pallas_dot2", bm=bm, bn=bn, bk=bk,
+                      interpret=interpret)
 
 
 def rowsum(x, *, br: int = 256, bc: int = 512, lane: int = 128,
            interpret: Optional[bool] = None) -> FF:
     """Compensated last-axis reduction of a 2-D array -> FF per row."""
-    interp = _interpret_default() if interpret is None else interpret
-    hi, lo = ff_reduce.ff_rowsum(
-        x, br=br, bc=bc, lane=lane, interpret=interp)
-    return FF(hi, lo)
+    _warn("rowsum", "repro.ff.sum(impl='pallas_rowsum')")
+    return _ff.sum(x, axis=-1, impl="pallas_rowsum", br=br, bc=bc, lane=lane,
+                   interpret=interpret)

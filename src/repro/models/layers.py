@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import compensated
+import repro.ff as ff
 from repro.models.config import ModelConfig
 
 Array = jnp.ndarray
@@ -54,7 +54,7 @@ def rms_norm(x: Array, w: Array, eps: float, ff_stats: bool = False) -> Array:
     """
     xf = x.astype(jnp.float32)
     if ff_stats:
-        ms = compensated.ff_sum_blocked(xf * xf, axis=-1, block=128).to_f32() / x.shape[-1]
+        ms = ff.sum(xf * xf, axis=-1, block=128).to_f32() / x.shape[-1]
         ms = ms[..., None]
     else:
         ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
@@ -67,8 +67,8 @@ def layer_norm(x: Array, w: Array, b: Array, eps: float,
     xf = x.astype(jnp.float32)
     if ff_stats:
         n = x.shape[-1]
-        mu = (compensated.ff_sum_blocked(xf, axis=-1, block=128).to_f32() / n)[..., None]
-        var = (compensated.ff_sum_blocked((xf - mu) ** 2, axis=-1, block=128).to_f32() / n)[..., None]
+        mu = (ff.sum(xf, axis=-1, block=128).to_f32() / n)[..., None]
+        var = (ff.sum((xf - mu) ** 2, axis=-1, block=128).to_f32() / n)[..., None]
     else:
         mu = jnp.mean(xf, axis=-1, keepdims=True)
         var = jnp.var(xf, axis=-1, keepdims=True)

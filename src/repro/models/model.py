@@ -22,8 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import compensated
-from repro.core.policy import PrecisionPolicy, BASELINE
+import repro.ff as ff
+from repro.core.policy import PrecisionPolicy
 from repro.distributed import act_sharding as act_shd
 from repro.models import mamba2, mla, moe as moe_lib
 from repro.models.config import ModelConfig
@@ -282,11 +282,13 @@ def _cross_attn(p: Params, x: Array, enc: Array, cfg: ModelConfig,
 # ===========================================================================
 
 def chunked_cross_entropy(x: Array, params: Params, targets: Array,
-                          cfg: ModelConfig, policy: PrecisionPolicy) -> Array:
+                          cfg: ModelConfig,
+                          policy: Optional[PrecisionPolicy] = None) -> Array:
     """Sequence-chunked CE: logits are computed per S-chunk inside a remat'd
     scan and immediately reduced — the (B, S, V) tensor never exists.  At
     vocab 128k+ this is the difference between ~100s of GiB of temp per
     device and ~100s of MiB (measured in the dry-run)."""
+    policy = ff.resolve_policy(policy)
     B, S, d = x.shape
     c = cfg.loss_chunk
     if not c or S <= c:
@@ -309,8 +311,7 @@ def chunked_cross_entropy(x: Array, params: Params, targets: Array,
         xi = act_shd.constrain_hidden(xi)
         logits = unembed_apply(params["embed"], xi, cfg).astype(jnp.float32)
         if policy.ff_reductions:
-            m, s = compensated.ff_logsumexp(logits, axis=-1)
-            lse = m + jnp.log(s.to_f32())
+            lse = ff.logsumexp(logits, axis=-1)
         else:
             lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(
@@ -324,14 +325,15 @@ def chunked_cross_entropy(x: Array, params: Params, targets: Array,
     return tot / jnp.maximum(cnt, 1.0)
 
 
-def cross_entropy(logits: Array, targets: Array, policy: PrecisionPolicy,
+def cross_entropy(logits: Array, targets: Array,
+                  policy: Optional[PrecisionPolicy] = None,
                   mask: Optional[Array] = None) -> Array:
     """Token-mean CE.  With ff_reductions: compensated LSE + loss sum."""
+    policy = ff.resolve_policy(policy)
     V = logits.shape[-1]
     lf = logits.astype(jnp.float32)
     if policy.ff_reductions:
-        m, s = compensated.ff_logsumexp(lf, axis=-1)
-        lse = m + jnp.log(s.to_f32())
+        lse = ff.logsumexp(lf, axis=-1)
     else:
         lse = jax.nn.logsumexp(lf, axis=-1)
     gold = jnp.take_along_axis(lf, targets[..., None].astype(jnp.int32),
@@ -342,7 +344,7 @@ def cross_entropy(logits: Array, targets: Array, policy: PrecisionPolicy,
     mask = mask.astype(jnp.float32)
     nll = nll * mask
     if policy.ff_reductions:
-        tot = compensated.ff_sum_blocked(nll.reshape(-1), block=1024).to_f32()
+        tot = ff.sum(nll.reshape(-1), block=1024).to_f32()
         cnt = jnp.maximum(mask.sum(), 1.0)
     else:
         tot = nll.sum()
@@ -351,7 +353,9 @@ def cross_entropy(logits: Array, targets: Array, policy: PrecisionPolicy,
 
 
 def train_forward(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
-                  policy: PrecisionPolicy = BASELINE) -> Tuple[Array, Dict]:
+                  policy: Optional[PrecisionPolicy] = None
+                  ) -> Tuple[Array, Dict]:
+    policy = ff.resolve_policy(policy)
     dt = _cdtype(cfg)
     tokens = batch["tokens"]
     targets = batch["targets"]
@@ -431,10 +435,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
-            cache: Params, policy: PrecisionPolicy = BASELINE
+            cache: Params, policy: Optional[PrecisionPolicy] = None
             ) -> Tuple[Array, Params]:
     """Run the prompt through the model, filling the cache.  Returns
     (last-position logits, cache)."""
+    policy = ff.resolve_policy(policy)
     dt = _cdtype(cfg)
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -579,10 +584,11 @@ def _cross_attn_cached(p: Params, x: Array, xkv: Params,
 
 
 def decode_step(params: Params, token: Array, pos: Array, cache: Params,
-                cfg: ModelConfig, policy: PrecisionPolicy = BASELINE
+                cfg: ModelConfig, policy: Optional[PrecisionPolicy] = None
                 ) -> Tuple[Array, Params]:
     """One decode step.  token: (B, 1) int32; pos: () int32 (write index).
     Returns (logits (B, V), new cache)."""
+    policy = ff.resolve_policy(policy)
     dt = _cdtype(cfg)
     x = embed_apply(params["embed"], token, dt)
 

@@ -19,7 +19,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import compensated
+import repro.ff as ff
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init
 
@@ -97,7 +97,7 @@ def moe_apply(p: Params, x: Array, cfg: ModelConfig,
 
     # load-balance aux loss (Switch):  E * sum_e f_e * P_e
     if ff_stats:
-        me = (compensated.ff_sum_blocked(probs, axis=0, block=4096).to_f32() / T)
+        me = (ff.sum(probs, axis=0, block=4096).to_f32() / T)
     else:
         me = jnp.mean(probs, axis=0)                               # (E,)
     counts = jnp.zeros((E,), jnp.float32).at[e_idx].add(1.0)

@@ -25,8 +25,8 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import transforms as T
-from repro.core.ff import FF, add212
+import repro.ff as ff_ns
+from repro.core.ff import FF
 
 Array = jnp.ndarray
 
@@ -75,7 +75,7 @@ class AdamW:
             delta = (-lr * upd).astype(jnp.float32)
             if self.ff:
                 # Add22-style: master (hi,lo) += delta, exactly
-                new = add212(FF(w, wlo), delta)
+                new = ff_ns.add(FF(w, wlo), delta)
                 return new.hi, new.lo, m2, v2
             w2 = w + delta
             return w2, wlo, m2, v2
@@ -114,10 +114,9 @@ def global_grad_norm(grads, ff: bool = False) -> Array:
     if not ff:
         return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
                             for l in leaves))
-    from repro.core.ff import add212, FF as FFc
-    acc = FFc.from_f32(jnp.float32(0))
+    acc = FF.from_f32(jnp.float32(0))
     for l in leaves:
-        acc = add212(acc, jnp.sum(l.astype(jnp.float32) ** 2))
+        acc = ff_ns.add(acc, jnp.sum(l.astype(jnp.float32) ** 2))
     return jnp.sqrt(acc.to_f32())
 
 

@@ -8,27 +8,38 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionPolicy, BASELINE
+from typing import Optional
+
+from repro.core.policy import PrecisionPolicy
+from repro.ff.scope import resolve_policy
 from repro.models import prefill, decode_step, init_cache
 from repro.models.config import ModelConfig
 
 Array = jnp.ndarray
 
 
-def make_prefill_step(cfg: ModelConfig, policy: PrecisionPolicy = BASELINE):
+def make_prefill_step(cfg: ModelConfig,
+                      policy: Optional[PrecisionPolicy] = None):
+    """policy=None reads the ambient ``repro.ff.policy`` scope at build."""
+    policy = resolve_policy(policy)
+
     def step(params, batch: Dict[str, Array], cache):
         return prefill(params, batch, cfg, cache, policy)
     return step
 
 
-def make_decode_step(cfg: ModelConfig, policy: PrecisionPolicy = BASELINE):
+def make_decode_step(cfg: ModelConfig,
+                     policy: Optional[PrecisionPolicy] = None):
+    policy = resolve_policy(policy)
+
     def step(params, token: Array, pos: Array, cache):
         return decode_step(params, token, pos, cache, cfg, policy)
     return step
 
 
 def greedy_generate(params, cfg: ModelConfig, prompt: Array, max_new: int,
-                    cache_len: int, policy: PrecisionPolicy = BASELINE,
+                    cache_len: int,
+                    policy: Optional[PrecisionPolicy] = None,
                     extra_inputs: Dict[str, Array] | None = None
                     ) -> Array:
     """Greedy decoding loop (jit per step).  prompt: (B, S) int32."""

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.policy import PrecisionPolicy, BASELINE
+from repro.core.policy import PrecisionPolicy
+from repro.ff.scope import resolve_policy
 from repro.models import train_forward
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamW, AdamWState, clip_by_global_norm
@@ -23,16 +24,27 @@ from repro.optim.adamw import AdamW, AdamWState, clip_by_global_norm
 Array = jnp.ndarray
 
 
-def make_loss_fn(cfg: ModelConfig, policy: PrecisionPolicy):
+def make_loss_fn(cfg: ModelConfig, policy: Optional[PrecisionPolicy] = None):
+    """policy=None reads the ambient ``repro.ff.policy`` scope (resolved
+    eagerly, at builder time, so the scope only needs to wrap the builder)."""
+    policy = resolve_policy(policy)
+
     def loss_fn(params, batch):
         loss, metrics = train_forward(params, batch, cfg, policy)
         return loss, metrics
     return loss_fn
 
 
-def make_train_step(cfg: ModelConfig, policy: PrecisionPolicy,
-                    optimizer: AdamW, *, microbatches: int = 1,
+def make_train_step(cfg: ModelConfig,
+                    policy: Optional[PrecisionPolicy] = None,
+                    optimizer: Optional[AdamW] = None, *,
+                    microbatches: int = 1,
                     clip_norm: Optional[float] = 1.0) -> Callable:
+    if optimizer is None:
+        raise TypeError("make_train_step requires an optimizer "
+                        "(policy is optional — it falls back to the "
+                        "ambient ff.policy scope — but the optimizer is not)")
+    policy = resolve_policy(policy)
     loss_fn = make_loss_fn(cfg, policy)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
@@ -76,7 +88,7 @@ def make_train_step(cfg: ModelConfig, policy: PrecisionPolicy,
     return step
 
 
-def make_eval_step(cfg: ModelConfig, policy: PrecisionPolicy = BASELINE):
+def make_eval_step(cfg: ModelConfig, policy: Optional[PrecisionPolicy] = None):
     loss_fn = make_loss_fn(cfg, policy)
 
     def step(params, batch):

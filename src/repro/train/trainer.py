@@ -29,8 +29,8 @@ import jax
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt_lib
-from repro.core.compensated import kahan_update
 from repro.core.ff import FF
+import repro.ff as ff
 
 
 @dataclasses.dataclass
@@ -112,8 +112,8 @@ class Trainer:
                 self.params, self.opt_state, batch)
             loss = jax.device_get(metrics["loss"])
             self._record_time(time.perf_counter() - t0)
-            self.loss_acc = kahan_update(self.loss_acc,
-                                         jax.numpy.float32(loss))
+            self.loss_acc = ff.add(self.loss_acc,
+                                   jax.numpy.float32(loss))
             self.loss_count += 1
             self.step += 1
             if self.step % self.tcfg.log_every == 0:

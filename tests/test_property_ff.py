@@ -1,0 +1,74 @@
+"""Property-based (hypothesis) invariants for the FF core: adversarial
+scalars against the paper's EFT theorems.
+
+Split out of test_core_ff.py so the main suite runs without hypothesis;
+this module skips itself when the dependency is absent.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    add12, add22_accurate, split, two_prod, two_sum,
+)
+
+
+def ff64(x):
+    return np.asarray(x.hi).astype(np.float64) + np.asarray(x.lo).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Property-based tests (hypothesis): invariants on adversarial scalars
+# ---------------------------------------------------------------------------
+
+finite_f32 = st.floats(
+    allow_nan=False, allow_infinity=False, width=32,
+).filter(lambda x: x == 0.0 or 1e-30 < abs(x) < 1e30)
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite_f32, finite_f32)
+def test_prop_two_sum_exact(a, b):
+    s, r = two_sum(jnp.float32(a), jnp.float32(b))
+    assert float(s) + float(r) == float(np.float64(np.float32(a)) + np.float64(np.float32(b)))
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite_f32, finite_f32)
+def test_prop_two_prod_exact(a, b):
+    p = np.float64(np.float32(a)) * np.float64(np.float32(b))
+    if p != 0 and (abs(p) > 3e38 or abs(p) < 1e-25):
+        return  # overflow/underflow (incl. subnormal split residues, FTZ)
+        # excluded, like the paper §6.1
+    x, y = two_prod(jnp.float32(a), jnp.float32(b))
+    assert float(x) + float(y) == p
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite_f32)
+def test_prop_split_nonoverlap(a):
+    hi, lo = split(jnp.float32(a))
+    hi, lo = float(hi), float(lo)
+    assert hi + lo == float(np.float32(a))
+    assert abs(lo) <= abs(hi) or hi == 0.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(finite_f32, finite_f32, finite_f32, finite_f32)
+def test_prop_add22_associativity_error(a, b, c, d):
+    """FF addition is not associative, but both orders stay within 2^-40 of
+    exact — the invariant applications rely on."""
+    fa, fb = add12(jnp.float32(a), jnp.float32(b)), add12(jnp.float32(c), jnp.float32(d))
+    exact = (np.float64(np.float32(a)) + np.float64(np.float32(b))
+             + np.float64(np.float32(c)) + np.float64(np.float32(d)))
+    mag = (abs(np.float64(np.float32(a))) + abs(np.float64(np.float32(b)))
+           + abs(np.float64(np.float32(c))) + abs(np.float64(np.float32(d))))
+    if mag == 0:
+        return
+    r1 = ff64(add22_accurate(fa, fb))
+    assert abs(r1 - exact) / mag < 2.0**-40
+
+

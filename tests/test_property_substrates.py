@@ -1,0 +1,76 @@
+"""Property-based (hypothesis) invariants for the substrates (data pipeline
+determinism, gradient compression, FF master-weight integration).
+
+Split out of test_substrates.py so the main suite runs without hypothesis;
+this module skips itself when the dependency is absent.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from repro.data.pipeline import DataConfig, SyntheticLM
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants (hypothesis)
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 3), st.integers(1, 4))
+def test_prop_pipeline_determinism(index, seed, hosts):
+    """batch(i) is a pure function of (seed, host, i); host shards disjoint."""
+    cfg = DataConfig(vocab_size=97, seq_len=16, global_batch=4 * hosts,
+                     seed=seed)
+    feeds = [SyntheticLM(cfg, host_id=h, num_hosts=hosts) for h in range(hosts)]
+    again = [SyntheticLM(cfg, host_id=h, num_hosts=hosts) for h in range(hosts)]
+    for a, b in zip(feeds, again):
+        x, y = a.batch(index), b.batch(index)
+        assert np.array_equal(x["tokens"], y["tokens"])
+        assert np.array_equal(x["targets"], y["targets"])
+        assert x["tokens"].shape == (4, 16)
+        assert x["tokens"].min() >= 0 and x["tokens"].max() < 97
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                min_size=1, max_size=64))
+def test_prop_compression_error_bounded(vals):
+    """Error-feedback invariant: after compressing any gradient once, the
+    carried residual is <= one quantization step."""
+    from repro.optim.compress import init_feedback, compress
+    g = {"w": jnp.asarray(np.asarray(vals, np.float32))}
+    q, scales, state = compress(g, init_feedback(g))
+    resid = np.abs(np.asarray(state.err_hi["w"], np.float64)
+                   + np.asarray(state.err_lo["w"], np.float64))
+    step = float(scales["w"])
+    assert resid.max() <= step * 0.5 + 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 3))
+def test_prop_ff_master_exact_integration(n_steps_pow, scale_pow):
+    """FF master weights integrate ANY sequence of sub-ulp deltas exactly
+    (up to 2^-44 of the weight) — the core paper guarantee, propertyized."""
+    from repro.optim.adamw import AdamW
+    n = 10 ** n_steps_pow // 10
+    lr = 10.0 ** (-6 - scale_pow)
+    opt = AdamW(learning_rate=lr, b1=0.0, b2=0.0, eps=1e-30,
+                weight_decay=0.0, ff=True)
+    p = {"w": jnp.ones((8,), jnp.float32)}
+    s = opt.init(p)
+    g = {"w": jnp.ones((8,), jnp.float32)}
+    step = jax.jit(lambda p_, s_: opt.update(g, s_, p_))
+    for _ in range(n):
+        p, s = step(p, s)
+    total = (np.asarray(p["w"], np.float64)
+             + np.asarray(s.master_lo["w"], np.float64))
+    expect = 1.0 - lr * n
+    # per-step Add22 rounding ~2^-48 relative accumulates linearly in n
+    bound = max(abs(expect), 1.0) * (2.0**-40 + n * 2.0**-48)
+    assert np.abs(total - expect).max() < bound

