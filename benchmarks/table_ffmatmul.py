@@ -8,24 +8,44 @@ so this table doubles as a benchmark of the dispatch registry's variants
 on the current backend:
 
   naive     — plain f32 matmul (control; not FF, not dispatched)
-  ozaki     — exponent-aligned slicing: exact products AND exact in-matmul
-              accumulation; n^2 MXU matmuls
-  hybrid    — blocked-K compensated (MXU-dominant, the default the registry
-              picks; backend-aware: compiled Pallas on TPU, jnp on CPU)
+  ozaki     — exponent-aligned slicing: exact products AND exact in-chunk
+              accumulation via one batched stacked GEMM (paper accuracy at
+              matrix-unit speed; fused Pallas kernel on TPU)
+  hybrid    — blocked-K compensated (MXU-dominant; backend-aware: compiled
+              Pallas on TPU, jnp on CPU)
   split     — Dekker split-operand (exact products, 4 MXU passes)
-  dot2      — per-element Mul12 + Dot3 cascade (paper-faithful quality)
+  dot2      — per-element Mul12 + Dot3 cascade, block-vectorized over K
+              (paper-faithful quality; correctness anchor)
+  f64       — native dgemm rounded to FF: the accurate tier at hardware
+              speed wherever the hardware HAS f64 (CPU/GPU; on TPU the
+              name degrades to the fused Ozaki kernel)
 
-Reports us_per_call and max err/S vs the f64 oracle (S = |A||B| condition
-normalizer), and emits ``BENCH_ffmatmul.json`` so the perf trajectory is
-recorded per backend across PRs.
+Every row records what actually ran: the RESOLVED impl name and block
+configuration (``dispatch_default`` rows included), plus backend and jax
+version in the payload, and emits ``BENCH_ffmatmul.json`` so the perf
+trajectory is recorded per backend across PRs.
+
+Modes:
+  python -m benchmarks.table_ffmatmul                       # default table
+  python -m benchmarks.table_ffmatmul --ksweep 256,1024,8192
+  python -m benchmarks.table_ffmatmul --blocks 256,512,1024  # block sweep
+  python -m benchmarks.table_ffmatmul --check-regression BENCH_ffmatmul.json
+
+The harness asserts that ``dispatch_default`` stays within
+``DEFAULT_PARITY`` of the impl it resolves to (the block_k mis-defaulting
+regression class), and ``--check-regression`` compares naive-relative
+ratios against a committed baseline (machine-portable: absolute times are
+not comparable across boxes, ratios are).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 # EFT-safe CPU mode when run standalone (benchmarks/run.py sets this too;
 # must precede the first jax import — see repro/core/selfcheck.py)
@@ -39,70 +59,289 @@ import jax.numpy as jnp
 
 import repro.ff as ff
 
-IMPLS = ("hybrid", "split", "dot2", "ozaki")
+IMPLS = ("hybrid", "compensated", "split", "dot2", "ozaki", "f64")
+
+# dispatch_default must stay within this factor of the impl it resolves to
+# (same computation, same compiler — anything beyond this is a dispatch
+# regression, e.g. a block-size default diverging from the impl default).
+DEFAULT_PARITY = 1.25
+# --check-regression: fail if any path's naive-relative ratio grew by more
+REGRESSION_FACTOR = 1.3
 
 
-def _timeit(fn, *args, reps=10):
-    out = fn(*args)
-    jax.block_until_ready(jax.tree_util.tree_leaves(out))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(jax.tree_util.tree_leaves(out))
-    return (time.perf_counter() - t0) / reps
+def _time_paths(fns: Dict[str, tuple], args, reps: int = 10,
+                rounds: int = 13) -> Dict[str, tuple]:
+    """Per-path ``(min_s, median_s)`` via the SHARED shuffled-interleave
+    min-of-rounds protocol (``repro.ff.tuning.time_interleaved`` — one
+    methodology for tune and bench; its docstring explains why shuffled
+    rounds and time-targeted reps are load-bearing).  50ms samples here:
+    identical compiled programs were measuring 6-9% apart at 20ms samples
+    on a shared 2-core box."""
+    from repro.ff.tuning import time_interleaved
+
+    names = list(fns)
+    res = time_interleaved([fns[n][0] for n in names], args, reps,
+                           rounds=rounds, sample_target_s=0.05,
+                           rep_cap=25 * reps, min_reps=3)
+    bad = [n for n, r in zip(names, res) if r is None]
+    if bad:
+        raise RuntimeError(f"bench paths failed to run: {bad}")
+    return dict(zip(names, res))
 
 
-def run() -> List[Dict]:
+def _err_vs_oracle(got64: np.ndarray, E: np.ndarray, S: np.ndarray) -> float:
+    err = (np.abs(got64 - E) / S).max()
+    return float(np.log2(max(err, 2.0 ** -60)))
+
+
+def run(ks: Sequence[int] = (512, 4096), M: int = 128, N: int = 128,
+        blocks: Optional[Sequence[int]] = None, reps: int = 10,
+        assert_default_parity: bool = True) -> List[Dict]:
     rng = np.random.default_rng(0)
-    rows = []
-    M = N = 128
-    for K in (512, 4096):
+    rows: List[Dict] = []
+    for K in ks:
         A = rng.standard_normal((M, K)).astype(np.float32)
         B = rng.standard_normal((K, N)).astype(np.float32)
         E = A.astype(np.float64) @ B.astype(np.float64)
         S = np.abs(A).astype(np.float64) @ np.abs(B).astype(np.float64)
         Aj, Bj = jnp.asarray(A), jnp.asarray(B)
+        mkn = (M, K, N)
 
-        paths = {"naive": jax.jit(lambda a, b: a @ b)}
+        # path -> (callable, resolved impl name, explicit opts)
+        paths: Dict[str, tuple] = {
+            "naive": (jax.jit(lambda a, b: a @ b), "naive", {})}
         for impl in IMPLS:
-            paths[impl] = jax.jit(
+            fn = jax.jit(
                 lambda a, b, impl=impl: ff.matmul(a, b, impl=impl).astuple())
-        # the registry's own pick for this backend (what ff.matmul does
-        # with no override)
-        paths["dispatch_default"] = jax.jit(
-            lambda a, b: ff.matmul(a, b).astuple())
+            # explicit rows also run their tuned-best block config (the
+            # dispatch layer merges it under explicit kwargs) — record it
+            paths[impl] = (fn, ff.resolve_name("matmul", impl, shape=mkn),
+                           ff.resolve_opts("matmul", impl, mkn))
+            if blocks:
+                for bk in blocks:
+                    if impl in ("dot2", "f64"):
+                        continue       # no K-block knob on these
+                    fnb = jax.jit(lambda a, b, impl=impl, bk=bk:
+                                  ff.matmul(a, b, impl=impl,
+                                            block_k=bk).astuple())
+                    paths[f"{impl}[bk={bk}]"] = (fnb, impl, {"block_k": bk})
+        # the registry's own pick for this backend+shape (what ff.matmul
+        # does with no override — tuned table consulted when present)
+        paths["dispatch_default"] = (
+            jax.jit(lambda a, b: ff.matmul(a, b).astuple()),
+            ff.resolve_name("matmul", None, shape=mkn),
+            ff.resolve_opts("matmul", ff.resolve_name("matmul", None,
+                                                      shape=mkn), mkn))
 
-        for name, fn in paths.items():
-            t = _timeit(fn, Aj, Bj)
+        # deterministic dispatch-parity evidence: when the default resolves
+        # to an explicitly-benched impl, the two jits must lower to the
+        # SAME program — trace-time proof that no block-config divergence
+        # exists, immune to the shared-box timing noise that makes two
+        # runs of one compiled program differ by several percent
+        same_program = None
+        target = paths.get(paths["dispatch_default"][1])
+        if target is not None:
+            same_program = bool(
+                paths["dispatch_default"][0].lower(Aj, Bj).as_text()
+                == target[0].lower(Aj, Bj).as_text())
+
+        times = _time_paths(paths, (Aj, Bj), reps=reps)
+        for name, (fn, resolved, opts) in paths.items():
+            t, t_median = times[name]
             out = fn(Aj, Bj)
             if name == "naive":
                 got = np.asarray(out, np.float64)
             else:
-                got = np.asarray(out[0], np.float64) + np.asarray(out[1], np.float64)
-            err = (np.abs(got - E) / S).max()
-            rows.append({"path": name, "K": K, "us": t * 1e6,
-                         "log2_err": float(np.log2(max(err, 2.0**-60)))})
+                got = (np.asarray(out[0], np.float64)
+                       + np.asarray(out[1], np.float64))
+            row = {
+                "path": name, "M": M, "K": K, "N": N,
+                "us": t * 1e6,
+                "us_median": t_median * 1e6,
+                "log2_err": _err_vs_oracle(got, E, S),
+                "resolved_impl": resolved,
+                "block_opts": dict(opts),
+                "backend": ff.backend(),
+                "jax": jax.__version__,
+            }
+            if name == "dispatch_default" and same_program is not None:
+                row["same_program_as_resolved"] = same_program
+            rows.append(row)
+
+        if assert_default_parity:
+            _assert_default_parity(rows, K)
     return rows
 
 
-def main(out_json: str = "BENCH_ffmatmul.json"):
-    rows = run()
-    print("ffmatmul: name,us_per_call,derived")
+def _assert_default_parity(rows: List[Dict], K: int) -> None:
+    """dispatch_default must match the impl it resolves to (satellite of the
+    block_k mis-defaulting bug: identical computation, comparable time)."""
+    by_path = {r["path"]: r for r in rows if r["K"] == K}
+    default = by_path.get("dispatch_default")
+    target = default and by_path.get(default["resolved_impl"])
+    if not (default and target):
+        return
+    if default.get("same_program_as_resolved"):
+        return     # parity proven at trace time: identical lowered program
+    # fall back to timing when the programs genuinely differ (or lowering
+    # comparison was unavailable).  Explicit raise (not a bare assert):
+    # this is a CI gate and must survive ``python -O``.
+    ratio = default["us"] / max(target["us"], 1e-9)
+    if ratio > DEFAULT_PARITY:
+        raise AssertionError(
+            f"dispatch_default ({default['us']:.0f}us, resolves to "
+            f"{default['resolved_impl']!r}) is {ratio:.2f}x the explicit "
+            f"{default['resolved_impl']} row ({target['us']:.0f}us) at K={K}: "
+            f"default block config has diverged from the impl default")
+
+
+def check_regression(rows: List[Dict], baseline,
+                     factor: float = REGRESSION_FACTOR) -> List[str]:
+    """Compare naive-relative ratios to a committed baseline (dict or
+    path).  Returns a list of human-readable failures (empty = pass)."""
+    if isinstance(baseline, str):
+        with open(baseline) as f:
+            baseline = json.load(f)
+    base = baseline
+    failures = []
+
+    def ratios(rws):
+        naive = {(r["M"], r["K"], r["N"]): r["us"]
+                 for r in rws if r["path"] == "naive"}
+        out = {}
+        for r in rws:
+            shape = (r["M"], r["K"], r["N"])
+            if r["path"] == "naive" or shape not in naive:
+                continue
+            out[(r["path"],) + shape] = r["us"] / naive[shape]
+        return out
+
+    now = ratios(rows)
+    then = ratios(base.get("rows", []))
+    shared = sorted(set(now) & set(then))
+    if not shared:
+        # a gate that silently checks nothing is worse than no gate — this
+        # also catches a --ksweep/--mn drift away from the baseline shapes
+        return ["no overlapping (path, M, K, N) rows between this run and "
+                "the baseline: the regression gate compared nothing"]
+    for key in shared:
+        if now[key] > then[key] * factor:
+            path, M, K, N = key
+            failures.append(
+                f"{path} {M}x{K}x{N}: {now[key]:.1f}x naive vs baseline "
+                f"{then[key]:.1f}x (allowed {factor}x growth)")
+    return failures
+
+
+def render_impl_matrix(payload) -> str:
+    """Markdown 'choosing a matmul impl' matrix from a BENCH json payload
+    (README section is generated from this; ``--render-matrix`` prints it)."""
+    if isinstance(payload, str):
+        with open(payload) as f:
+            payload = json.load(f)
+    rows = payload["rows"]
+    ks = sorted({r["K"] for r in rows})
+    naive = {r["K"]: r["us"] for r in rows if r["path"] == "naive"}
+    paths = []
     for r in rows:
-        print(f"{r['path']}_K{r['K']},{r['us']:.1f},log2err={r['log2_err']:.1f}")
+        if r["path"] not in paths and "[" not in r["path"]:
+            paths.append(r["path"])
+    lines = [
+        "| impl | worst log2 err | "
+        + " | ".join(f"cost vs naive (K={k})" for k in ks)
+        + " | resolved |",
+        "|---|---|" + "---|" * len(ks) + "---|",
+    ]
+    for p in paths:
+        prs = {r["K"]: r for r in rows if r["path"] == p}
+        err = max(r["log2_err"] for r in prs.values())
+        costs = []
+        for k in ks:
+            r = prs.get(k)
+            costs.append(f"{r['us'] / naive[k]:.1f}x" if r and k in naive
+                         else "—")
+        res = prs[ks[-1]]["resolved_impl"]
+        opts = ",".join(f"{a}={b}" for a, b in
+                        prs[ks[-1]]["block_opts"].items())
+        res = f"`{res}`" + (f" ({opts})" if opts else "")
+        lines.append(f"| `{p}` | {err:.1f} | " + " | ".join(costs)
+                     + f" | {res} |")
+    meta = (f"backend={payload.get('backend')}, jax={payload.get('jax')}, "
+            f"M=N={payload.get('shape', {}).get('M')}")
+    lines.append("")
+    lines.append(f"<!-- generated by `python -m benchmarks.table_ffmatmul "
+                 f"--render-matrix` from BENCH_ffmatmul.json ({meta}) -->")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None,
+         out_json: str = "BENCH_ffmatmul.json"):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ksweep", type=str, default="512,4096",
+                    help="comma-separated K values to bench")
+    ap.add_argument("--blocks", type=str, default="",
+                    help="comma-separated block_k values to sweep per impl")
+    ap.add_argument("--mn", type=int, default=128, help="M=N dimension")
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--out", type=str, default=out_json)
+    ap.add_argument("--check-regression", type=str, default="",
+                    help="baseline BENCH json; exit 1 if ratios regressed")
+    ap.add_argument("--render-matrix", action="store_true",
+                    help="print the README impl matrix from --out and exit")
+    # default to no flags so programmatic callers (benchmarks/run.py) are
+    # not confused by their own sys.argv
+    args = ap.parse_args([] if argv is None else argv)
+
+    if args.render_matrix:
+        print(render_impl_matrix(args.out))
+        return None
+
+    ks = tuple(int(k) for k in args.ksweep.split(",") if k)
+    blocks = tuple(int(b) for b in args.blocks.split(",") if b) or None
+    baseline = None
+    if args.check_regression:
+        # load up-front (--out may overwrite the same file) and fail HARD
+        # on a missing baseline: a gate that silently checks nothing is
+        # worse than no gate
+        with open(args.check_regression) as f:
+            baseline = json.load(f)
+
+    rows = run(ks=ks, M=args.mn, N=args.mn, blocks=blocks, reps=args.reps)
+
+    print("ffmatmul: path,K,us_per_call,log2_err,resolved[block_opts]")
+    for r in rows:
+        opts = ",".join(f"{k}={v}" for k, v in r["block_opts"].items())
+        print(f"{r['path']}_K{r['K']},{r['us']:.1f},log2err="
+              f"{r['log2_err']:.1f},{r['resolved_impl']}"
+              f"[{opts}]")
     payload = {
         "bench": "ffmatmul",
         "backend": ff.backend(),
-        "default_impl": ff.resolve_name("matmul"),
-        "shape": {"M": 128, "N": 128, "K": [512, 4096]},
+        "jax": jax.__version__,
+        # resolution is shape-aware (tuned table): record it per benched K
+        "default_impl": {
+            str(K): ff.resolve_name("matmul", None, shape=(args.mn, K, args.mn))
+            for K in ks},
+        "shape": {"M": args.mn, "N": args.mn, "K": list(ks)},
         "rows": rows,
     }
-    with open(out_json, "w") as f:
+    with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"wrote {out_json} (backend={payload['backend']}, "
+    print(f"wrote {args.out} (backend={payload['backend']}, "
           f"default={payload['default_impl']})")
+
+    if baseline is not None:
+        # baseline was loaded up-front: --out may legally point at the same
+        # file we are comparing against (CI overwrites the artifact)
+        failures = check_regression(rows, baseline)
+        if failures:
+            print("PERF REGRESSION vs", args.check_regression)
+            for f_ in failures:
+                print(" ", f_)
+            sys.exit(1)
+        print(f"regression check vs {args.check_regression}: OK")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -32,11 +32,19 @@ class PrecisionPolicy:
     ff_logits: bool = False
     # activation compute dtype for the bulk matmuls
     compute_dtype: str = "bfloat16"
-    # block size for blocked-K compensated matmuls
+    # Block size for blocked-K compensated matmuls.  MUST match the
+    # defaults of the kernel (kernels/ff_matmul.ff_matmul bk=512) and jnp
+    # (core/ffmatmul.matmul_compensated block_k=512) hybrid paths, so the
+    # registry default and an explicit impl="hybrid" call compile the SAME
+    # program (tests/test_tune.py pins the three; the bench harness asserts
+    # dispatch_default parity with the resolved impl at runtime).  Tuned
+    # tables (repro.ff.tuning) override this per shape bucket when present.
     ff_matmul_block_k: int = 512
     # which ``repro.ff`` matmul implementation the dispatch registry selects
-    # inside this policy's scope ("auto" = backend default; see
-    # ``repro.ff.dispatch`` for the registered names: hybrid/split/dot2/ozaki)
+    # inside this policy's scope ("auto" = tuned winner for the call shape
+    # when a tuning table exists, else backend default; see
+    # ``repro.ff.dispatch``: hybrid/split/dot2/ozaki/pallas_* and the
+    # special "tuned"/"tuned_accurate" selectors)
     matmul_impl: str = "auto"
 
     @staticmethod

@@ -166,3 +166,36 @@ def two_diff(a: Array, b: Array) -> Tuple[Array, Array]:
     """
     a, b = _f32(a), _f32(b)
     return two_sum(a, -b)
+
+
+def pairwise_sum_compensated(p: Array, axis: int, err: Array = None,
+                             *, two_sum_fn=None) -> Tuple[Array, Array]:
+    """Pairwise two_sum tree reduction over ``axis``: returns (sum, err)
+    with sum + err tracking the exact total to ~2^-48 relative.
+
+    Every tree-level rounding is captured by two_sum and folded into
+    ``err`` (which only ever absorbs terms <= one ulp of the running
+    partials, so its own f32 accumulation rounds at second order).  The
+    tree halves the reduced axis per level — this is the vectorized slab
+    reducer of the block-vectorized dot2 paths.
+
+    ``two_sum_fn`` selects the EFT flavor: this module's barrier-carrying
+    ``two_sum`` by default (safe under XLA:CPU FMA contraction), or the
+    barrier-free ``repro.kernels.eft.two_sum`` inside Pallas kernel bodies.
+    """
+    ts = two_sum_fn if two_sum_fn is not None else two_sum
+    if err is None:
+        err = jnp.zeros_like(jnp.take(p, 0, axis=axis))
+    while p.shape[axis] > 1:
+        width = p.shape[axis]
+        half = width // 2
+        lo = lax.slice_in_dim(p, 0, half, axis=axis)
+        hi = lax.slice_in_dim(p, half, 2 * half, axis=axis)
+        s, e = ts(lo, hi)
+        err = err + jnp.sum(e, axis=axis)
+        if width % 2:
+            s = jnp.concatenate(
+                [s, lax.slice_in_dim(p, width - 1, width, axis=axis)],
+                axis=axis)
+        p = s
+    return jnp.take(p, 0, axis=axis), err

@@ -30,8 +30,10 @@ from repro.ff.scope import (  # noqa: F401
     policy, use, current_policy, set_default_policy, resolve_policy,
 )
 from repro.ff.dispatch import (  # noqa: F401
-    backend, register, ops, impls, resolve_name,
+    backend, register, ops, impls, resolve_name, resolve_opts,
 )
+from repro.ff.tuning import tune  # noqa: F401
+from repro.ff import tuning  # noqa: F401
 from repro.ff.autodiff import (  # noqa: F401
     add, sub, mul, div, sqrt, matmul, sum, mean, dot, logsumexp,
     two_sum, two_prod,

@@ -325,18 +325,26 @@ def matmul(a: Union[FF, Array], b: Union[FF, Array], *,
     """FF matrix product of (M,K) x (K,N) operands (f32 or FF).
 
     The implementation is registry-dispatched (``hybrid`` blocked-K MXU
-    path by default; ``split``/``dot2``/``ozaki`` selectable per call,
-    per ``ff.use`` scope, or via ``policy(matmul=...)``).  The blocked-K
-    block size defaults to the ambient policy's ``ff_matmul_block_k``.
+    path by default; ``split``/``dot2``/``ozaki``/``pallas_ozaki``
+    selectable per call, per ``ff.use`` scope, or via
+    ``policy(matmul=...)``; ``"tuned"``/``"tuned_accurate"`` pick the
+    measured winner from the ``ff.tune`` table).  Resolution is
+    shape-aware: when the tuning table has an entry for this
+    (backend, M/K/N bucket), the default impl AND its block configuration
+    come from measurements.  Option precedence: explicit kwargs > tuned
+    block config > the ambient policy's ``ff_matmul_block_k``.
     """
-    name = dispatch.resolve_name("matmul", impl)
-    if name in ("hybrid", "compensated", "split"):
-        opts = dict(opts)
-        if "bk" in opts:            # pallas-style knob name: same meaning
-            opts.setdefault("block_k", opts.pop("bk"))
-        opts.setdefault("block_k", scope.current_policy().ff_matmul_block_k)
     a = a if isinstance(a, FF) else jnp.asarray(a, jnp.float32)
     b = b if isinstance(b, FF) else jnp.asarray(b, jnp.float32)
+    mkn = (a.shape[-2], a.shape[-1], b.shape[-1])
+    name = dispatch.resolve_name("matmul", impl, shape=mkn)
+    opts = dict(opts)
+    if "bk" in opts and name in ("hybrid", "compensated", "split", "ozaki"):
+        opts.setdefault("block_k", opts.pop("bk"))  # pallas-style knob name
+    for k, v in dispatch.resolve_opts("matmul", name, mkn).items():
+        opts.setdefault(k, v)
+    if name in ("hybrid", "compensated", "split"):
+        opts.setdefault("block_k", scope.current_policy().ff_matmul_block_k)
     return _matmul_p((name, _kind(a), _kind(b), _opts_tuple(opts)), a, b)
 
 

@@ -63,8 +63,21 @@ def impls(op: str) -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY.get(op, ())))
 
 
-def resolve_name(op: str, impl: Optional[str] = None) -> str:
-    """Resolve which implementation a call to ``op`` uses (see module doc)."""
+def resolve_name(op: str, impl: Optional[str] = None,
+                 shape: Optional[Tuple[int, ...]] = None) -> str:
+    """Resolve which implementation a call to ``op`` uses (see module doc).
+
+    With ``shape`` (e.g. ``(M, K, N)`` for matmul), the measurement-driven
+    tuning table (``repro.ff.tune``) participates in resolution:
+
+      * the special names ``"tuned"`` / ``"tuned_accurate"`` (usable
+        per-call, in ``ff.use`` scopes and in ``policy(matmul=...)``)
+        resolve to the cached winner of the fast / accurate class;
+      * when resolution falls through to the backend default (no explicit
+        choice anywhere), a cached fast-class winner overrides the static
+        default — ``dispatch_default`` is then never slower than the best
+        registered impl wherever measurements exist.
+    """
     if op not in _REGISTRY:
         raise KeyError(f"unknown ff op {op!r}; registered: {ops()}")
     name = impl or scope.current_impl(op)
@@ -72,6 +85,28 @@ def resolve_name(op: str, impl: Optional[str] = None) -> str:
         pol = scope.current_policy().matmul_impl
         if pol and pol != "auto":
             name = pol
+    if name in ("tuned", "tuned_accurate"):
+        from repro.ff import tuning as _tune
+        accurate = name == "tuned_accurate"
+        name = (_tune.lookup_impl(op, shape,
+                                  "accurate" if accurate else "fast")
+                if shape is not None else None)
+        if name is not None and name not in _REGISTRY[op]:
+            name = None   # stale/foreign sidecar must never break dispatch
+        # an explicit accurate-tier request must NEVER degrade to the fast
+        # class just because the shape bucket is untuned — fall back to the
+        # static accurate-tier default: "f64" resolves to one native dgemm
+        # where the hardware has f64 and degrades to the fused Ozaki kernel
+        # on TPU, so it is the right fallback wherever it is registered
+        if name is None and accurate:
+            reg = _REGISTRY.get(op, {})
+            name = next((c for c in ("f64", "ozaki", "dot2") if c in reg),
+                        None)
+    if name is None and shape is not None:
+        from repro.ff import tuning as _tune
+        name = _tune.lookup_impl(op, shape)
+        if name is not None and name not in _REGISTRY[op]:
+            name = None   # see above: unknown tuned winner -> static default
     if name is None:
         d = _DEFAULTS.get(op, {})
         name = d.get(backend(), d.get("*"))
@@ -82,6 +117,16 @@ def resolve_name(op: str, impl: Optional[str] = None) -> str:
             f"ff op {op!r} has no implementation {name!r}; "
             f"available: {impls(op)}")
     return name
+
+
+def resolve_opts(op: str, name: str,
+                 shape: Optional[Tuple[int, ...]] = None) -> dict:
+    """Measured-best block config for ``name`` at ``shape`` (empty when the
+    tuning table has no entry).  Callers merge these UNDER explicit opts."""
+    if shape is None:
+        return {}
+    from repro.ff import tuning as _tune
+    return _tune.lookup_opts(op, name, shape)
 
 
 def lookup(op: str, impl: str) -> Callable:
@@ -214,22 +259,23 @@ def _mm_pallas_hybrid(a: Array, b: Array, *, bm: int = 256, bn: int = 256,
 
 
 def _mm_dot2(a: Array, b: Array, *, bm: int = 128, bn: int = 128,
-             bk: int = 128, interpret: Optional[bool] = None, **_kw) -> FF:
-    """Paper-faithful Mul12 + Dot3 cascade (~2^-44).  Pallas kernel on TPU,
-    pure-jnp scan elsewhere."""
+             bk: int = 128, vec: int = 8, chunk: int = 32,
+             interpret: Optional[bool] = None, **_kw) -> FF:
+    """Paper-faithful Mul12 + Dot3 cascade (~2^-44), block-vectorized over
+    K.  Pallas kernel on TPU, pure-jnp chunked scan elsewhere."""
     if backend() == "tpu" and interpret is not True:
         from repro.kernels import ff_matmul
         hi, lo = ff_matmul.ff_matmul_dot2(a, b, bm=bm, bn=bn, bk=bk,
-                                          interpret=False)
+                                          vec=vec, interpret=False)
         return FF(hi, lo)
-    return ffmatmul.matmul_dot2(a, b)
+    return ffmatmul.matmul_dot2(a, b, chunk=chunk)
 
 
 def _mm_pallas_dot2(a: Array, b: Array, *, bm: int = 128, bn: int = 128,
-                    bk: int = 128, interpret: Optional[bool] = None,
-                    **_kw) -> FF:
+                    bk: int = 128, vec: int = 8,
+                    interpret: Optional[bool] = None, **_kw) -> FF:
     from repro.kernels import ff_matmul
-    hi, lo = ff_matmul.ff_matmul_dot2(a, b, bm=bm, bn=bn, bk=bk,
+    hi, lo = ff_matmul.ff_matmul_dot2(a, b, bm=bm, bn=bn, bk=bk, vec=vec,
                                       interpret=_interpret(interpret))
     return FF(hi, lo)
 
@@ -242,8 +288,41 @@ def _mm_compensated(a: Array, b: Array, *, block_k: int = 512, **_kw) -> FF:
     return ffmatmul.matmul_compensated(a, b, block_k=block_k)
 
 
-def _mm_ozaki(a: Array, b: Array, *, slices: int = 0, **_kw) -> FF:
-    return ffmatmul.matmul_ozaki(a, b, slices=slices)
+def _mm_ozaki(a: Array, b: Array, *, slices: int = 0, beta: int = 0,
+              block_k: int = 0, interpret: Optional[bool] = None,
+              **_kw) -> FF:
+    """Exact-slice Ozaki matmul (~2^-46): fused Pallas kernel on TPU,
+    batched stacked-GEMM jnp path elsewhere."""
+    if backend() == "tpu" and interpret is not True:
+        from repro.kernels import ff_matmul
+        hi, lo = ff_matmul.ff_matmul_ozaki(a, b, slices=slices, beta=beta,
+                                           bk=block_k or 512, interpret=False)
+        return FF(hi, lo)
+    return ffmatmul.matmul_ozaki(a, b, slices=slices, beta=beta,
+                                 block_k=block_k)
+
+
+def _mm_f64(a: Array, b: Array, *, interpret: Optional[bool] = None,
+            **_kw) -> FF:
+    """Native-f64 dgemm rounded to FF (~2^-48) — the accurate tier at
+    hardware speed on backends that HAVE f64 (CPU, most GPUs).  TPU has no
+    f64 unit, so the same name degrades gracefully to the best pure-f32
+    accurate impl there (the fused Ozaki kernel): "f64" means "f64-quality
+    results the fastest way this hardware can", which on f32-only hardware
+    is exactly the paper's emulation."""
+    if backend() == "tpu":
+        return _mm_ozaki(a, b, interpret=interpret)
+    return ffmatmul.matmul_f64(a, b)
+
+
+def _mm_pallas_ozaki(a: Array, b: Array, *, slices: int = 0, beta: int = 0,
+                     bm: int = 128, bn: int = 128, bk: int = 512,
+                     interpret: Optional[bool] = None, **_kw) -> FF:
+    from repro.kernels import ff_matmul
+    hi, lo = ff_matmul.ff_matmul_ozaki(a, b, slices=slices, beta=beta,
+                                       bm=bm, bn=bn, bk=bk,
+                                       interpret=_interpret(interpret))
+    return FF(hi, lo)
 
 
 register("matmul", "hybrid", _mm_hybrid, default_for=("*",))
@@ -253,6 +332,8 @@ register("matmul", "split", _mm_split)
 register("matmul", "dot2", _mm_dot2)
 register("matmul", "pallas_dot2", _mm_pallas_dot2)
 register("matmul", "ozaki", _mm_ozaki)
+register("matmul", "pallas_ozaki", _mm_pallas_ozaki)
+register("matmul", "f64", _mm_f64)
 
 
 # -- reductions --------------------------------------------------------------

@@ -62,7 +62,11 @@ class policy:
     "ff_full"``), an existing :class:`PrecisionPolicy`, or nothing (derive
     from the current scope), plus field overrides.  ``matmul=`` selects the
     FF matmul implementation the dispatch registry uses inside the scope
-    (e.g. ``"hybrid"``, ``"split"``, ``"dot2"``, ``"ozaki"``).
+    (e.g. ``"hybrid"``, ``"split"``, ``"dot2"``, ``"ozaki"``); the special
+    names ``"tuned"`` / ``"tuned_accurate"`` select the measured winner of
+    the fast / paper-accuracy class from the ``ff.tune`` table, and the
+    default ``"auto"`` also consults that table before falling back to the
+    registered backend default.
     """
 
     def __init__(self,

@@ -1,0 +1,340 @@
+"""Measurement-driven dispatch tuning for ``repro.ff`` (``ff.tune``).
+
+The dispatch registry knows *which* implementations exist; this module
+learns *which one is fastest where*.  ``tune()`` times registered
+implementations x block configurations per (backend, shape-bucket), and
+caches the winners in a JSON sidecar so later sessions (and CI) consult
+measurements instead of guesses:
+
+    ff.tune("matmul", shapes=[(128, 4096, 128)])   # times + caches
+    C = ff.matmul(A, B)                            # default now = measured winner
+
+Winners are recorded per *accuracy class* so tuning can never trade
+correctness for speed silently:
+
+  * ``fast``      — fastest implementation overall (the class the backend
+                    default lives in; every registered impl is at least
+                    naive-f32 quality).
+  * ``accurate``  — fastest among the paper-quality (~2^-44) tier
+                    (dot2 / pallas_dot2 / ozaki / pallas_ozaki).
+
+``dispatch.resolve_name`` consults the ``fast`` winner whenever resolution
+falls through to the backend default (no per-call ``impl=``, no ``use()``
+scope, policy ``matmul_impl="auto"``), and the special impl name
+``"tuned"``/``"tuned_accurate"`` selects the winner explicitly from any
+site (per-call, ``ff.use``, ``ff.policy``).  ``lookup_opts`` additionally
+returns the winning block configuration for an impl picked by name, so an
+explicit ``impl="hybrid"`` call still gets its measured-best ``block_k``.
+
+The sidecar (``FF_TUNE.json`` at the repo root by default, override with
+``$REPRO_FF_TUNE_CACHE``) is committed for the CPU CI backend: a cached
+bucket is trusted as-is — a second ``tune()`` call is a pure cache hit and
+re-times nothing (``force=True`` re-measures).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Shape = Tuple[int, int, int]
+
+CACHE_ENV = "REPRO_FF_TUNE_CACHE"
+
+# accuracy tier of each registered matmul impl (relative error vs |A||B|):
+# "fast" ~2^-24 (naive class or better), "accurate" ~2^-44 (paper quality).
+ACCURACY_CLASS: Dict[str, str] = {
+    "hybrid": "fast",
+    "pallas_hybrid": "fast",
+    "compensated": "fast",
+    "split": "fast",
+    "dot2": "accurate",
+    "pallas_dot2": "accurate",
+    "ozaki": "accurate",
+    "pallas_ozaki": "accurate",
+    "f64": "accurate",      # native dgemm where the hardware has f64;
+                            # degrades to the ozaki kernel on TPU
+}
+
+# block configurations swept per impl (matmul).  Keep small: tune cost is
+# len(configs) * reps matmuls per impl per shape bucket.
+SWEEP_CONFIGS: Dict[str, List[dict]] = {
+    "hybrid": [{"block_k": 256}, {"block_k": 512}, {"block_k": 1024},
+               {"block_k": 2048}],
+    "compensated": [{"block_k": 512}, {"block_k": 1024}],
+    "split": [{"block_k": 512}, {"block_k": 1024}],
+    "dot2": [{}],
+    "f64": [{}],
+    "ozaki": [{"block_k": 512}, {"block_k": 1024}],
+    "pallas_hybrid": [{"bk": 512}],
+    "pallas_dot2": [{}],
+    "pallas_ozaki": [{"bk": 512}],
+}
+
+_TABLE: Dict[str, dict] = {}     # op -> bucket -> record
+_LOADED_FROM: Optional[str] = None
+
+
+def default_cache_path() -> str:
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return env
+    # repo root when running from a source checkout; cwd otherwise
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.abspath(os.path.join(here, "..", "..", ".."))
+    if os.path.isdir(os.path.join(root, "src")):
+        return os.path.join(root, "FF_TUNE.json")
+    return os.path.join(os.getcwd(), "FF_TUNE.json")
+
+
+def _pow2_bucket(x: int) -> int:
+    b = 1
+    while b < x:
+        b <<= 1
+    return b
+
+
+def bucket_key(shape: Sequence[int]) -> str:
+    """Shape bucket: dims rounded up to powers of two (measured winners
+    generalize across nearby shapes; exact-shape tables would never hit)."""
+    return "x".join(str(_pow2_bucket(int(d))) for d in shape)
+
+
+def _backend() -> str:
+    import jax
+    return jax.default_backend()
+
+
+def _bucket_store(op: str, create: bool = False) -> dict:
+    b = _backend()
+    key = f"{b}/{op}"
+    if create:
+        return _TABLE.setdefault(key, {})
+    return _TABLE.get(key, {})
+
+
+def clear() -> None:
+    """Drop the in-memory table (cache file untouched)."""
+    global _LOADED_FROM
+    _TABLE.clear()
+    _LOADED_FROM = None
+
+
+def load(path: Optional[str] = None) -> dict:
+    """Load the sidecar into the in-memory table (merging over it)."""
+    global _LOADED_FROM
+    path = path or default_cache_path()
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+        for key, buckets in payload.get("table", {}).items():
+            _TABLE.setdefault(key, {}).update(buckets)
+        _LOADED_FROM = path
+    return dict(_TABLE)
+
+
+def save(path: Optional[str] = None) -> str:
+    import jax
+
+    path = path or _LOADED_FROM or default_cache_path()
+    payload = {
+        "meta": {
+            "backend": _backend(),
+            "jax": jax.__version__,
+            "format": 1,
+        },
+        "table": _TABLE,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
+def _ensure_loaded() -> None:
+    if _LOADED_FROM is None and not _TABLE:
+        try:
+            load()
+        except Exception:     # unreadable sidecar must never break dispatch
+            pass
+
+
+def lookup(op: str, shape: Sequence[int],
+           accuracy: str = "fast") -> Optional[dict]:
+    """Tuned winner record {"impl", "opts", "us"} for the shape bucket."""
+    _ensure_loaded()
+    rec = _bucket_store(op).get(bucket_key(shape))
+    if rec:
+        return rec.get(accuracy)
+    return None
+
+
+def lookup_impl(op: str, shape: Sequence[int],
+                accuracy: str = "fast") -> Optional[str]:
+    rec = lookup(op, shape, accuracy)
+    return rec["impl"] if rec else None
+
+
+def lookup_opts(op: str, impl: str, shape: Sequence[int]) -> dict:
+    """Measured-best block config for an impl chosen by name (may be {})."""
+    _ensure_loaded()
+    rec = _bucket_store(op).get(bucket_key(shape))
+    if rec:
+        per = rec.get("impls", {}).get(impl)
+        if per:
+            return dict(per.get("opts", {}))
+    return {}
+
+
+def time_interleaved(fns: Sequence, args, reps: int, *, rounds: int = 5,
+                     sample_target_s: float = 0.03, rep_cap: int = 0,
+                     min_reps: int = 2
+                     ) -> List[Optional[Tuple[float, float]]]:
+    """THE timing protocol for FF matmul measurements — shared by
+    ``ff.tune`` and ``benchmarks.table_ffmatmul`` so their numbers can
+    never disagree on methodology.
+
+    Every candidate is measured once per round, in a fresh (deterministic)
+    permutation each round.  Shuffling — not rotating — matters: with a
+    fixed cyclic order every candidate keeps the SAME predecessor each
+    round, and one that always runs right after the expensive candidates
+    sees a throttled/hot machine every time (measured 1.3-1.6x on
+    identical compiled programs — a bias min-of-rounds cannot cancel
+    because it is in all rounds, and which would silently crown the wrong
+    tuned winner).  Per-sample rep counts are time-targeted
+    (``sample_target_s``) so sub-ms candidates aren't dominated by
+    timer/sync noise, capped (``rep_cap``, default ``6 * reps``) so slow
+    candidates stay cheap.
+
+    Returns, per candidate, ``(min_s, median_s)`` across rounds — the min
+    rejects contention episodes, the median is recorded as a dispersion
+    hint — or ``None`` for a candidate whose warmup failed (config invalid
+    for this shape/backend).  ``AssertionError`` from a candidate always
+    propagates: bugs (and test probes) must surface."""
+    import jax
+
+    nreps: List[int] = []
+    samples: List[Optional[List[float]]] = []
+    for fn in fns:
+        try:
+            out = fn(*args)      # compile + warm
+            jax.block_until_ready(jax.tree_util.tree_leaves(out))
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(jax.tree_util.tree_leaves(out))
+            est = time.perf_counter() - t0
+        except AssertionError:
+            raise
+        except Exception:
+            nreps.append(0)
+            samples.append(None)
+            continue
+        cap = rep_cap or 6 * reps
+        nreps.append(max(min_reps,
+                         min(cap, int(sample_target_s / max(est, 1e-7)))))
+        samples.append([])
+    live = [i for i, n in enumerate(nreps) if n]
+    shuffler = np.random.default_rng(0)
+    for r in range(rounds):
+        for i in (live if r == 0 else list(shuffler.permutation(live))):
+            fn = fns[i]
+            t0 = time.perf_counter()
+            for _ in range(nreps[i]):
+                out = fn(*args)
+            jax.block_until_ready(jax.tree_util.tree_leaves(out))
+            samples[i].append((time.perf_counter() - t0) / nreps[i])
+    out: List[Optional[Tuple[float, float]]] = []
+    for s in samples:
+        if s is None:
+            out.append(None)
+        else:
+            s = sorted(s)
+            out.append((s[0], s[len(s) // 2]))
+    return out
+
+
+def _time_candidates(fns: Sequence, args, reps: int,
+                     rounds: int = 5) -> List[Optional[float]]:
+    """Tune's view of :func:`time_interleaved`: min-of-rounds per
+    candidate, ``None`` where the config failed to run.  (Kept as a
+    separate module attribute so tests can probe that a cached bucket
+    never re-times.)"""
+    return [r[0] if r is not None else None
+            for r in time_interleaved(fns, args, reps, rounds=rounds)]
+
+
+def tune(op: str = "matmul",
+         shapes: Iterable[Shape] = ((128, 512, 128), (128, 4096, 128)),
+         impls: Optional[Sequence[str]] = None,
+         reps: int = 5,
+         cache: Optional[str] = None,
+         force: bool = False) -> dict:
+    """Time registered ``op`` impls x block configs per shape bucket; cache
+    and return the winners.  A bucket already in the cache is returned
+    without re-timing (the round-trip contract) unless ``force``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.ff import dispatch
+
+    if op != "matmul":
+        raise NotImplementedError(f"ff.tune currently tunes 'matmul', not {op!r}")
+    if cache or not _TABLE:
+        load(cache)
+    store = _bucket_store(op, create=True)
+    if impls:
+        names = tuple(impls)
+    else:
+        # off-TPU the pallas_* impls run in interpret mode — orders of
+        # magnitude slow by construction, not worth timing
+        names = tuple(n for n in dispatch.impls(op)
+                      if _backend() == "tpu" or not n.startswith("pallas_"))
+    rng = np.random.default_rng(0)
+
+    for shape in shapes:
+        M, K, N = (int(d) for d in shape)
+        key = bucket_key(shape)
+        if key in store and not force:
+            continue
+        Mb, Kb, Nb = (int(d) for d in key.split("x"))
+        A = jnp.asarray(rng.standard_normal((Mb, Kb)).astype(np.float32))
+        B = jnp.asarray(rng.standard_normal((Kb, Nb)).astype(np.float32))
+        cands: List[Tuple[str, dict]] = []
+        calls = []
+        for name in names:
+            fn = dispatch.lookup(op, name)
+            for cfg in SWEEP_CONFIGS.get(name, [{}]):
+                cands.append((name, dict(cfg)))
+                calls.append(jax.jit(
+                    lambda a, b, fn=fn, cfg=cfg: fn(a, b, **cfg).astuple()))
+        times = _time_candidates(calls, (A, B), reps)
+        per_impl: Dict[str, dict] = {}
+        for (name, cfg), t in zip(cands, times):
+            if t is None:
+                # config invalid for this shape/backend — skip, but never
+                # silently: a tuned table missing an impl looks identical
+                # to that impl losing the timing race
+                import warnings
+                warnings.warn(
+                    f"ff.tune: skipping {name}{cfg} at {key}: failed to run")
+                continue
+            if name not in per_impl or t * 1e6 < per_impl[name]["us"]:
+                per_impl[name] = {"opts": cfg, "us": t * 1e6}
+        if not per_impl:
+            continue
+        rec: Dict[str, dict] = {"impls": per_impl}
+        fast = min(per_impl, key=lambda n: per_impl[n]["us"])
+        rec["fast"] = {"impl": fast, **per_impl[fast]}
+        acc_names = [n for n in per_impl
+                     if ACCURACY_CLASS.get(n) == "accurate"]
+        if acc_names:
+            acc = min(acc_names, key=lambda n: per_impl[n]["us"])
+            rec["accurate"] = {"impl": acc, **per_impl[acc]}
+        store[key] = rec
+
+    path = save(cache)
+    return {"table": dict(_bucket_store(op)), "cache": path}

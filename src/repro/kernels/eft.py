@@ -56,3 +56,13 @@ def mul22(ah, al, bh, bl):
     th, tl = two_prod(ah, bh)
     t = tl + (ah * bl + al * bh)
     return fast_two_sum(th, t)
+
+
+def pairwise_sum_compensated(p, axis: int, err=None):
+    """Pairwise two_sum tree reduction over ``axis`` (see
+    ``core.transforms.pairwise_sum_compensated`` for the algorithm) using
+    THIS module's barrier-free two_sum — the form Pallas kernel bodies
+    need.  The generic combinator carries no barriers of its own, so the
+    import does not smuggle ``optimization_barrier`` into kernels."""
+    from repro.core import transforms as T
+    return T.pairwise_sum_compensated(p, axis, err, two_sum_fn=two_sum)

@@ -86,7 +86,8 @@ def test_matmul_all_impls_vs_oracle():
         "hybrid": 2.0 ** -19, "pallas_hybrid": 2.0 ** -19,
         "compensated": 2.0 ** -19, "split": 2.0 ** -19,
         "dot2": 2.0 ** -40, "pallas_dot2": 2.0 ** -40,
-        "ozaki": 2.0 ** -40,
+        "ozaki": 2.0 ** -40, "pallas_ozaki": 2.0 ** -40,
+        "f64": 2.0 ** -40,
     }
     for impl in ff.impls("matmul"):
         C = ff.matmul(jnp.asarray(A), jnp.asarray(B), impl=impl)

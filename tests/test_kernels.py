@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+import repro.ff as ff
 from repro.core.ff import FF
 from repro.kernels import ops, ref
 from conftest import f32_vec
@@ -78,6 +79,30 @@ def test_ff_matmul_hybrid_vs_ref(rng, mkn):
     # kernel vs ref: same block order -> tight agreement
     ref64 = _f64(want_hi) + _f64(want_lo)
     assert np.all(np.abs(ff64(got) - ref64) <= 2.0**-44 * S + 1e-30)
+
+
+@pytest.mark.parametrize("mkn", [(8, 16, 8), (32, 128, 16), (100, 300, 50),
+                                 (64, 1100, 8), (17, 100, 5)])
+@pytest.mark.parametrize("slices", [0, 5])
+def test_ff_matmul_ozaki_kernel_vs_oracle(rng, mkn, slices):
+    """Fused Ozaki-slice kernel (slice-pair innermost grid dim, scalar-
+    prefetch pair tables): paper-quality accuracy on every shape class —
+    ragged, K spanning multiple bk-blocks (K=1100 > bk=512 exercises the
+    FF cross-block accumulation), and slices=5 exercises pair skipping."""
+    from repro.kernels import ff_matmul as kmm
+    M, K, N = mkn
+    A = rng.standard_normal((M, K)).astype(np.float32)
+    B = rng.standard_normal((K, N)).astype(np.float32)
+    hi, lo = kmm.ff_matmul_ozaki(jnp.asarray(A), jnp.asarray(B),
+                                 slices=slices, interpret=True)
+    E = _f64(A) @ _f64(B)
+    S = np.abs(_f64(A)) @ np.abs(_f64(B))
+    got = _f64(hi) + _f64(lo)
+    assert np.all(np.abs(got - E) <= 2.0**-42 * S + 1e-30), mkn
+    # and it agrees with the jnp batched-GEMM path to accurate-tier level
+    want = ff.matmul(jnp.asarray(A), jnp.asarray(B), impl="ozaki",
+                     slices=slices)
+    assert np.all(np.abs(got - want.to_f64()) <= 2.0**-42 * S + 1e-30), mkn
 
 
 @pytest.mark.parametrize("mkn", [(8, 16, 8), (32, 128, 16), (64, 256, 8), (17, 100, 5)])

@@ -1,0 +1,165 @@
+"""Tests for the measurement-driven dispatch tuning subsystem
+(``repro.ff.tuning``): cache round-trip (second run hits, no re-timing),
+resolve_name/resolve_opts integration, the "tuned" selector names, and the
+block_k default alignment that the tuned table papers over."""
+import inspect
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.ff as ff
+from repro.ff import dispatch, tuning
+
+
+SHAPE = (32, 256, 32)
+
+
+@pytest.fixture
+def tune_cache(tmp_path, monkeypatch):
+    """Isolated tuning table: fresh in-memory state, sidecar in tmp_path,
+    restored afterwards so other tests see the repo's committed table."""
+    path = str(tmp_path / "FF_TUNE.json")
+    monkeypatch.setenv(tuning.CACHE_ENV, path)
+    tuning.clear()
+    yield path
+    tuning.clear()
+
+
+def _tune_once(path, **kw):
+    return ff.tune("matmul", shapes=[SHAPE],
+                   impls=("hybrid", "compensated", "ozaki"),
+                   reps=1, **kw)
+
+
+def test_tune_roundtrips_through_cache(tune_cache, monkeypatch):
+    out = _tune_once(tune_cache)
+    assert out["cache"] == tune_cache and os.path.exists(tune_cache)
+    key = tuning.bucket_key(SHAPE)
+    table = out["table"]
+    assert key in table
+    rec = table[key]
+    assert rec["fast"]["impl"] in ("hybrid", "compensated", "ozaki")
+    assert rec["accurate"]["impl"] == "ozaki"
+    # the fast winner is never slower than any timed impl
+    best_us = min(v["us"] for v in rec["impls"].values())
+    assert rec["fast"]["us"] == best_us
+
+    # second run: pure cache hit — re-timing would call _time_candidates
+    def boom(*a, **k):
+        raise AssertionError("tune() re-timed a cached bucket")
+
+    monkeypatch.setattr(tuning, "_time_candidates", boom)
+    out2 = _tune_once(tune_cache)
+    assert out2["table"][key]["fast"] == rec["fast"]
+
+    # cold process simulation: drop memory, load from sidecar
+    tuning.clear()
+    assert tuning.lookup_impl("matmul", SHAPE) == rec["fast"]["impl"]
+
+    # force=True must re-measure (and therefore trip the patched timer)
+    with pytest.raises(AssertionError, match="re-timed"):
+        _tune_once(tune_cache, force=True)
+
+
+def test_resolution_consults_tuned_table(tune_cache):
+    _tune_once(tune_cache)
+    rec = tuning.lookup("matmul", SHAPE)
+    # default resolution (no impl anywhere) uses the tuned fast winner
+    assert dispatch.resolve_name("matmul", None, shape=SHAPE) == rec["impl"]
+    # ... but only when a bucket exists; unknown shapes keep the default
+    assert dispatch.resolve_name(
+        "matmul", None, shape=(8, 8, 8)) == dispatch.resolve_name("matmul")
+    # the special selector names work per-call and in scopes
+    assert dispatch.resolve_name("matmul", "tuned", shape=SHAPE) == rec["impl"]
+    acc = tuning.lookup("matmul", SHAPE, "accurate")
+    assert dispatch.resolve_name(
+        "matmul", "tuned_accurate", shape=SHAPE) == acc["impl"]
+    with ff.use(matmul="tuned_accurate"):
+        assert dispatch.resolve_name(
+            "matmul", None, shape=SHAPE) == acc["impl"]
+    # explicit per-call impl always beats the table
+    assert dispatch.resolve_name("matmul", "dot2", shape=SHAPE) == "dot2"
+    # an accurate-tier request on an UNTUNED shape must stay in the
+    # accurate tier (static fallback), never degrade to the fast default;
+    # "f64" is the backend-portable accurate fallback (native dgemm on
+    # CPU/GPU, degrades to the fused Ozaki kernel on TPU)
+    assert dispatch.resolve_name(
+        "matmul", "tuned_accurate", shape=(8, 8, 8)) == "f64"
+    # tuned opts ride along for the winning impl
+    opts = dispatch.resolve_opts("matmul", rec["impl"], SHAPE)
+    assert opts == rec["opts"]
+
+
+def test_stale_sidecar_never_breaks_dispatch(tune_cache):
+    """A tuned table naming an impl this build doesn't register (renamed
+    impl, hand-edited or foreign FF_TUNE.json) must fall through to the
+    static default, not brick every plain ff.matmul call with KeyError."""
+    backend = ff.backend()
+    payload = {"meta": {"backend": backend, "jax": "0", "format": 1},
+               "table": {f"{backend}/matmul": {
+                   tuning.bucket_key(SHAPE): {
+                       "fast": {"impl": "gone_impl", "opts": {}, "us": 1.0},
+                       "accurate": {"impl": "gone_impl", "opts": {},
+                                    "us": 1.0},
+                       "impls": {}}}}}
+    with open(tune_cache, "w") as f:
+        json.dump(payload, f)
+    tuning.clear()
+    static_default = dispatch.resolve_name("matmul")
+    assert dispatch.resolve_name("matmul", None, shape=SHAPE) == static_default
+    assert dispatch.resolve_name("matmul", "tuned", shape=SHAPE) \
+        == static_default
+    # accurate-tier request degrades to the static accurate fallback
+    assert dispatch.resolve_name("matmul", "tuned_accurate", shape=SHAPE) \
+        == "f64"
+
+
+def test_tuned_dispatch_default_not_slower_record(tune_cache):
+    """The acceptance property in table form: the tuned default's recorded
+    time is within 5% of the fastest impl at equal-or-better accuracy (it
+    IS the fastest timed config, so this is exact in the table)."""
+    _tune_once(tune_cache)
+    rec = tuning.lookup("matmul", SHAPE)
+    per = tuning._bucket_store("matmul")[tuning.bucket_key(SHAPE)]["impls"]
+    assert rec["us"] <= min(v["us"] for v in per.values()) * 1.05
+
+
+def test_tuned_matmul_runs_and_matches_explicit(tune_cache, rng):
+    _tune_once(tune_cache)
+    rec = tuning.lookup("matmul", SHAPE)
+    A = jnp.asarray(rng.standard_normal(SHAPE[:2]).astype(np.float32))
+    B = jnp.asarray(rng.standard_normal(SHAPE[1:]).astype(np.float32))
+    got = ff.matmul(A, B)                       # tuned default
+    want = ff.matmul(A, B, impl=rec["impl"], **rec["opts"])
+    assert np.array_equal(np.asarray(got.hi), np.asarray(want.hi))
+    assert np.array_equal(np.asarray(got.lo), np.asarray(want.lo))
+
+
+def test_cache_file_carries_backend_metadata(tune_cache):
+    _tune_once(tune_cache)
+    with open(tune_cache) as f:
+        payload = json.load(f)
+    assert payload["meta"]["backend"] == ff.backend()
+    assert "jax" in payload["meta"]
+    assert any(k.startswith(ff.backend() + "/") for k in payload["table"])
+
+
+def test_block_k_defaults_aligned():
+    """PrecisionPolicy.ff_matmul_block_k must equal the kernel and jnp path
+    defaults — the divergence class behind dispatch_default being slower
+    than the very impl it resolves to."""
+    from repro.core.policy import PrecisionPolicy
+    from repro.core import ffmatmul
+    from repro.kernels import ff_matmul as kmm
+
+    pol = PrecisionPolicy().ff_matmul_block_k
+    jnp_default = inspect.signature(
+        ffmatmul.matmul_compensated).parameters["block_k"].default
+    kernel_default = inspect.signature(
+        kmm.ff_matmul).parameters["bk"].default
+    hybrid_default = inspect.signature(
+        dispatch.lookup("matmul", "hybrid")).parameters["block_k"].default
+    assert pol == jnp_default == kernel_default == hybrid_default == 512
