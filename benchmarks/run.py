@@ -8,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV per table:
   * ffmatmul (beyond paper): FF matmul paths through the ``repro.ff``
     dispatch registry (per-backend variant selection); also emits
     ``BENCH_ffmatmul.json`` for the perf trajectory.
+  * elementwise (beyond paper): fused FF expression pipelines
+    (adamw/softmax/logsumexp/norm-stats chains) vs op-by-op streaming;
+    emits ``BENCH_elementwise.json``.
   * optimizer (beyond paper): FF master-weight AdamW cost + the
     f32-stagnation experiment.
 
@@ -28,14 +31,16 @@ def main() -> None:
     from repro.core.selfcheck import require_eft_safe
     require_eft_safe(strict=False)
 
-    from benchmarks import (table_accuracy, table_ffmatmul, table_optimizer,
-                            table_timing)
+    from benchmarks import (table_accuracy, table_elementwise,
+                            table_ffmatmul, table_optimizer, table_timing)
     print("# paper Table 3/4 analogue — operator timings")
     table_timing.main()
     print("\n# paper Table 5 analogue — operator accuracy")
     table_accuracy.main()
     print("\n# beyond paper — FF matmul paths (repro.ff dispatch)")
     table_ffmatmul.main()
+    print("\n# beyond paper — fused FF pipelines vs op-by-op streaming")
+    table_elementwise.main()   # default shapes == the committed baseline's
     print("\n# beyond paper — FF master-weight optimizer")
     table_optimizer.main()
 

@@ -1,0 +1,389 @@
+"""Beyond-paper table: fused FF expression pipelines vs op-by-op streaming.
+
+The source paper reports per-operator throughputs; follow-up work applying
+the operators to real simulations (Collange–Daumas–Defour, cs/0703028)
+shows what actually dominates: CHAINS of emulated ops, each launched as its
+own pass over memory.  This table measures that directly for the hot
+composite chains ``repro.ff`` now ships fused:
+
+  arm ``unfused``   — the op-by-op dispatch path: the chain written as a
+                      plain sequence of ``ff.*`` / jnp calls and executed
+                      EAGERLY, so every operator is its own compiled
+                      executable with a full memory round-trip — the
+                      paper's one-fragment-shader-pass-per-operator
+                      streaming model, and literally what the dispatch
+                      layer does outside ``jax.jit``.
+  arm ``fused``     — ONE dispatched composite call under one jit
+                      (``ff.adamw_update`` / ``ff.softmax`` / ... — a
+                      single Pallas kernel on TPU, the backend's best
+                      single-launch implementation elsewhere).
+  arm ``whole_jit`` — honesty row: the op-by-op chain under ONE jit, i.e.
+                      what XLA's own fusion recovers without our layer.
+
+Every row records the resolved fused impl, both times (shared
+shuffled-interleave protocol, ``repro.ff.tuning.time_interleaved``), the
+``speedup`` = unfused/fused, and ``max_ulp_diff`` — the worst difference
+between the fused and unfused primary outputs in units of the reference's
+f32 ulp (0 = bitwise; reduction chains are allowed 1, see
+``docs/DESIGN_fusion.md``).  Emits ``BENCH_elementwise.json``;
+``--check-regression`` compares speedups ratio-wise against a committed
+baseline (machine-portable) and fails if any chain's speedup decayed by
+more than ``REGRESSION_FACTOR`` (or the accuracy contract broke).
+
+Modes:
+  python -m benchmarks.table_elementwise                    # default table
+  python -m benchmarks.table_elementwise --shapes 256x1024
+  python -m benchmarks.table_elementwise --check-regression BENCH_elementwise.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_cpu_max_isa" not in _flags:
+    os.environ["XLA_FLAGS"] = ("--xla_cpu_max_isa=SSE4_2 " + _flags).strip()
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro.ff as ff
+from repro.core.ff import FF
+
+REGRESSION_FACTOR = 1.3
+# reduction chains may differ from the op-by-op reference by the final
+# rounding ulp (two compensated summation orders); elementwise chains by 0
+ULP_TOL = {"adamw": 0.0, "axpy": 0.0, "softmax": 2.0, "logsumexp": 1.0,
+           "rmsnorm_stats": 1.0, "norm_stats": 2.0}
+
+
+def _ulp_diff(a: np.ndarray, b: np.ndarray) -> float:
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float((np.abs(a - b) / np.spacing(np.maximum(
+        np.abs(b), np.float32(1e-30)))).max())
+
+
+# --------------------------------------------------------------------------
+# chains: each builder returns dict(args, fused, unfused, whole_jit,
+#                                   resolved, primary)
+# `unfused` is written as the library user would write it WITHOUT jit and
+# runs eagerly — one executable per operator (do not wrap it in jax.jit or
+# the arm stops measuring what it is named after).
+# `primary(out)` extracts the f32 array both arms are compared on.
+# --------------------------------------------------------------------------
+
+def _mk_adamw(rng, R, C):
+    sh = (R, C)
+    g = jnp.asarray(rng.standard_normal(sh).astype(np.float32))
+    m = jnp.asarray((rng.standard_normal(sh) * 0.1).astype(np.float32))
+    v = jnp.asarray(np.abs(rng.standard_normal(sh) * 0.01).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal(sh).astype(np.float32))
+    wlo = jnp.asarray((rng.standard_normal(sh) * 1e-8).astype(np.float32))
+    lr, b1, b2 = jnp.float32(1e-3), jnp.float32(0.9), jnp.float32(0.95)
+    bc1, bc2 = jnp.float32(0.1), jnp.float32(0.05)
+    eps, wd = 1e-8, 0.1
+    args = (g, m, v, w, wlo)
+
+    def op_by_op(g, m, v, w, wlo):
+        # the pre-fusion AdamW leaf, verbatim (~16 eager executions)
+        m2 = b1 * m + (1.0 - b1) * g
+        v2 = b2 * v + (1.0 - b2) * g * g
+        u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        u = u + wd * w
+        d = -lr * u
+        new = ff.add(FF(w, wlo), d)
+        return new.hi, new.lo, m2, v2
+
+    def chain(g, m, v, w, wlo):
+        new, m2, v2 = ff.adamw_update(g, m, v, w, wlo, lr, b1, b2, bc1, bc2,
+                                      eps=eps, wd=wd)
+        return new.hi, new.lo, m2, v2
+
+    return {
+        "args": args,
+        "fused": jax.jit(chain),
+        "unfused": op_by_op,
+        "whole_jit": jax.jit(op_by_op),
+        "resolved": ff.resolve_name("adamw_update", None, shape=sh),
+        "primary": lambda out: out[0],
+    }
+
+
+def _mk_softmax(rng, R, C):
+    x = jnp.asarray(rng.standard_normal((R, C)).astype(np.float32))
+
+    def op_by_op(x):
+        m = jnp.max(x, axis=-1, keepdims=True)
+        e = jnp.exp(x - m)
+        s = ff.sum(e, axis=-1, block=256)
+        return e / s.to_f32()[..., None]
+
+    return {
+        "args": (x,),
+        "fused": jax.jit(lambda x: ff.softmax(x)),
+        "unfused": op_by_op,
+        "whole_jit": jax.jit(op_by_op),
+        "resolved": ff.resolve_name("softmax", None, shape=(R, C)),
+        "primary": lambda out: out,
+    }
+
+
+def _mk_logsumexp(rng, R, C):
+    x = jnp.asarray(rng.standard_normal((R, C)).astype(np.float32))
+
+    def op_by_op(x):
+        m = jnp.max(x, axis=-1, keepdims=True)
+        e = jnp.exp(x - m)
+        s = ff.sum(e, axis=-1, block=256)
+        return jnp.squeeze(m, -1) + jnp.log(s.to_f32())
+
+    return {
+        "args": (x,),
+        "fused": jax.jit(lambda x: ff.logsumexp(x)),
+        "unfused": op_by_op,
+        "whole_jit": jax.jit(op_by_op),
+        "resolved": ff.resolve_name("logsumexp", None, shape=(R, C)),
+        "primary": lambda out: out,
+    }
+
+
+def _mk_rmsnorm_stats(rng, R, C):
+    x = jnp.asarray(rng.standard_normal((R, C)).astype(np.float32))
+
+    def op_by_op(x):
+        return ff.sum(x * x, axis=-1, block=128).to_f32() / C
+
+    return {
+        "args": (x,),
+        "fused": jax.jit(lambda x: ff.mean_sq(x)),
+        "unfused": op_by_op,
+        "whole_jit": jax.jit(op_by_op),
+        "resolved": ff.resolve_name("mean_sq", None, shape=(R, C)),
+        "primary": lambda out: out,
+    }
+
+
+def _mk_norm_stats(rng, R, C):
+    x = jnp.asarray(rng.standard_normal((R, C)).astype(np.float32))
+
+    def op_by_op(x):
+        mu = ff.sum(x, axis=-1, block=128).to_f32() / C
+        var = ff.sum((x - mu[..., None]) ** 2, axis=-1,
+                     block=128).to_f32() / C
+        return mu, var
+
+    return {
+        "args": (x,),
+        "fused": jax.jit(lambda x: ff.norm_stats(x)),
+        "unfused": op_by_op,
+        "whole_jit": jax.jit(op_by_op),
+        "resolved": ff.resolve_name("norm_stats", None, shape=(R, C)),
+        "primary": lambda out: out[1],
+    }
+
+
+def _mk_axpy(rng, R, C):
+    """Generic ff.fused showcase: z = a*x + y over FF tensors."""
+    sh = (R, C)
+    xh = rng.standard_normal(sh).astype(np.float32)
+    yh = rng.standard_normal(sh).astype(np.float32)
+    x = FF(jnp.asarray(xh),
+           jnp.asarray((xh * 1e-8 * rng.standard_normal(sh)).astype(np.float32)))
+    y = FF(jnp.asarray(yh),
+           jnp.asarray((yh * 1e-8 * rng.standard_normal(sh)).astype(np.float32)))
+    a = jnp.float32(1.618)
+
+    chain = ff.fused(lambda a, x, y: a * x + y)
+
+    def op_by_op(xh, xl, yh, yl):
+        return ff.add(ff.mul(FF(xh, xl), a), FF(yh, yl)).astuple()
+
+    return {
+        "args": (x.hi, x.lo, y.hi, y.lo),
+        "fused": jax.jit(
+            lambda xh, xl, yh, yl: chain(a, FF(xh, xl), FF(yh, yl)).astuple()),
+        "unfused": op_by_op,
+        "whole_jit": jax.jit(op_by_op),
+        "resolved": "fused(jnp)" if ff.backend() != "tpu" else "fused(pallas)",
+        "primary": lambda out: out[0],
+    }
+
+
+CHAINS: Dict[str, Callable] = {
+    "adamw": _mk_adamw,
+    "softmax": _mk_softmax,
+    "logsumexp": _mk_logsumexp,
+    "rmsnorm_stats": _mk_rmsnorm_stats,
+    "norm_stats": _mk_norm_stats,
+    "axpy": _mk_axpy,
+}
+
+
+def run(shapes: Sequence[Tuple[int, int]] = ((256, 1024), (4096, 4096)),
+        chains: Optional[Sequence[str]] = None,
+        reps: int = 5, rounds: int = 9) -> List[Dict]:
+    from repro.ff.tuning import time_interleaved
+
+    rng = np.random.default_rng(0)
+    rows: List[Dict] = []
+    for R, C in shapes:
+        for name in (chains or CHAINS):
+            spec = CHAINS[name](rng, R, C)
+            arms = ["fused", "unfused", "whole_jit"]
+            res = time_interleaved([spec[a] for a in arms], spec["args"],
+                                   reps, rounds=rounds,
+                                   sample_target_s=0.05, rep_cap=25 * reps,
+                                   min_reps=2)
+            bad = [a for a, r in zip(arms, res) if r is None]
+            if bad:
+                raise RuntimeError(f"{name} arms failed to run: {bad}")
+            t = {a: r[0] for a, r in zip(arms, res)}
+            out_f = spec["primary"](spec["fused"](*spec["args"]))
+            out_u = spec["primary"](spec["unfused"](*spec["args"]))
+            out_w = spec["primary"](spec["whole_jit"](*spec["args"]))
+            # the precision contract is same-compilation-mode: fused vs the
+            # jitted op-by-op graph (eager-vs-jit already differs by ~1 ulp
+            # through f32 div/sqrt chains for ANY program — recorded
+            # separately as max_ulp_eager, informational)
+            ulp = _ulp_diff(out_f, out_w)
+            rows.append({
+                "chain": name, "R": R, "C": C,
+                "us_fused": t["fused"] * 1e6,
+                "us_unfused": t["unfused"] * 1e6,
+                "us_whole_jit": t["whole_jit"] * 1e6,
+                "speedup": t["unfused"] / t["fused"],
+                "resolved_impl": spec["resolved"],
+                "max_ulp_diff": ulp,
+                "max_ulp_eager": _ulp_diff(out_f, out_u),
+                "ulp_tol": ULP_TOL[name],
+                "backend": ff.backend(),
+                "jax": jax.__version__,
+            })
+            if ulp > ULP_TOL[name]:
+                raise AssertionError(
+                    f"fused {name} diverged from the op-by-op path by "
+                    f"{ulp:.1f} ulp (allowed {ULP_TOL[name]}) at "
+                    f"({R}, {C}): precision regression")
+    return rows
+
+
+# the eager op-by-op arm's per-op dispatch overhead varies several-fold
+# with machine load, so its speedup only carries a loose collapse gate;
+# the fused/whole_jit ratio compares two JITTED arms and is stable enough
+# for the same tight factor the matmul gate uses
+SPEEDUP_COLLAPSE = 3.0
+# sub-5ms rows are not timing-portable even between two idle runs of one
+# box (measured 2-5x swings at (256, 1024)); they keep the accuracy gate
+# but are exempt from both timing gates.  CI therefore gates timing at
+# the memory-bound (4096, 4096) rows, which repeat within ~10%.
+TIMING_GATE_FLOOR_US = 5000.0
+
+
+def check_regression(rows: List[Dict], baseline,
+                     factor: float = REGRESSION_FACTOR) -> List[str]:
+    """Three gates per shared (chain, R, C) row, all machine-portable:
+
+      1. accuracy: ``max_ulp_diff`` within the chain's documented
+         tolerance (hard — precision is the product);
+      2. fused vs whole-jit: ``us_fused/us_whole_jit`` must not grow by
+         more than ``factor`` vs baseline (both arms jitted -> stable;
+         catches 'the fused impl got slower than plain XLA fusion');
+      3. fused vs op-by-op: the headline speedup must not collapse by
+         more than ``SPEEDUP_COLLAPSE`` or below parity (the eager arm
+         is load-sensitive, so this is deliberately loose).
+    """
+    if isinstance(baseline, str):
+        with open(baseline) as f:
+            baseline = json.load(f)
+    now = {(r["chain"], r["R"], r["C"]): r for r in rows}
+    then = {(r["chain"], r["R"], r["C"]): r
+            for r in baseline.get("rows", [])}
+    shared = sorted(set(now) & set(then))
+    if not shared:
+        return ["no overlapping (chain, R, C) rows between this run and "
+                "the baseline: the regression gate compared nothing"]
+    failures = []
+    for key in shared:
+        tag = f"{key[0]} {key[1]}x{key[2]}"
+        r_now, r_then = now[key], then[key]
+        if r_now["max_ulp_diff"] > r_now["ulp_tol"]:
+            failures.append(
+                f"{tag}: max_ulp_diff {r_now['max_ulp_diff']} > tol "
+                f"{r_now['ulp_tol']}")
+        if r_now["us_fused"] < TIMING_GATE_FLOOR_US:
+            continue          # sub-5ms timings are noise, not signal
+        w_now = r_now["us_fused"] / max(r_now["us_whole_jit"], 1e-9)
+        w_then = r_then["us_fused"] / max(r_then["us_whole_jit"], 1e-9)
+        if w_now > w_then * factor:
+            failures.append(
+                f"{tag}: fused/whole_jit ratio {w_now:.2f} vs baseline "
+                f"{w_then:.2f} (allowed {factor}x growth)")
+        s_now, s_then = r_now["speedup"], r_then["speedup"]
+        if s_now * SPEEDUP_COLLAPSE < s_then or s_now < 1.0:
+            failures.append(
+                f"{tag}: fused speedup collapsed to {s_now:.2f}x "
+                f"(baseline {s_then:.2f}x, allowed {SPEEDUP_COLLAPSE}x "
+                f"decay, floor 1.0x)")
+    return failures
+
+
+def main(argv: Optional[Sequence[str]] = None,
+         out_json: str = "BENCH_elementwise.json"):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--shapes", type=str, default="256x1024,4096x4096",
+                    help="comma-separated RxC shapes")
+    ap.add_argument("--chains", type=str, default="",
+                    help="comma-separated subset of chains to bench")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--rounds", type=int, default=9)
+    ap.add_argument("--out", type=str, default=out_json)
+    ap.add_argument("--check-regression", type=str, default="",
+                    help="baseline BENCH json; exit 1 if speedups regressed")
+    args = ap.parse_args([] if argv is None else argv)
+
+    shapes = tuple(tuple(int(d) for d in s.split("x"))
+                   for s in args.shapes.split(",") if s)
+    chains = tuple(c for c in args.chains.split(",") if c) or None
+    baseline = None
+    if args.check_regression:
+        with open(args.check_regression) as f:
+            baseline = json.load(f)
+
+    rows = run(shapes=shapes, chains=chains, reps=args.reps,
+               rounds=args.rounds)
+
+    print("elementwise: chain,RxC,us_fused,us_unfused,speedup,ulp,resolved")
+    for r in rows:
+        print(f"{r['chain']},{r['R']}x{r['C']},{r['us_fused']:.0f},"
+              f"{r['us_unfused']:.0f},{r['speedup']:.2f}x,"
+              f"{r['max_ulp_diff']:.1f},{r['resolved_impl']}")
+    payload = {
+        "bench": "elementwise",
+        "backend": ff.backend(),
+        "jax": jax.__version__,
+        "shapes": [list(s) for s in shapes],
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out} (backend={payload['backend']})")
+
+    if baseline is not None:
+        failures = check_regression(rows, baseline)
+        if failures:
+            print("PERF/ACCURACY REGRESSION vs", args.check_regression)
+            for f_ in failures:
+                print(" ", f_)
+            sys.exit(1)
+        print(f"regression check vs {args.check_regression}: OK")
+    return rows
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -36,8 +36,11 @@ from repro.ff.tuning import tune  # noqa: F401
 from repro.ff import tuning  # noqa: F401
 from repro.ff.autodiff import (  # noqa: F401
     add, sub, mul, div, sqrt, matmul, sum, mean, dot, logsumexp,
+    softmax, mean_sq, norm_stats, adamw_update,
     two_sum, two_prod,
 )
+from repro.ff import fusion  # noqa: F401
+from repro.ff.fusion import fused  # noqa: F401
 
 # -- constructors / views (constructor sugar over the FF class) --------------
 from_f32 = FF.from_f32

@@ -181,9 +181,45 @@ def _sqrt_bwd(meta, out, g):
 _sqrt_p.defvjp(_sqrt_fwd, _sqrt_bwd)
 
 
+def _shape_of(x) -> Tuple[int, ...]:
+    return x.shape if isinstance(x, FF) else jnp.shape(x)
+
+
+def _bucket2d(shape) -> Tuple[int, int]:
+    """Tuning-bucket view of an elementwise-family operand: the kernels
+    flatten to (prod(leading), last), and ``ff.tune`` keys its buckets the
+    same way — resolving on the raw ND shape would miss every tuned entry
+    at real call sites (3-D/4-D activations)."""
+    if len(shape) == 0:
+        return (1, 1)
+    if len(shape) == 1:
+        return (1, int(shape[0]))
+    r = 1
+    for d in shape[:-1]:
+        r *= int(d)
+    return (r, int(shape[-1]))
+
+
+def _merge_tuned(op: str, name: str, shape, opts: dict) -> dict:
+    """Tuned block config for (op, impl, shape-bucket) merged UNDER the
+    caller's explicit opts (mirrors ff.matmul's option precedence)."""
+    opts = dict(opts)
+    for k, v in dispatch.resolve_opts(op, name, shape).items():
+        opts.setdefault(k, v)
+    return opts
+
+
 def _ew_meta(op, impl, a, b, opts):
-    name = dispatch.resolve_name(op, impl)
-    return (name, _kind(a), _kind(b), _opts_tuple(opts))
+    """Shape-aware elementwise resolution: the ff.tune table participates
+    exactly as it does for matmul (winner-by-bucket when resolution falls
+    through to the default, tuned block opts for the resolved impl).
+    Callers pass operands already broadcast by _broadcast2; bucketing on
+    the joint broadcast shape keeps this operand-order-independent even
+    if a future caller skips that step."""
+    shape = _bucket2d(jnp.broadcast_shapes(_shape_of(a), _shape_of(b)))
+    name = dispatch.resolve_name(op, impl, shape=shape)
+    return (name, _kind(a), _kind(b),
+            _opts_tuple(_merge_tuned(op, name, shape, opts)))
 
 
 def add(a: Operand, b: Operand, *, impl: Optional[str] = None, **opts) -> FF:
@@ -214,8 +250,10 @@ def div(a: Operand, b: Operand, *, impl: Optional[str] = None, **opts) -> FF:
 def sqrt(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
     """FF square root (hardware sqrt + one Newton correction)."""
     a = _operand(a)
-    name = dispatch.resolve_name("sqrt", impl)
-    return _sqrt_p((name, _kind(a), None, _opts_tuple(opts)), a)
+    shape = _bucket2d(_shape_of(a))
+    name = dispatch.resolve_name("sqrt", impl, shape=shape)
+    return _sqrt_p((name, _kind(a), None,
+                    _opts_tuple(_merge_tuned("sqrt", name, shape, opts))), a)
 
 
 # ---------------------------------------------------------------------------
@@ -444,9 +482,10 @@ _lse_p.defvjp(_lse_fwd, _lse_bwd)
 def sum(x: Array, axis=None, *, impl: Optional[str] = None, **opts) -> FF:
     """Compensated sum of an f32 array -> FF (~44-bit accurate)."""
     x = jnp.asarray(x, jnp.float32)
-    name = dispatch.resolve_name("sum", impl)
+    bshape = _bucket2d(x.shape)
+    name = dispatch.resolve_name("sum", impl, shape=bshape)
     return _sum_p((name, _norm_axes(axis, x.ndim), x.shape,
-                   _opts_tuple(opts)), x)
+                   _opts_tuple(_merge_tuned("sum", name, bshape, opts))), x)
 
 
 def mean(x: Array, axis=None, *, impl: Optional[str] = None, **opts) -> FF:
@@ -471,5 +510,131 @@ def logsumexp(x: Array, axis: int = -1, *, impl: Optional[str] = None,
               **opts) -> Array:
     """Compensated log-sum-exp -> f32 array (gradient = softmax)."""
     x = jnp.asarray(x, jnp.float32)
-    name = dispatch.resolve_name("logsumexp", impl)
-    return _lse_p((name, axis % x.ndim, _opts_tuple(opts)), x)
+    bshape = _bucket2d(x.shape)
+    name = dispatch.resolve_name("logsumexp", impl, shape=bshape)
+    return _lse_p((name, axis % x.ndim,
+                   _opts_tuple(_merge_tuned("logsumexp", name, bshape,
+                                            opts))), x)
+
+
+# ---------------------------------------------------------------------------
+# fused composite chains: softmax / mean_sq / norm_stats / adamw_update
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _softmax_p(meta, x):
+    impl, axis, opts = meta
+    return dispatch.lookup("softmax", impl)(x, axis=axis, **dict(opts))
+
+
+def _softmax_fwd(meta, x):
+    y = _softmax_p(meta, x)
+    return y, y
+
+
+def _softmax_bwd(meta, y, g):
+    _impl, axis, _opts = meta
+    dot = jnp.sum(g * y, axis=axis, keepdims=True)
+    return ((g - dot) * y,)
+
+
+_softmax_p.defvjp(_softmax_fwd, _softmax_bwd)
+
+
+def softmax(x: Array, axis: int = -1, *, impl: Optional[str] = None,
+            **opts) -> Array:
+    """Compensated softmax -> f32 array.
+
+    The denominator is an FF-accurate compensated exp-sum; on TPU the whole
+    max/exp/sum/divide chain is ONE fused Pallas kernel (rows up to
+    ``ff_fused.MAX_FUSED_COLS``; longer rows fall back to the jnp impl).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    bshape = _bucket2d(x.shape)
+    name = dispatch.resolve_name("softmax", impl, shape=bshape)
+    return _softmax_p((name, axis % x.ndim,
+                       _opts_tuple(_merge_tuned("softmax", name, bshape,
+                                                opts))), x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mean_sq_p(meta, x):
+    impl, _shape, opts = meta
+    return dispatch.lookup("mean_sq", impl)(x, **dict(opts))
+
+
+def _mean_sq_fwd(meta, x):
+    return _mean_sq_p(meta, x), x
+
+
+def _mean_sq_bwd(meta, x, g):
+    _impl, shape, _opts = meta
+    n = shape[-1]
+    return (x * (2.0 * g[..., None] / jnp.float32(n)),)
+
+
+_mean_sq_p.defvjp(_mean_sq_fwd, _mean_sq_bwd)
+
+
+def mean_sq(x: Array, *, impl: Optional[str] = None, **opts) -> Array:
+    """Compensated mean of squares over the last axis -> f32 (the RMSNorm
+    statistic).  One fused kernel on TPU: x*x never touches HBM."""
+    x = jnp.asarray(x, jnp.float32)
+    bshape = _bucket2d(x.shape)
+    name = dispatch.resolve_name("mean_sq", impl, shape=bshape)
+    return _mean_sq_p((name, x.shape,
+                       _opts_tuple(_merge_tuned("mean_sq", name, bshape,
+                                                opts))), x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _norm_stats_p(meta, x):
+    impl, _shape, opts = meta
+    return dispatch.lookup("norm_stats", impl)(x, **dict(opts))
+
+
+def _norm_stats_fwd(meta, x):
+    mu, var = _norm_stats_p(meta, x)
+    return (mu, var), (x, mu)
+
+
+def _norm_stats_bwd(meta, res, g):
+    _impl, shape, _opts = meta
+    x, mu = res
+    gmu, gvar = g
+    n = jnp.float32(shape[-1])
+    dx = gmu[..., None] / n + gvar[..., None] * 2.0 * (x - mu[..., None]) / n
+    return (dx,)
+
+
+_norm_stats_p.defvjp(_norm_stats_fwd, _norm_stats_bwd)
+
+
+def norm_stats(x: Array, *, impl: Optional[str] = None, **opts):
+    """Compensated LayerNorm statistics over the last axis -> (mean, var),
+    both f32.  One fused kernel on TPU: both reductions (mean and centered
+    variance) share a single read of x."""
+    x = jnp.asarray(x, jnp.float32)
+    bshape = _bucket2d(x.shape)
+    name = dispatch.resolve_name("norm_stats", impl, shape=bshape)
+    return _norm_stats_p((name, x.shape,
+                          _opts_tuple(_merge_tuned("norm_stats", name,
+                                                   bshape, opts))), x)
+
+
+def adamw_update(g: Array, m: Array, v: Array, w: Array, wlo: Array,
+                 lr, b1, b2, bc1, bc2, *, eps: float, wd: float,
+                 impl: Optional[str] = None, **opts):
+    """The AdamW leaf update as ONE dispatched chain (~10 FF/f32 ops):
+    moment updates, bias correction, decoupled weight decay, and the FF
+    master-weight Add212 — fused into a single kernel launch on TPU.
+
+    Returns ``(new_master FF, m2, v2)``.  Runs outside ``jax.grad``
+    (optimizer step), so it carries no vjp rule.
+    """
+    g = jnp.asarray(g, jnp.float32)
+    shape = _bucket2d(jnp.shape(g))
+    name = dispatch.resolve_name("adamw_update", impl, shape=shape)
+    opts = _merge_tuned("adamw_update", name, shape, opts)
+    return dispatch.lookup("adamw_update", name)(
+        g, m, v, w, wlo, lr, b1, b2, bc1, bc2, eps=eps, wd=wd, **opts)

@@ -35,6 +35,13 @@ Array = jnp.ndarray
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
 _DEFAULTS: Dict[str, Dict[str, str]] = {}     # op -> {backend|"*": impl}
 
+# static fallback order for a "tuned_accurate" request on an untuned shape
+# bucket (see resolve_name): per-op, first registered name wins
+_ACCURATE_FALLBACK: Dict[str, Tuple[str, ...]] = {
+    "matmul": ("f64", "ozaki", "dot2"),
+    "add": ("accurate",),
+}
+
 
 def backend() -> str:
     """The JAX backend the dispatcher routes for ("cpu", "tpu", "gpu")."""
@@ -95,13 +102,13 @@ def resolve_name(op: str, impl: Optional[str] = None,
             name = None   # stale/foreign sidecar must never break dispatch
         # an explicit accurate-tier request must NEVER degrade to the fast
         # class just because the shape bucket is untuned — fall back to the
-        # static accurate-tier default: "f64" resolves to one native dgemm
-        # where the hardware has f64 and degrades to the fused Ozaki kernel
-        # on TPU, so it is the right fallback wherever it is registered
+        # static accurate-tier default (per-op: e.g. matmul's "f64"
+        # resolves to one native dgemm where the hardware has f64 and
+        # degrades to the fused Ozaki kernel on TPU)
         if name is None and accurate:
             reg = _REGISTRY.get(op, {})
-            name = next((c for c in ("f64", "ozaki", "dot2") if c in reg),
-                        None)
+            name = next((c for c in _ACCURATE_FALLBACK.get(op, ())
+                         if c in reg), None)
     if name is None and shape is not None:
         from repro.ff import tuning as _tune
         name = _tune.lookup_impl(op, shape)
@@ -146,6 +153,16 @@ def _interpret(flag: Optional[bool]) -> bool:
     return (backend() != "tpu") if flag is None else flag
 
 
+def _fallback_warn(impl: str, op: str, why: str) -> None:
+    """A kernel impl substituting its jnp formulation must say so: tuned
+    winners/defaults must never brick a call, but an EXPLICIT impl=
+    request landing here would otherwise silently validate or benchmark
+    the wrong kernel.  Fires once per trace (Python-level warn)."""
+    import warnings
+    warnings.warn(f"ff.{op}(impl={impl!r}): {why}; falling back to the "
+                  f"jnp formulation", stacklevel=3)
+
+
 def _as_ff(x) -> FF:
     if isinstance(x, FF):
         return x
@@ -154,7 +171,7 @@ def _as_ff(x) -> FF:
 
 # -- elementwise add/mul/div/sqrt -------------------------------------------
 
-def _add_jnp(a, b) -> FF:
+def _add_jnp(a, b, **_kw) -> FF:
     if isinstance(a, FF) and not isinstance(b, FF):
         return core_ff.add212(a, jnp.asarray(b, jnp.float32))
     if isinstance(b, FF) and not isinstance(a, FF):
@@ -162,11 +179,11 @@ def _add_jnp(a, b) -> FF:
     return core_ff.add22(_as_ff(a), _as_ff(b))
 
 
-def _add_accurate(a, b) -> FF:
+def _add_accurate(a, b, **_kw) -> FF:
     return core_ff.add22_accurate(_as_ff(a), _as_ff(b))
 
 
-def _mul_jnp(a, b) -> FF:
+def _mul_jnp(a, b, **_kw) -> FF:
     if isinstance(a, FF) and not isinstance(b, FF):
         return core_ff.mul212(a, jnp.asarray(b, jnp.float32))
     if isinstance(b, FF) and not isinstance(a, FF):
@@ -174,36 +191,56 @@ def _mul_jnp(a, b) -> FF:
     return core_ff.mul22(_as_ff(a), _as_ff(b))
 
 
+def _ew_block(block) -> tuple:
+    from repro.kernels import ff_elementwise
+    return tuple(block) if block else ff_elementwise.DEFAULT_BLOCK
+
+
 def _elementwise_pallas(op22):
-    def fn(a, b, *, interpret: Optional[bool] = None) -> FF:
+    def fn(a, b, *, block=None, interpret: Optional[bool] = None,
+           **_kw) -> FF:
         from repro.kernels import ff_elementwise
         af, bf = _as_ff(a), _as_ff(b)
         rh, rl = ff_elementwise.elementwise(
-            op22, af.hi, af.lo, bf.hi, bf.lo, interpret=_interpret(interpret))
+            op22, af.hi, af.lo, bf.hi, bf.lo, block=_ew_block(block),
+            interpret=_interpret(interpret))
         return FF(rh, rl)
     return fn
 
 
-def _div_jnp(a, b) -> FF:
+def _div_jnp(a, b, **_kw) -> FF:
     return core_ff.div22(_as_ff(a), _as_ff(b))
 
 
-def _sqrt_jnp(a) -> FF:
+def _sqrt_jnp(a, **_kw) -> FF:
     return core_ff.sqrt22(_as_ff(a))
+
+
+def _sqrt_pallas(a, *, block=None, interpret: Optional[bool] = None,
+                 **_kw) -> FF:
+    from repro.kernels import ff_elementwise
+    af = _as_ff(a)
+    rh, rl = ff_elementwise.elementwise(
+        "sqrt22", af.hi, af.lo, block=_ew_block(block),
+        interpret=_interpret(interpret))
+    return FF(rh, rl)
 
 
 # Elementwise default is jnp on EVERY backend: a 4-20 flop FF op fuses into
 # the surrounding XLA graph, while a standalone pallas_call pads operands to
 # (8,128) tiles and breaks fusion — Pallas only wins where a kernel owns a
-# loop (matmul/rowsum below).  The pallas impls stay registered for
-# validation and for fused-kernel callers that want them explicitly.
+# loop (matmul/rowsum below) or a whole CHAIN of FF ops rides one launch
+# (ff.fused / the composite kernels below).  The per-op pallas impls stay
+# registered for validation and for explicit callers.
 register("add", "jnp", _add_jnp, default_for=("*",))
 register("add", "accurate", _add_accurate)
 register("add", "pallas", _elementwise_pallas("add22"))
 register("mul", "jnp", _mul_jnp, default_for=("*",))
 register("mul", "pallas", _elementwise_pallas("mul22"))
 register("div", "jnp", _div_jnp, default_for=("*",))
+register("div", "pallas", _elementwise_pallas("div22"))
 register("sqrt", "jnp", _sqrt_jnp, default_for=("*",))
+register("sqrt", "pallas", _sqrt_pallas)
 
 
 # -- EFTs (f32, f32) -> FF ---------------------------------------------------
@@ -349,17 +386,24 @@ def _sum_cascade(x: Array, axis=None, **_kw) -> FF:
 def _sum_pallas_rowsum(x: Array, axis=None, *, br: int = 256, bc: int = 512,
                        lane: int = 128,
                        interpret: Optional[bool] = None, **_kw) -> FF:
-    """Pallas row-reduction kernel: 2-D input, last axis only."""
+    """Pallas row-reduction kernel over the last axis.  ND inputs flatten
+    to (prod(leading), last) — the real call sites are 3-D/4-D
+    activations and must actually reach the kernel.  Non-last axes fall
+    back to the blocked jnp impl: this name can be a TUNED default for a
+    shape bucket, and a tuned winner must never brick a call."""
     from repro.kernels import ff_reduce
     if isinstance(axis, tuple) and len(axis) == 1:
         axis = axis[0]
-    if x.ndim != 2 or axis not in (-1, 1):
-        raise ValueError(
-            f"pallas_rowsum needs a 2-D input reduced over the last axis, "
-            f"got shape {x.shape}, axis {axis}")
-    hi, lo = ff_reduce.ff_rowsum(x, br=br, bc=bc, lane=lane,
+    if x.ndim < 1 or axis not in (-1, x.ndim - 1):
+        _fallback_warn("pallas_rowsum", "sum",
+                       f"axis {axis} of a {x.ndim}-D input is not a "
+                       f"last-axis row reduction")
+        return _sum_blocked(x, axis=axis)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]) if x.ndim != 2 else x
+    hi, lo = ff_reduce.ff_rowsum(x2, br=br, bc=bc, lane=lane,
                                  interpret=_interpret(interpret))
-    return FF(hi, lo)
+    return FF(hi.reshape(lead), lo.reshape(lead))
 
 
 def _dot_jnp(a: Array, b: Array, axis=None, **_kw) -> FF:
@@ -387,9 +431,199 @@ def _logsumexp_jnp(x: Array, axis: int = -1, *, block: int = 256, **_kw):
     return jnp.squeeze(m, axis=axis) + jnp.log(s.to_f32())
 
 
+def _last_axis_fusable(x: Array, axis: int) -> bool:
+    """Whether the whole-row composite kernels apply: last-axis reduction
+    with the row fitting the VMEM budget (see ff_fused.MAX_FUSED_COLS)."""
+    from repro.kernels import ff_fused
+    return (x.ndim >= 1 and axis in (-1, x.ndim - 1)
+            and x.shape[-1] <= ff_fused.MAX_FUSED_COLS)
+
+
+def _logsumexp_pallas(x: Array, axis: int = -1, *, br: int = 256,
+                      interpret: Optional[bool] = None, **_kw):
+    """One-kernel max + exp + compensated sum + log (whole row in VMEM).
+    Registered as the TPU default, so it must never brick a call it cannot
+    serve: non-last axes / over-long rows fall back to the jnp impl."""
+    x = jnp.asarray(x, jnp.float32)
+    if not _last_axis_fusable(x, axis):
+        _fallback_warn("pallas", "logsumexp",
+                       "not a last-axis reduction within MAX_FUSED_COLS")
+        return _logsumexp_jnp(x, axis=axis)
+    from repro.kernels import ff_fused
+    return ff_fused.ff_softmax(x, mode="logsumexp", br=br,
+                               interpret=_interpret(interpret))
+
+
+import functools as _ft
+
+
+@_ft.partial(jax.jit, static_argnames=("axis",))
+def _sum_f64_axis(e: Array, axis: int) -> Array:
+    """Exp-sum at native f64 (the matmul_f64 corollary for reductions):
+    on hardware WITH f64 units one wide sum reaches ~2^-53-per-step
+    accuracy — past FF quality — at naive-sum speed.  Scoped exactly like
+    ``ffmatmul._matmul_f64_jit`` (trace-local enable_x64 behind a nested
+    jit boundary; see its docstring for why the boundary is load-bearing
+    — and module-level like it, so eager callers hit the jit cache
+    instead of recompiling per call)."""
+    import jax.experimental
+    from jax import lax
+
+    with jax.experimental.enable_x64():
+        s = jnp.sum(lax.convert_element_type(e, jnp.float64), axis=axis)
+        return lax.convert_element_type(s, jnp.float32)
+
+
+def _logsumexp_f64(x: Array, axis: int = -1, **_kw):
+    """Compensated-quality LSE via a native-f64 exp-sum (CPU default).
+    Like matmul's "f64", the name means "f64-quality the fastest way this
+    hardware can": TPU has no f64 unit, so it degrades to the fused
+    Pallas kernel there."""
+    if backend() == "tpu":
+        return _logsumexp_pallas(x, axis=axis)
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return jnp.squeeze(m, axis=axis) + jnp.log(_sum_f64_axis(e, axis))
+
+
+def _softmax_f64(x: Array, axis: int = -1, **_kw):
+    """Compensated-quality softmax via a native-f64 denominator; degrades
+    to the fused Pallas kernel on TPU (see _logsumexp_f64)."""
+    if backend() == "tpu":
+        return _softmax_pallas(x, axis=axis)
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    s = _sum_f64_axis(e, axis)
+    return e / jnp.expand_dims(s, axis % x.ndim)
+
+
 register("sum", "blocked", _sum_blocked, default_for=("*",))
 register("sum", "cascade", _sum_cascade)
 register("sum", "pallas_rowsum", _sum_pallas_rowsum)
 register("dot", "jnp", _dot_jnp, default_for=("*",))
 register("mean", "jnp", _mean_jnp, default_for=("*",))
+# per-backend resolution like every other op: jnp is the generic default,
+# the fused Pallas kernel takes over where it is compiled (TPU), and the
+# native-f64 reduction where the hardware has f64 units (CPU) — the old
+# blanket default_for=("*",) left every non-jnp path dead code
 register("logsumexp", "jnp", _logsumexp_jnp, default_for=("*",))
+register("logsumexp", "pallas", _logsumexp_pallas, default_for=("tpu",))
+register("logsumexp", "f64", _logsumexp_f64, default_for=("cpu",))
+
+
+# -- fused composite chains (the hot real-world FF pipelines) ----------------
+#
+# Each composite is ONE dispatch op with a jnp fallback (bitwise-identical
+# to the op-by-op formulation it replaced) and a fused implementation that
+# rides a single kernel launch — compiled Pallas on TPU, the replayed-jnp
+# executor elsewhere (same graph XLA already fuses).  Callers go through
+# the differentiable wrappers in repro.ff.autodiff.
+
+def _softmax_jnp(x: Array, axis: int = -1, *, block: int = 256, **_kw):
+    """Compensated softmax: exp(x - max) / FF-accurate denominator."""
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    s = compensated.ff_sum_blocked(e, axis=axis, block=block)
+    return e / jnp.expand_dims(s.to_f32(), axis % x.ndim)
+
+
+def _softmax_pallas(x: Array, axis: int = -1, *, br: int = 256,
+                    interpret: Optional[bool] = None, **_kw):
+    x = jnp.asarray(x, jnp.float32)
+    if not _last_axis_fusable(x, axis):
+        _fallback_warn("pallas", "softmax",
+                       "not a last-axis reduction within MAX_FUSED_COLS")
+        return _softmax_jnp(x, axis=axis)
+    from repro.kernels import ff_fused
+    return ff_fused.ff_softmax(x, mode="softmax", br=br,
+                               interpret=_interpret(interpret))
+
+
+register("softmax", "jnp", _softmax_jnp, default_for=("*",))
+register("softmax", "pallas", _softmax_pallas, default_for=("tpu",))
+register("softmax", "f64", _softmax_f64, default_for=("cpu",))
+
+
+def _adamw_chain(sqrtf, packf, addf, g, m, v, w, wlo,
+                 lr, b1, b2, bc1, bc2, eps, wd):
+    """THE AdamW leaf update — shared verbatim between the jnp impl and
+    the fused tracer so the two can never drift (op order is bitwise-
+    load-bearing: `(1.0 - b2) * g * g` associates left)."""
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    upd = (m2 / bc1) / (sqrtf(v2 / bc2) + eps)
+    upd = upd + wd * w
+    delta = -lr * upd
+    new = addf(packf(w, wlo), delta)        # Add212: FF master += delta
+    return new, m2, v2
+
+
+def _adamw_jnp(g, m, v, w, wlo, lr, b1, b2, bc1, bc2, *,
+               eps: float, wd: float, **_kw):
+    return _adamw_chain(jnp.sqrt, FF, core_ff.add212,
+                        g, m, v, w, wlo, lr, b1, b2, bc1, bc2, eps, wd)
+
+
+def _adamw_fused(g, m, v, w, wlo, lr, b1, b2, bc1, bc2, *,
+                 eps: float, wd: float,
+                 interpret: Optional[bool] = None, **_kw):
+    from repro.ff import fusion
+
+    fn = fusion.fused(lambda *a: _adamw_chain(
+        fusion.sqrt, fusion.pack, (lambda x, y: x + y), *a, eps, wd))
+    return fn(g, m, v, w, wlo, lr, b1, b2, bc1, bc2,
+              interpret=interpret)
+
+
+register("adamw_update", "jnp", _adamw_jnp, default_for=("*",))
+register("adamw_update", "fused", _adamw_fused, default_for=("tpu",))
+
+
+def _mean_sq_jnp(x: Array, *, block: int = 128, **_kw) -> Array:
+    """RMSNorm statistic: compensated mean of squares -> f32."""
+    x = jnp.asarray(x, jnp.float32)
+    return (compensated.ff_sum_blocked(x * x, axis=-1, block=block).to_f32()
+            / x.shape[-1])
+
+
+def _mean_sq_fused(x: Array, *, interpret: Optional[bool] = None,
+                   **_kw) -> Array:
+    from repro.ff import fusion
+
+    x = jnp.asarray(x, jnp.float32)
+    if not _last_axis_fusable(x, -1):
+        _fallback_warn("fused", "mean_sq", "row exceeds MAX_FUSED_COLS")
+        return _mean_sq_jnp(x)
+    fn = fusion.fused(lambda xf: (xf * xf).sum())
+    return fn(x, interpret=interpret).to_f32() / x.shape[-1]
+
+
+register("mean_sq", "jnp", _mean_sq_jnp, default_for=("*",))
+register("mean_sq", "fused", _mean_sq_fused, default_for=("tpu",))
+
+
+def _norm_stats_jnp(x: Array, *, block: int = 128, **_kw):
+    """LayerNorm statistics: compensated mean and centered variance."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[-1]
+    mu = compensated.ff_sum_blocked(x, axis=-1, block=block).to_f32() / n
+    var = compensated.ff_sum_blocked(
+        (x - mu[..., None]) ** 2, axis=-1, block=block).to_f32() / n
+    return mu, var
+
+
+def _norm_stats_pallas(x: Array, *, br: int = 256,
+                       interpret: Optional[bool] = None, **_kw):
+    x = jnp.asarray(x, jnp.float32)
+    if not _last_axis_fusable(x, -1):
+        _fallback_warn("pallas", "norm_stats", "row exceeds MAX_FUSED_COLS")
+        return _norm_stats_jnp(x)
+    from repro.kernels import ff_fused
+    return ff_fused.ff_norm_stats(x, br=br, interpret=_interpret(interpret))
+
+
+register("norm_stats", "jnp", _norm_stats_jnp, default_for=("*",))
+register("norm_stats", "pallas", _norm_stats_pallas, default_for=("tpu",))

@@ -1,0 +1,440 @@
+"""Lazy FF expression fusion: record a chain of elementwise FF ops, compile
+it into ONE kernel.
+
+The paper's per-operator throughput numbers hide the cost that dominates
+real applications (Collange–Daumas–Defour, cs/0703028): *chains* of emulated
+operators.  Dispatched op-by-op, every ``ff.add``/``ff.mul`` is its own
+kernel launch that round-trips both hi/lo planes through HBM — a 20-flop FF
+op pays two full memory sweeps.  This module removes the round-trips:
+
+    import repro.ff as ff
+
+    @ff.fused
+    def axpy(a, x, y):            # a: scalar, x/y: FF — classified per call
+        return a * x + y          # ONE kernel: Mul212 + Add22 in VMEM
+
+    z = axpy(2.0, x, y)           # FF out; hi/lo read once, written once
+
+``fused(fn)`` re-traces ``fn`` with :class:`FFExpr` stand-ins on every call
+(cheap Python; under ``jax.jit`` it happens once per compilation), producing
+a small straight-line program.  The program then runs on the best available
+executor:
+
+  * **Pallas** (compiled on TPU, ``interpret=True`` anywhere): one
+    ``pallas_call`` evaluating the whole chain on VMEM tiles with the
+    branch-free ``repro.kernels.eft`` primitives — each input plane is read
+    from HBM once, intermediates never leave registers/VMEM, outputs are
+    written once.
+  * **jnp** (CPU/GPU default): the same instruction list replayed through
+    ``repro.core`` ops inside the surrounding XLA graph.  This is
+    *bitwise-identical* to the op-by-op ``repro.ff`` dispatch results (same
+    algorithms, same order, same barrier-carrying EFTs) — so tests can
+    assert exact equivalence, and non-TPU backends lose nothing.
+
+Supported ops: ``+ - * /``, ``sqrt``, ``neg``, ``fma``, ``scale``, ``exp``/
+``log`` (f32-valued nodes only), FF limb access (``.hi``/``.lo``), ``pack``
+(build an FF from two f32 nodes), plus ONE optional *trailing* row
+reduction per output (``rowsum`` — compensated Neumaier cascade over the
+last axis, f32-valued nodes only).  Mixed FF/f32 promotion follows the
+dispatch registry exactly: ``ff+f32 -> Add212``, ``ff*f32 -> Mul212``,
+``div`` lifts the f32 side, plain-f32 nodes stay plain f32 (so optimizer
+moment math, for example, is *not* silently promoted to FF).
+
+VMEM budget (how deep can a chain be?): the Pallas executor sizes its
+block so ``planes * br * bc * 4B`` fits in ~4 MiB, where ``planes`` counts
+input planes (2/FF, 1/f32) + output planes + one plane per instruction
+(a safe overestimate of live intermediates).  Deeper chains simply get
+smaller tiles; the grid grows, the HBM traffic does not.  See
+``docs/DESIGN_fusion.md``.
+
+Differentiation: a fused callable is a *forward* kernel with no vjp rule —
+use it inside ``custom_vjp`` ops (as ``adamw_update``/``mean_sq``/
+``norm_stats`` in the dispatch registry do), not under ``jax.grad``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import compensated
+from repro.core import ff as core_ff
+from repro.core.ff import FF
+
+Array = jnp.ndarray
+
+# result planes per value dtype (the VMEM budget unit)
+_PLANES = {"ff": 2, "f32": 1}
+
+
+class Instr(NamedTuple):
+    op: str                  # e.g. "leaf_ff", "add22", "fmul", "rowsum", ...
+    args: Tuple[int, ...]    # ids of input values
+    imm: Optional[float]     # immediate (for "const"; leaf index for leaves)
+    dtype: str               # "ff" | "f32"
+
+
+class Program(NamedTuple):
+    """A traced straight-line FF expression chain."""
+    leaf_kinds: Tuple[str, ...]      # "ff" | "f32" | "scalar" per operand
+    instrs: Tuple[Instr, ...]        # instr i produces value i
+    out_ids: Tuple[int, ...]
+
+    @property
+    def reductions(self) -> Tuple[int, ...]:
+        return tuple(i for i in self.out_ids
+                     if self.instrs[i].op == "rowsum")
+
+    def plane_count(self) -> int:
+        """Upper bound on simultaneously-live full-size VMEM planes per
+        block: every instruction's result — leaves and outputs included,
+        each counted ONCE — held live for the whole kernel.  Values that
+        never occupy a full (br, bc) plane are skipped: rowsums ((br,
+        lane) scratch), consts and scalar leaves ((1, 1) blocks/regs),
+        hi/lo/pack (zero-copy views of already-counted planes); ``lift``
+        allocates only its zero lo plane."""
+        n = 0
+        for ins in self.instrs:
+            op = ins.op
+            if op in ("rowsum", "const", "hi", "lo", "pack"):
+                continue
+            if op in ("leaf_ff", "leaf_f32") \
+                    and self.leaf_kinds[int(ins.imm)] == "scalar":
+                continue
+            n += 1 if op == "lift" else _PLANES[ins.dtype]
+        return max(n, 1)
+
+
+class _Trace:
+    def __init__(self):
+        self.instrs: List[Instr] = []
+
+    def emit(self, op: str, args: Tuple[int, ...] = (),
+             imm: Optional[float] = None, dtype: str = "f32") -> "FFExpr":
+        self.instrs.append(Instr(op, args, imm, dtype))
+        return FFExpr(self, len(self.instrs) - 1, dtype)
+
+
+class FFExpr:
+    """Tracer value inside a ``ff.fused`` function (FF- or f32-typed)."""
+
+    __slots__ = ("_tr", "_id", "dtype")
+
+    def __init__(self, tr: _Trace, vid: int, dtype: str):
+        self._tr = tr
+        self._id = vid
+        self.dtype = dtype
+
+    # -- limb views ----------------------------------------------------------
+    @property
+    def hi(self) -> "FFExpr":
+        if self.dtype != "ff":
+            return self
+        return self._tr.emit("hi", (self._id,), dtype="f32")
+
+    @property
+    def lo(self) -> "FFExpr":
+        if self.dtype != "ff":
+            raise TypeError("f32 expression has no .lo limb")
+        return self._tr.emit("lo", (self._id,), dtype="f32")
+
+    def _node(self, x) -> "FFExpr":
+        if isinstance(x, FFExpr):
+            if x._tr is not self._tr:
+                raise ValueError("mixing FFExpr values from different traces")
+            return x
+        try:
+            return self._tr.emit("const", imm=float(x))
+        except (TypeError, ValueError):
+            raise TypeError(
+                f"fused chains take FFExpr nodes or Python constants, got "
+                f"{type(x).__name__}; pass dynamic values as operands of "
+                f"the fused call") from None
+
+    # -- arithmetic (promotion mirrors repro.ff.dispatch bitwise) ------------
+    def __add__(self, other) -> "FFExpr":
+        b = self._node(other)
+        a = self
+        if a.dtype == "ff" and b.dtype == "ff":
+            return self._tr.emit("add22", (a._id, b._id), dtype="ff")
+        if a.dtype == "ff":
+            return self._tr.emit("add212", (a._id, b._id), dtype="ff")
+        if b.dtype == "ff":
+            return self._tr.emit("add212", (b._id, a._id), dtype="ff")
+        return self._tr.emit("fadd", (a._id, b._id))
+
+    __radd__ = __add__
+
+    def __neg__(self) -> "FFExpr":
+        op = "neg22" if self.dtype == "ff" else "fneg"
+        return self._tr.emit(op, (self._id,), dtype=self.dtype)
+
+    def __sub__(self, other) -> "FFExpr":
+        b = self._node(other)
+        if self.dtype == "f32" and b.dtype == "f32":
+            return self._tr.emit("fsub", (self._id, b._id))
+        return self + (-b)
+
+    def __rsub__(self, other) -> "FFExpr":
+        b = self._node(other)
+        if self.dtype == "f32" and b.dtype == "f32":
+            return self._tr.emit("fsub", (b._id, self._id))
+        return b + (-self)
+
+    def __mul__(self, other) -> "FFExpr":
+        b = self._node(other)
+        a = self
+        if a.dtype == "ff" and b.dtype == "ff":
+            return self._tr.emit("mul22", (a._id, b._id), dtype="ff")
+        if a.dtype == "ff":
+            return self._tr.emit("mul212", (a._id, b._id), dtype="ff")
+        if b.dtype == "ff":
+            return self._tr.emit("mul212", (b._id, a._id), dtype="ff")
+        return self._tr.emit("fmul", (a._id, b._id))
+
+    __rmul__ = __mul__
+
+    def _lift(self) -> "FFExpr":
+        if self.dtype == "ff":
+            return self
+        return self._tr.emit("lift", (self._id,), dtype="ff")
+
+    def __truediv__(self, other) -> "FFExpr":
+        b = self._node(other)
+        if self.dtype == "ff" or b.dtype == "ff":
+            a, b = self._lift(), b._lift()
+            return self._tr.emit("div22", (a._id, b._id), dtype="ff")
+        return self._tr.emit("fdiv", (self._id, b._id))
+
+    def __rtruediv__(self, other) -> "FFExpr":
+        return self._node(other).__truediv__(self)
+
+    # -- trailing reduction --------------------------------------------------
+    def sum(self) -> "FFExpr":
+        """Compensated row-sum over the LAST axis -> FF per row.  Must be
+        returned directly (trailing); f32-valued nodes only — take ``.hi``
+        of an FF chain first (or restructure) if you need to reduce one."""
+        if self.dtype == "ff":
+            raise TypeError(
+                "rowsum reduces f32-valued nodes (the op-by-op analogue "
+                "ff.sum takes an f32 array); reduce .hi or restructure")
+        return self._tr.emit("rowsum", (self._id,), dtype="ff")
+
+
+# -- free-function helpers over tracer nodes ---------------------------------
+
+def sqrt(x: FFExpr) -> FFExpr:
+    op = "sqrt22" if x.dtype == "ff" else "fsqrt"
+    return x._tr.emit(op, (x._id,), dtype=x.dtype)
+
+
+def exp(x: FFExpr) -> FFExpr:
+    if x.dtype == "ff":
+        raise TypeError("exp is f32-valued only")
+    return x._tr.emit("fexp", (x._id,))
+
+
+def log(x: FFExpr) -> FFExpr:
+    if x.dtype == "ff":
+        raise TypeError("log is f32-valued only")
+    return x._tr.emit("flog", (x._id,))
+
+
+def fma(a: FFExpr, b: FFExpr, c: FFExpr) -> FFExpr:
+    """a*b + c with ONE renormalization (core fma22) when any node is FF."""
+    tr = a._tr
+    b, c = a._node(b), a._node(c)
+    if a.dtype == b.dtype == c.dtype == "f32":
+        return a * b + c
+    a, b, c = a._lift(), b._lift(), c._lift()
+    return tr.emit("fma22", (a._id, b._id, c._id), dtype="ff")
+
+
+def scale(a: FFExpr, s) -> FFExpr:
+    """a * s for an f32/scalar s (Mul212 when a is FF)."""
+    return a * (a._node(s))
+
+
+def pack(h: FFExpr, l: FFExpr) -> FFExpr:
+    """Assemble an FF value from two f32 nodes (e.g. master hi/lo planes)."""
+    if h.dtype != "f32" or l.dtype != "f32":
+        raise TypeError("pack takes two f32 nodes")
+    return h._tr.emit("pack", (h._id, l._id), dtype="ff")
+
+
+def rowsum(x: FFExpr) -> FFExpr:
+    return x.sum()
+
+
+# ---------------------------------------------------------------------------
+# tracing + execution
+# ---------------------------------------------------------------------------
+
+def _classify(x) -> str:
+    if isinstance(x, FF):
+        return "ff"
+    a = jnp.shape(x)
+    return "scalar" if a == () else "f32"
+
+
+def trace(fn: Callable, kinds: Sequence[str]) -> Tuple[Program, Any]:
+    """Trace ``fn`` over leaves of the given kinds.  Returns the program and
+    the output *structure* (nested tuples mirroring fn's return value, with
+    value ids at the leaves)."""
+    tr = _Trace()
+    leaves = []
+    for k, kind in enumerate(kinds):
+        dtype = "ff" if kind == "ff" else "f32"
+        leaves.append(tr.emit(f"leaf_{'ff' if kind == 'ff' else 'f32'}",
+                              imm=float(k), dtype=dtype))
+    out = fn(*leaves)
+    flat = out if isinstance(out, (tuple, list)) else (out,)
+    for o in flat:
+        if not isinstance(o, FFExpr):
+            raise TypeError(f"fused fn must return FFExpr nodes, got "
+                            f"{type(o).__name__}")
+        if o._tr is not tr:
+            raise ValueError("fused fn returned a node from another trace")
+    prog = Program(tuple(kinds), tuple(tr.instrs),
+                   tuple(o._id for o in flat))
+    # rowsum nodes must be trailing: nothing may consume them
+    for ins in prog.instrs:
+        for a in ins.args:
+            if prog.instrs[a].op == "rowsum":
+                raise ValueError("rowsum must be a trailing output, not an "
+                                 "input to further ops")
+    return prog, isinstance(out, (tuple, list))
+
+
+def infer_shapes(prog: Program,
+                 operand_shapes: Sequence[Tuple[int, ...]]
+                 ) -> List[Tuple[int, ...]]:
+    """Per-value ND broadcast shape given the call's operand shapes — the
+    shapes the jnp executor produces naturally; the Pallas executor uses
+    them to extract each output from its full-broadcast compute planes."""
+    shapes: List[Tuple[int, ...]] = []
+    for ins in prog.instrs:
+        op, args = ins.op, ins.args
+        if op in ("leaf_ff", "leaf_f32"):
+            s = tuple(operand_shapes[int(ins.imm)])
+        elif op == "const":
+            s = ()
+        elif op == "rowsum":
+            s = shapes[args[0]][:-1]
+        elif len(args) == 1:
+            s = shapes[args[0]]
+        else:
+            s = tuple(jnp.broadcast_shapes(*(shapes[a] for a in args)))
+        shapes.append(s)
+    return shapes
+
+
+def run_jnp(prog: Program, operands: Sequence[Any]) -> List[Any]:
+    """Replay the program through ``repro.core`` ops — bitwise-identical to
+    op-by-op dispatch (same algorithms, order and barrier-carrying EFTs)."""
+    env: List[Any] = []
+    for ins in prog.instrs:
+        op, args = ins.op, ins.args
+        if op in ("leaf_ff", "leaf_f32"):
+            x = operands[int(ins.imm)]
+            v = x if isinstance(x, FF) else jnp.asarray(x, jnp.float32)
+        elif op == "const":
+            v = jnp.float32(ins.imm)
+        elif op == "fadd":
+            v = env[args[0]] + env[args[1]]
+        elif op == "fsub":
+            v = env[args[0]] - env[args[1]]
+        elif op == "fmul":
+            v = env[args[0]] * env[args[1]]
+        elif op == "fdiv":
+            v = env[args[0]] / env[args[1]]
+        elif op == "fneg":
+            v = -env[args[0]]
+        elif op == "fsqrt":
+            v = jnp.sqrt(env[args[0]])
+        elif op == "fexp":
+            v = jnp.exp(env[args[0]])
+        elif op == "flog":
+            v = jnp.log(env[args[0]])
+        elif op == "add22":
+            v = core_ff.add22(env[args[0]], env[args[1]])
+        elif op == "add212":
+            v = core_ff.add212(env[args[0]], env[args[1]])
+        elif op == "mul22":
+            v = core_ff.mul22(env[args[0]], env[args[1]])
+        elif op == "mul212":
+            v = core_ff.mul212(env[args[0]], env[args[1]])
+        elif op == "div22":
+            v = core_ff.div22(env[args[0]], env[args[1]])
+        elif op == "sqrt22":
+            v = core_ff.sqrt22(env[args[0]])
+        elif op == "fma22":
+            v = core_ff.fma22(env[args[0]], env[args[1]], env[args[2]])
+        elif op == "neg22":
+            v = -env[args[0]]
+        elif op == "lift":
+            x = env[args[0]]
+            v = FF(x, jnp.zeros_like(x))
+        elif op == "hi":
+            v = env[args[0]].hi
+        elif op == "lo":
+            v = env[args[0]].lo
+        elif op == "pack":
+            v = FF(env[args[0]], env[args[1]])
+        elif op == "rowsum":
+            # block=128 matches the op-by-op reference exactly:
+            # ff.sum(x, axis=-1, block=128) -> ff_sum_blocked
+            v = compensated.ff_sum_blocked(env[args[0]], axis=-1, block=128)
+        else:                                          # pragma: no cover
+            raise NotImplementedError(op)
+        env.append(v)
+    return [env[i] for i in prog.out_ids]
+
+
+class FusedFn:
+    """A fused FF expression pipeline (see module docstring)."""
+
+    def __init__(self, fn: Callable, *, interpret: Optional[bool] = None,
+                 block: Optional[Tuple[int, int]] = None):
+        self._fn = fn
+        self._interpret = interpret
+        self._block = block
+        self.__doc__ = fn.__doc__
+        self.__name__ = getattr(fn, "__name__", "fused")
+
+    def __call__(self, *operands, interpret: Optional[bool] = None,
+                 block: Optional[Tuple[int, int]] = None):
+        from repro.ff import dispatch
+
+        interpret = self._interpret if interpret is None else interpret
+        block = block or self._block
+        kinds = tuple(_classify(x) for x in operands)
+        prog, multi = trace(self._fn, kinds)
+        use_pallas = interpret is True or (
+            dispatch.backend() == "tpu" and interpret is not False)
+        if use_pallas:
+            from repro.kernels import ff_fused
+            outs = ff_fused.run_pallas(prog, operands, block=block,
+                                       interpret=bool(interpret))
+        else:
+            outs = run_jnp(prog, operands)
+        return tuple(outs) if multi else outs[0]
+
+    def program(self, *operands) -> Program:
+        """The program this call signature would trace (introspection)."""
+        return trace(self._fn, tuple(_classify(x) for x in operands))[0]
+
+
+def fused(fn: Optional[Callable] = None, *,
+          interpret: Optional[bool] = None,
+          block: Optional[Tuple[int, int]] = None):
+    """Decorator: compile an FF elementwise chain into one kernel.
+
+    ``interpret``: None (auto — compiled Pallas on TPU, jnp elsewhere),
+    True (Pallas interpret mode anywhere — validation), False (force jnp).
+    ``block``: Pallas tile override; default is VMEM-budget derived.
+    """
+    if fn is None:
+        return lambda f: FusedFn(f, interpret=interpret, block=block)
+    return FusedFn(fn, interpret=interpret, block=block)

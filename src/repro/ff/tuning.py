@@ -60,6 +60,20 @@ ACCURACY_CLASS: Dict[str, str] = {
                             # degrades to the ozaki kernel on TPU
 }
 
+# per-op accuracy tiers beyond matmul.  Elementwise/reduction impls are all
+# paper-quality (the equivalence tests pin them to the op-by-op reference),
+# with one exception: sloppy Add22 has an unbounded relative bound under
+# cancellation, so only the "accurate" variant is in the accurate tier.
+_OP_ACCURACY: Dict[str, Dict[str, str]] = {
+    "matmul": ACCURACY_CLASS,
+    "add": {"jnp": "fast", "pallas": "fast", "accurate": "accurate"},
+}
+
+
+def accuracy_class(op: str, impl: str) -> str:
+    return _OP_ACCURACY.get(op, {}).get(impl, "accurate")
+
+
 # block configurations swept per impl (matmul).  Keep small: tune cost is
 # len(configs) * reps matmuls per impl per shape bucket.
 SWEEP_CONFIGS: Dict[str, List[dict]] = {
@@ -73,6 +87,120 @@ SWEEP_CONFIGS: Dict[str, List[dict]] = {
     "pallas_hybrid": [{"bk": 512}],
     "pallas_dot2": [{}],
     "pallas_ozaki": [{"bk": 512}],
+}
+
+# which impls may be crowned the FAST (default-overriding) winner, per op.
+# A tuned default silently replacing the static default must stay inside
+# the op's documented bit contract: for "sum" (an FF-OUTPUT op whose lo
+# limbs are reproducibility-sensitive), blocked and pallas_rowsum agree
+# to the final-ulp reduction contract, but "cascade" is a different
+# summation order kept for explicit use — crowning it would make result
+# bits depend on whether a shape falls in a tuned bucket; for "add", the
+# sloppy jnp/pallas pair is bitwise-identical while "accurate" is a
+# different algorithm (it keeps its accurate-tier record instead).
+# Ops absent here allow any timed impl: matmul's long-standing contract,
+# and the f32-output composites (softmax/logsumexp/mean_sq/norm_stats),
+# whose registered impls are mutually bounded by the documented <=2-ulp
+# cross-impl contract (tests/test_fusion.py pins it) — within that band
+# the measured-fastest impl is exactly what the tuner exists to pick.
+_FAST_ELIGIBLE: Dict[str, Tuple[str, ...]] = {
+    "sum": ("blocked", "pallas_rowsum"),
+    "add": ("jnp", "pallas"),
+}
+
+# elementwise/reduction family: block-shape sweeps per (op, impl).  Sweeps
+# only cover knobs that cannot change RESULT BITS (tile shapes never alter
+# the lane-cascade order; the jnp reduction "block" knob would, so it is
+# deliberately NOT swept — tuned numerics must equal untuned numerics).
+_EW_BLOCKS = [{"block": (128, 512)}, {"block": (256, 512)},
+              {"block": (512, 512)}]
+_ROW_BLOCKS = [{"br": 128}, {"br": 256}]
+SWEEP_CONFIGS_BY_OP: Dict[str, Dict[str, List[dict]]] = {
+    "matmul": SWEEP_CONFIGS,
+    "add": {"pallas": _EW_BLOCKS},
+    "mul": {"pallas": _EW_BLOCKS},
+    "div": {"pallas": _EW_BLOCKS},
+    "sqrt": {"pallas": _EW_BLOCKS},
+    "sum": {"pallas_rowsum": [{"br": 256, "bc": 512},
+                              {"br": 512, "bc": 512}]},
+    "logsumexp": {"pallas": _ROW_BLOCKS},
+    "softmax": {"pallas": _ROW_BLOCKS},
+    "norm_stats": {"pallas": _ROW_BLOCKS},
+}
+
+
+def _sweep(op: str, impl: str) -> List[dict]:
+    return SWEEP_CONFIGS_BY_OP.get(op, {}).get(impl, [{}])
+
+
+# -- per-op benchmark operand builders ---------------------------------------
+# Each returns (args, static_kw) for a bucket's dims; ops absent here
+# cannot be tuned.  Elementwise/reduction ops take 2-D (R, C) shapes.
+
+def _ff_pair(rng, shape, positive=False):
+    import jax.numpy as jnp
+    from repro.core.ff import FF
+    h = rng.standard_normal(shape).astype(np.float32)
+    if positive:
+        h = np.abs(h) + 0.5
+    lo = (h * 1e-8 * rng.standard_normal(shape)).astype(np.float32)
+    return FF(jnp.asarray(h), jnp.asarray(lo))
+
+
+def _f32(rng, shape):
+    import jax.numpy as jnp
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def _args_matmul(rng, dims):
+    M, K, N = dims
+    return (_f32(rng, (M, K)), _f32(rng, (K, N))), {}
+
+
+def _args_ew2(positive=False):
+    def mk(rng, dims):
+        return (_ff_pair(rng, tuple(dims), positive),
+                _ff_pair(rng, tuple(dims), positive)), {}
+    return mk
+
+
+def _args_ew1(rng, dims):
+    return (_ff_pair(rng, tuple(dims), positive=True),), {}
+
+
+def _args_row(rng, dims):
+    return (_f32(rng, tuple(dims)),), {"axis": -1}
+
+
+def _args_stats(rng, dims):
+    return (_f32(rng, tuple(dims)),), {}
+
+
+def _args_adamw(rng, dims):
+    import jax.numpy as jnp
+    shape = tuple(dims)
+    args = (_f32(rng, shape),                 # g
+            _f32(rng, shape) * 0.1,           # m
+            jnp.abs(_f32(rng, shape)) * 0.01,  # v
+            _f32(rng, shape),                 # w
+            _f32(rng, shape) * 1e-8,          # wlo
+            jnp.float32(1e-3), jnp.float32(0.9), jnp.float32(0.95),
+            jnp.float32(0.1), jnp.float32(0.05))
+    return args, {"eps": 1e-8, "wd": 0.1}
+
+
+_TUNE_ARGS = {
+    "matmul": _args_matmul,
+    "add": _args_ew2(),
+    "mul": _args_ew2(),
+    "div": _args_ew2(positive=True),
+    "sqrt": _args_ew1,
+    "sum": _args_row,
+    "logsumexp": _args_row,
+    "softmax": _args_row,
+    "mean_sq": _args_stats,
+    "norm_stats": _args_stats,
+    "adamw_update": _args_adamw,
 }
 
 _TABLE: Dict[str, dict] = {}     # op -> bucket -> record
@@ -178,6 +306,13 @@ def lookup_impl(op: str, shape: Sequence[int],
     return rec["impl"] if rec else None
 
 
+def _detuple(opts: dict) -> dict:
+    """JSON round-trips tuples as lists; dispatch metas must stay hashable
+    (custom_vjp nondiff args), so block shapes come back as tuples."""
+    return {k: tuple(v) if isinstance(v, list) else v
+            for k, v in opts.items()}
+
+
 def lookup_opts(op: str, impl: str, shape: Sequence[int]) -> dict:
     """Measured-best block config for an impl chosen by name (may be {})."""
     _ensure_loaded()
@@ -185,7 +320,7 @@ def lookup_opts(op: str, impl: str, shape: Sequence[int]) -> dict:
     if rec:
         per = rec.get("impls", {}).get(impl)
         if per:
-            return dict(per.get("opts", {}))
+            return _detuple(per.get("opts", {}))
     return {}
 
 
@@ -267,7 +402,7 @@ def _time_candidates(fns: Sequence, args, reps: int,
 
 
 def tune(op: str = "matmul",
-         shapes: Iterable[Shape] = ((128, 512, 128), (128, 4096, 128)),
+         shapes: Optional[Iterable[Sequence[int]]] = None,
          impls: Optional[Sequence[str]] = None,
          reps: int = 5,
          cache: Optional[str] = None,
@@ -275,43 +410,56 @@ def tune(op: str = "matmul",
     """Time registered ``op`` impls x block configs per shape bucket; cache
     and return the winners.  A bucket already in the cache is returned
     without re-timing (the round-trip contract) unless ``force``.
+
+    Tunable op families (one shared shuffled-interleave timing protocol):
+
+      * ``matmul`` — 3-dim ``(M, K, N)`` shapes (PR 2);
+      * elementwise — ``add``/``mul``/``div``/``sqrt``, 2-dim ``(R, C)``;
+      * reductions & fused composites — ``sum``/``logsumexp``/``softmax``/
+        ``mean_sq``/``norm_stats``/``adamw_update``, 2-dim ``(R, C)``.
+
+    Sweeps only cover tile-shape knobs that cannot change result bits
+    (see SWEEP_CONFIGS_BY_OP) — a tuned table can shift where time is
+    spent, never what is computed.
     """
     import jax
-    import jax.numpy as jnp
 
     from repro.ff import dispatch
 
-    if op != "matmul":
-        raise NotImplementedError(f"ff.tune currently tunes 'matmul', not {op!r}")
+    if op not in _TUNE_ARGS:
+        raise NotImplementedError(
+            f"ff.tune has no operand builder for {op!r}; tunable: "
+            f"{tuple(sorted(_TUNE_ARGS))}")
+    if shapes is None:
+        shapes = (((128, 512, 128), (128, 4096, 128)) if op == "matmul"
+                  else ((256, 1024), (4096, 4096)))
     if cache or not _TABLE:
         load(cache)
     store = _bucket_store(op, create=True)
     if impls:
         names = tuple(impls)
     else:
-        # off-TPU the pallas_* impls run in interpret mode — orders of
+        # off-TPU the pallas impls run in interpret mode — orders of
         # magnitude slow by construction, not worth timing
         names = tuple(n for n in dispatch.impls(op)
-                      if _backend() == "tpu" or not n.startswith("pallas_"))
+                      if _backend() == "tpu" or not n.startswith("pallas"))
     rng = np.random.default_rng(0)
 
     for shape in shapes:
-        M, K, N = (int(d) for d in shape)
         key = bucket_key(shape)
         if key in store and not force:
             continue
-        Mb, Kb, Nb = (int(d) for d in key.split("x"))
-        A = jnp.asarray(rng.standard_normal((Mb, Kb)).astype(np.float32))
-        B = jnp.asarray(rng.standard_normal((Kb, Nb)).astype(np.float32))
+        dims = tuple(int(d) for d in key.split("x"))
+        args, static_kw = _TUNE_ARGS[op](rng, dims)
         cands: List[Tuple[str, dict]] = []
         calls = []
         for name in names:
             fn = dispatch.lookup(op, name)
-            for cfg in SWEEP_CONFIGS.get(name, [{}]):
+            for cfg in _sweep(op, name):
                 cands.append((name, dict(cfg)))
                 calls.append(jax.jit(
-                    lambda a, b, fn=fn, cfg=cfg: fn(a, b, **cfg).astuple()))
-        times = _time_candidates(calls, (A, B), reps)
+                    lambda *a, fn=fn, cfg=cfg: fn(*a, **static_kw, **cfg)))
+        times = _time_candidates(calls, args, reps)
         per_impl: Dict[str, dict] = {}
         for (name, cfg), t in zip(cands, times):
             if t is None:
@@ -327,10 +475,15 @@ def tune(op: str = "matmul",
         if not per_impl:
             continue
         rec: Dict[str, dict] = {"impls": per_impl}
-        fast = min(per_impl, key=lambda n: per_impl[n]["us"])
-        rec["fast"] = {"impl": fast, **per_impl[fast]}
+        pool = [n for n in per_impl if n in _FAST_ELIGIBLE.get(op, per_impl)]
+        if pool:
+            fast = min(pool, key=lambda n: per_impl[n]["us"])
+            rec["fast"] = {"impl": fast, **per_impl[fast]}
+        # no eligible impl timed (explicit impls= outside the bit
+        # contract, or every eligible config failed): record timings but
+        # crown NO fast winner — the static default keeps its bits
         acc_names = [n for n in per_impl
-                     if ACCURACY_CLASS.get(n) == "accurate"]
+                     if accuracy_class(op, n) == "accurate"]
         if acc_names:
             acc = min(acc_names, key=lambda n: per_impl[n]["us"])
             rec["accurate"] = {"impl": acc, **per_impl[acc]}

@@ -58,6 +58,49 @@ def mul22(ah, al, bh, bl):
     return fast_two_sum(th, t)
 
 
+def add212(ah, al, b):
+    """FF + f32 on raw limbs (see ``core.ff.add212``)."""
+    sh, sl = two_sum(ah, b)
+    v = sl + al
+    return fast_two_sum(sh, v)
+
+
+def mul212(ah, al, b):
+    """FF * f32 on raw limbs (see ``core.ff.mul212``)."""
+    th, tl = two_prod(ah, b)
+    t = tl + al * b
+    return fast_two_sum(th, t)
+
+
+def div22(ah, al, bh, bl):
+    """FF division on raw limbs (Dekker quotient + one correction,
+    see ``core.ff.div22``): the hardware quotient is only a *seed*."""
+    ch = ah / bh
+    th, tl = two_prod(ch, bh)
+    cl = ((((ah - th) - tl) + al) - ch * bl) / bh
+    return fast_two_sum(ch, cl)
+
+
+def sqrt22(ah, al):
+    """FF square root on raw limbs (one Newton correction of the hardware
+    sqrt, see ``core.ff.sqrt22``)."""
+    ch = jnp.sqrt(ah)
+    th, tl = two_prod(ch, ch)
+    num = ((ah - th) - tl) + al
+    cl = num / (ch + ch)
+    return fast_two_sum(ch, cl)
+
+
+def fma22(ah, al, bh, bl, ch, cl):
+    """a*b + c in FF on raw limbs (one renormalization, see
+    ``core.ff.fma22``)."""
+    th, tl = two_prod(ah, bh)
+    t = tl + (ah * bl + al * bh)
+    sh, sl = two_sum(th, ch)
+    v = sl + (t + cl)
+    return fast_two_sum(sh, v)
+
+
 def pairwise_sum_compensated(p, axis: int, err=None):
     """Pairwise two_sum tree reduction over ``axis`` (see
     ``core.transforms.pairwise_sum_compensated`` for the algorithm) using

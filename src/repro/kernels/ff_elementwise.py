@@ -8,12 +8,18 @@ kept a multiple of 128 (lane width) and rows a multiple of 8 (sublanes).
 Layout note: FF tensors arrive as separate hi/lo arrays (a pytree of two
 f32 planes — the GPU paper used two texture channels; two planes keep each
 plane contiguous and MXU/VPU-friendly).
+
+Broadcasting: operands may be scalars, rows ``(1, C)``, columns ``(R, 1)``
+or full ``(R, C)`` relative to the broadcast output shape.  Broadcast
+operands are NOT materialized: their BlockSpec index map pins the broadcast
+dimension to block 0 and the kernel body relies on jnp broadcasting, so a
+row operand is read once per column-block instead of R times.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +31,9 @@ Array = jnp.ndarray
 
 DEFAULT_BLOCK = (256, 512)  # 256*512*4B = 512 KiB/plane; 6 planes < 4 MiB VMEM
 
+SUBLANE = 8     # f32 second-to-last tile dim
+LANE = 128      # last tile dim
+
 
 def _add22_kernel(ah_ref, al_ref, bh_ref, bl_ref, rh_ref, rl_ref):
     rh, rl = eft.add22(ah_ref[...], al_ref[...], bh_ref[...], bl_ref[...])
@@ -34,6 +43,18 @@ def _add22_kernel(ah_ref, al_ref, bh_ref, bl_ref, rh_ref, rl_ref):
 
 def _mul22_kernel(ah_ref, al_ref, bh_ref, bl_ref, rh_ref, rl_ref):
     rh, rl = eft.mul22(ah_ref[...], al_ref[...], bh_ref[...], bl_ref[...])
+    rh_ref[...] = rh
+    rl_ref[...] = rl
+
+
+def _div22_kernel(ah_ref, al_ref, bh_ref, bl_ref, rh_ref, rl_ref):
+    rh, rl = eft.div22(ah_ref[...], al_ref[...], bh_ref[...], bl_ref[...])
+    rh_ref[...] = rh
+    rl_ref[...] = rl
+
+
+def _sqrt22_kernel(ah_ref, al_ref, rh_ref, rl_ref):
+    rh, rl = eft.sqrt22(ah_ref[...], al_ref[...])
     rh_ref[...] = rh
     rl_ref[...] = rl
 
@@ -53,18 +74,24 @@ def _two_sum_kernel(a_ref, b_ref, s_ref, r_ref):
 _KERNELS = {
     "add22": (_add22_kernel, 4),
     "mul22": (_mul22_kernel, 4),
+    "div22": (_div22_kernel, 4),
+    "sqrt22": (_sqrt22_kernel, 2),
     "two_prod": (_two_prod_kernel, 2),
     "two_sum": (_two_sum_kernel, 2),
 }
 
 
-def _to_2d(x: Array) -> Tuple[Array, Tuple[int, ...]]:
-    shape = x.shape
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _to_2d(x: Array) -> Array:
+    """Flatten to 2-D keeping the last axis (rank-0/1 become 1 x n)."""
     if x.ndim == 0:
-        return x.reshape(1, 1), shape
+        return x.reshape(1, 1)
     if x.ndim == 1:
-        return x.reshape(1, -1), shape
-    return x.reshape(-1, shape[-1]), shape
+        return x.reshape(1, -1)
+    return x.reshape(-1, x.shape[-1])
 
 
 def _pad_to(x: Array, br: int, bc: int) -> Array:
@@ -75,37 +102,106 @@ def _pad_to(x: Array, br: int, bc: int) -> Array:
     return x
 
 
+def pick_block(rows: int, cols: int,
+               block: Tuple[int, int] = DEFAULT_BLOCK) -> Tuple[int, int]:
+    """Clamp the requested block to the (padded) operand extent, rounding
+    rows up to the 8-sublane multiple and cols to the 128-lane multiple —
+    a (3, 130) operand gets an (8, 256) block, never a ragged (3, 130)
+    one that TPU tiling cannot express."""
+    br, bc = block
+    br = min(_round_up(br, SUBLANE), _round_up(max(rows, 1), SUBLANE))
+    bc = min(_round_up(bc, LANE), _round_up(max(cols, 1), LANE))
+    return br, bc
+
+
+def _spec_for(shape: Tuple[int, int], out_shape: Tuple[int, int],
+              br: int, bc: int) -> pl.BlockSpec:
+    """BlockSpec for an operand broadcast against ``out_shape``: broadcast
+    dims use block extent 1 pinned at block 0 (the plane is never tiled —
+    nor materialized — along a dim it broadcasts over)."""
+    r, c = shape
+    R, C = out_shape
+    row_bcast = r == 1 and R != 1
+    col_bcast = c == 1 and C != 1
+    b = (1 if row_bcast else br, 1 if col_bcast else bc)
+    if row_bcast and col_bcast:
+        return pl.BlockSpec(b, lambda i, j: (0, 0))
+    if row_bcast:
+        return pl.BlockSpec(b, lambda i, j: (0, j))
+    if col_bcast:
+        return pl.BlockSpec(b, lambda i, j: (i, 0))
+    return pl.BlockSpec(b, lambda i, j: (i, j))
+
+
+def broadcast_planes(arrays: Sequence[Array]
+                     ) -> Tuple[Tuple[Array, ...], Tuple[int, ...]]:
+    """Flatten operands to 2-D against their common broadcast shape.
+
+    Scalar / row / column operands keep their degenerate extent (the
+    BlockSpec handles them); anything with a non-degenerate partial shape
+    (a genuine rank mismatch like (4, 1, 8) vs (4, 3, 8)) is materialized
+    with ``broadcast_to`` first — correctness over cleverness.
+    """
+    out_shape = jnp.broadcast_shapes(*(a.shape for a in arrays))
+    if len(out_shape) == 0:
+        out2 = (1, 1)
+    elif len(out_shape) == 1:
+        out2 = (1, out_shape[0])
+    else:
+        r = 1
+        for d in out_shape[:-1]:
+            r *= d
+        out2 = (r, out_shape[-1])
+    planes = []
+    for a in arrays:
+        a2 = _to_2d(a)
+        # shapes right-align under broadcasting, so the flattened form is
+        # usable iff each flat dim is the output's or a degenerate 1; a
+        # partial leading-dim broadcast (e.g. (3,8) against (4,3,8) ->
+        # rows 3 vs 12) falls through to materialization
+        if a2.shape[0] not in (1, out2[0]) or a2.shape[1] not in (1, out2[1]):
+            a2 = _to_2d(jnp.broadcast_to(a, out_shape))
+        planes.append(a2)
+    return tuple(planes), out_shape
+
+
 @functools.partial(jax.jit, static_argnames=("op", "block", "interpret"))
 def elementwise(op: str, *arrays: Array,
                 block: Tuple[int, int] = DEFAULT_BLOCK,
                 interpret: bool = False) -> Tuple[Array, Array]:
-    """Run a 2-output elementwise FF kernel over arbitrarily shaped operands.
+    """Run a 2-output elementwise FF kernel over broadcastable operands.
 
-    Operands are flattened to 2-D, padded to block multiples, tiled over a
-    2-D grid, and the outputs un-padded/reshaped back.
+    Operands are flattened to 2-D against the broadcast output shape,
+    padded to (8, 128)-aligned block multiples, tiled over a 2-D grid, and
+    the outputs un-padded/reshaped back.  Scalar/row/column operands stay
+    un-materialized (their BlockSpec pins the broadcast dim).
     """
     kernel, n_in = _KERNELS[op]
     assert len(arrays) == n_in, (op, len(arrays))
     arrays = tuple(jnp.asarray(a, jnp.float32) for a in arrays)
-    a2, orig_shape = _to_2d(arrays[0])
-    rest = [_to_2d(a)[0] for a in arrays[1:]]
-    br, bc = block
-    br = min(br, max(8, a2.shape[0]))
-    bc = min(bc, max(128, a2.shape[1]))
-    padded = [_pad_to(x, br, bc) for x in (a2, *rest)]
-    R, C = padded[0].shape
-    grid = (R // br, C // bc)
-    spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
-    out_shape = jax.ShapeDtypeStruct((R, C), jnp.float32)
+    planes, orig_shape = broadcast_planes(arrays)
+    R = max(p.shape[0] for p in planes)
+    C = max(p.shape[1] for p in planes)
+    br, bc = pick_block(R, C, block)
+    # a plane is broadcast along a dim only when it is degenerate AND the
+    # output is not (an R==1 output's operands are "full": pad them so the
+    # block write shape matches the out block)
+    padded = [_pad_to(p, br if (p.shape[0] == R or R == 1) else 1,
+                      bc if (p.shape[1] == C or C == 1) else 1)
+              for p in planes]
+    Rp, Cp = _round_up(R, br), _round_up(C, bc)
+    grid = (Rp // br, Cp // bc)
+    in_specs = [_spec_for(p.shape, (Rp, Cp), br, bc) for p in padded]
+    out_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    out_shape = jax.ShapeDtypeStruct((Rp, Cp), jnp.float32)
     rh, rl = pl.pallas_call(
         kernel,
         out_shape=(out_shape, out_shape),
         grid=grid,
-        in_specs=[spec] * n_in,
-        out_specs=(spec, spec),
+        in_specs=in_specs,
+        out_specs=(out_spec, out_spec),
         interpret=interpret,
     )(*padded)
-    r, c = a2.shape
-    rh = rh[:r, :c].reshape(orig_shape)
-    rl = rl[:r, :c].reshape(orig_shape)
+    rh = rh[:R, :C].reshape(orig_shape)
+    rl = rl[:R, :C].reshape(orig_shape)
     return rh, rl

@@ -54,8 +54,10 @@ def rms_norm(x: Array, w: Array, eps: float, ff_stats: bool = False) -> Array:
     """
     xf = x.astype(jnp.float32)
     if ff_stats:
-        ms = ff.sum(xf * xf, axis=-1, block=128).to_f32() / x.shape[-1]
-        ms = ms[..., None]
+        # one dispatched composite: x*x never round-trips HBM on TPU
+        # (fused square+compensated-rowsum kernel; jnp impl elsewhere is
+        # bitwise the old ff.sum(xf*xf, block=128)/n formulation)
+        ms = ff.mean_sq(xf)[..., None]
     else:
         ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
     scale = lax.rsqrt(ms + eps).astype(x.dtype)      # (B,S,1), cheap in bf16
@@ -66,9 +68,11 @@ def layer_norm(x: Array, w: Array, b: Array, eps: float,
                ff_stats: bool = False) -> Array:
     xf = x.astype(jnp.float32)
     if ff_stats:
-        n = x.shape[-1]
-        mu = (ff.sum(xf, axis=-1, block=128).to_f32() / n)[..., None]
-        var = (ff.sum((xf - mu) ** 2, axis=-1, block=128).to_f32() / n)[..., None]
+        # both LayerNorm reductions in one dispatched composite (fused
+        # two-pass kernel on TPU reads x from HBM once; the jnp impl is
+        # bitwise the old two ff.sum(block=128) passes)
+        mu, var = ff.norm_stats(xf)
+        mu, var = mu[..., None], var[..., None]
     else:
         mu = jnp.mean(xf, axis=-1, keepdims=True)
         var = jnp.var(xf, axis=-1, keepdims=True)

@@ -68,15 +68,20 @@ class AdamW:
 
         def leaf(g, m, v, w, wlo):
             g = g.astype(jnp.float32)
+            if self.ff:
+                # the whole ~10-op chain (moments, bias correction, decay,
+                # FF master Add212) is ONE dispatched composite — a single
+                # fused kernel launch on TPU, the bitwise-identical jnp
+                # chain elsewhere (see ff.adamw_update / DESIGN_fusion.md)
+                new, m2, v2 = ff_ns.adamw_update(
+                    g, m, v, w, wlo, lr, b1, b2, bc1, bc2,
+                    eps=self.eps, wd=self.weight_decay)
+                return new.hi, new.lo, m2, v2
             m2 = b1 * m + (1.0 - b1) * g
             v2 = b2 * v + (1.0 - b2) * g * g
             upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + self.eps)
             upd = upd + self.weight_decay * w
             delta = (-lr * upd).astype(jnp.float32)
-            if self.ff:
-                # Add22-style: master (hi,lo) += delta, exactly
-                new = ff_ns.add(FF(w, wlo), delta)
-                return new.hi, new.lo, m2, v2
             w2 = w + delta
             return w2, wlo, m2, v2
 
