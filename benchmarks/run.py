@@ -14,9 +14,10 @@ Prints ``name,us_per_call,derived`` CSV per table:
   * optimizer (beyond paper): FF master-weight AdamW cost + the
     f32-stagnation experiment.
 
-Roofline/dry-run tables are separate (they need 512 simulated devices):
+Roofline/dry-run/mesh tables are separate (they need simulated devices):
   PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
   PYTHONPATH=src python -m benchmarks.roofline
+  PYTHONPATH=src python -m benchmarks.table_distributed   # 8-device mesh
 """
 
 import os

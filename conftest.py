@@ -1,0 +1,13 @@
+"""Repo-root conftest: EFT-safe CPU mode for EVERY collected test file,
+including the ``docs/NUMERICS.md`` doctests (which import jax outside
+``tests/``, where ``tests/conftest.py`` does not apply).
+
+XLA:CPU's LLVM backend on AVX2+ contracts mul+add into FMA inside fusions,
+breaking the paper's error-free transformations — the flag must be set
+before the first jax import (see ``core/selfcheck.py``; the 2006 GPUs had
+no FMA either, so this is also the faithful hardware model)."""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_cpu_max_isa" not in _flags:
+    os.environ["XLA_FLAGS"] = ("--xla_cpu_max_isa=SSE4_2 " + _flags).strip()

@@ -1,11 +1,23 @@
 """Quickstart: the unified ``repro.ff`` namespace in 60 seconds.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--smoke]
+
+``--smoke`` (used by the CI examples job) shrinks the demo sizes so the
+whole tour runs in seconds while still exercising every API it shows —
+the snippets here mirror the README/docs and must never drift from them.
 """
+import argparse
 import os
 _f = os.environ.get("XLA_FLAGS", "")
 if "--xla_cpu_max_isa" not in _f:      # EFT-safe CPU mode (core/selfcheck.py)
     os.environ["XLA_FLAGS"] = ("--xla_cpu_max_isa=SSE4_2 " + _f).strip()
+
+_ap = argparse.ArgumentParser()
+_ap.add_argument("--smoke", action="store_true",
+                 help="tiny sizes for CI (same API coverage)")
+SMOKE = _ap.parse_args().smoke
+N_SUM = 1 << 16 if SMOKE else 1 << 20
+K_MM = 512 if SMOKE else 2048
 
 import numpy as np
 import jax
@@ -41,7 +53,7 @@ print(f"x == x, x < y     : {bool((x == x).all())}, {bool((x < y).all())}")
 
 print("\n=== 3. Compensated reductions ===")
 rng = np.random.default_rng(0)
-v = (rng.standard_normal(1 << 20) * 10 ** rng.uniform(-6, 6, 1 << 20)).astype(np.float32)
+v = (rng.standard_normal(N_SUM) * 10 ** rng.uniform(-6, 6, N_SUM)).astype(np.float32)
 naive = float(jnp.sum(jnp.asarray(v)))
 comp = ff.sum(jnp.asarray(v))
 exact = float(np.sum(v.astype(np.float64)))
@@ -49,8 +61,8 @@ print(f"naive f32 sum rel err : {abs(naive - exact) / abs(exact):.2e}")
 print(f"ff.sum rel err        : {abs(float(comp.to_f64()) - exact) / abs(exact):.2e}")
 
 print("\n=== 4. Backend-dispatched FF matmul ===")
-A = rng.standard_normal((64, 2048)).astype(np.float32)
-B = rng.standard_normal((2048, 64)).astype(np.float32)
+A = rng.standard_normal((64, K_MM)).astype(np.float32)
+B = rng.standard_normal((K_MM, 64)).astype(np.float32)
 E = A.astype(np.float64) @ B.astype(np.float64)
 S = np.abs(A.astype(np.float64)) @ np.abs(B.astype(np.float64))
 naive = np.asarray(jnp.asarray(A) @ jnp.asarray(B), np.float64)

@@ -74,6 +74,17 @@ def matmul_compensated(a: Array, b: Array, block_k: int = 512) -> FF:
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
     nb = max(1, -(-K // block_k))
+    if nb == 1:
+        # single K-block: the scan degenerates to add22(zeros, FF(p, 0)),
+        # which is bitwise FF(p, 0) (TwoSum/Fast2Sum with exact zeros) —
+        # skip the fold machinery AND the zero-pad (padding only fed the
+        # block reshape; the unpadded GEMM is the same one-f32-GEMM error
+        # class, though K < block_k callers may see different last-ulp
+        # rounding than the padded formulation produced).  Measured ~40%
+        # of the whole call at (4096, 512, 4096); this is every
+        # K <= block_k call site, and in particular the K-split mesh
+        # shard, whose combine renormalizes anyway.
+        return FF(_dot_f32(a, b), jnp.zeros((M, N), jnp.float32))
     pad = nb * block_k - K
     if pad:
         a = jnp.concatenate([a, jnp.zeros((M, pad), jnp.float32)], axis=1)

@@ -1,1 +1,21 @@
-"""repro.distributed substrate."""
+"""``repro.distributed`` — the SPMD substrate.
+
+Two complementary layers:
+
+* **Sharding rules** (:mod:`repro.distributed.sharding`,
+  :mod:`repro.distributed.act_sharding`): per-tensor-kind parameter /
+  batch / cache partition specs (DP/FSDP + TP + EP + pod axis) and
+  activation sharding constraints — how XLA SPMD lays tensors out.
+* **Mesh-partitioned FF ops** (:mod:`repro.ff.sharded`, routed via
+  ``ff.on_mesh``): how FF *computation* crosses the mesh with compensated
+  cross-device combining instead of naive f32 ``psum``s — see
+  ``docs/DESIGN_sharded.md``.
+"""
+
+from repro.distributed.sharding import (  # noqa: F401
+    batch_shardings, cache_shardings, dp_axes, dp_size, opt_state_shardings,
+    param_shardings, param_spec, tp_size, validate_spec,
+)
+from repro.distributed.act_sharding import (  # noqa: F401
+    activation_sharding, constrain, constrain_hidden,
+)

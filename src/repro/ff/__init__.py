@@ -2,8 +2,9 @@
 
 One numpy-like API surface for the paper's float-float operators, with the
 backend hidden behind a dispatch registry (compiled Pallas on TPU,
-interpret-Pallas or pure-jnp on CPU), ``jax.custom_vjp`` differentiation
-rules for the core ops, and a scoped precision-policy API::
+interpret-Pallas or pure-jnp on CPU, ``shard_map``-partitioned on a device
+mesh), ``jax.custom_vjp`` differentiation rules for the core ops, and
+scoped configuration::
 
     import repro.ff as ff
 
@@ -15,9 +16,21 @@ rules for the core ops, and a scoped precision-policy API::
     with ff.policy("ff_full", matmul="hybrid"):
         loss, grads = jax.value_and_grad(loss_fn)(params)   # scope-aware
 
+    with ff.on_mesh(mesh, axis="data"):
+        C = ff.matmul(A, B)    # K split over the mesh, compensated combine
+
+Scopes (all trace-time, thread-local): :func:`policy` installs a
+``PrecisionPolicy`` level, :func:`use` overrides single ops'
+implementations, :func:`on_mesh` routes the mesh-partitioned tier
+(``repro.ff.sharded``).  :func:`tune` fills the measured-winner table that
+drives default resolution; :func:`render_api_table` renders the registry
+as the ``docs/API.md`` dispatch matrix (CI-checked).
+
 Layering: ``repro.core`` holds the paper's algorithms (the registry
-targets), ``repro.kernels`` the Pallas kernels, and this namespace is the
-only import model/optimizer/training code needs.
+targets), ``repro.kernels`` the Pallas kernels, ``repro.ff.sharded`` the
+mesh tier, and this namespace is the only import model/optimizer/training
+code needs.  Reference: ``docs/API.md`` (ops x impls x backends),
+``docs/NUMERICS.md`` (per-op error contracts, doctested).
 """
 
 from repro.core.ff import (  # noqa: F401
@@ -28,9 +41,10 @@ from repro.core.policy import (  # noqa: F401
 )
 from repro.ff.scope import (  # noqa: F401
     policy, use, current_policy, set_default_policy, resolve_policy,
+    on_mesh, current_mesh,
 )
 from repro.ff.dispatch import (  # noqa: F401
-    backend, register, ops, impls, resolve_name, resolve_opts,
+    backend, register, ops, impls, resolve_name, resolve_opts, mesh_default,
 )
 from repro.ff.tuning import tune  # noqa: F401
 from repro.ff import tuning  # noqa: F401
@@ -41,20 +55,28 @@ from repro.ff.autodiff import (  # noqa: F401
 )
 from repro.ff import fusion  # noqa: F401
 from repro.ff.fusion import fused  # noqa: F401
+from repro.ff import sharded  # noqa: F401  (registers the mesh impls)
+from repro.ff.docgen import render_api_table  # noqa: F401
 
 # -- constructors / views (constructor sugar over the FF class) --------------
-from_f32 = FF.from_f32
-from_f64 = FF.from_f64
-zeros = FF.zeros
+from_f32 = FF.from_f32        # f32 array -> FF with zero lo limb (exact)
+from_f64 = FF.from_f64        # wide host value -> FF to ~2^-48 (host only)
+zeros = FF.zeros              # FF of zeros with the given shape
 
 
 def to_f32(x):
-    """Round an FF (or pass through an array) to f32."""
+    """Round an FF to f32 (its ``hi`` limb — already correctly rounded);
+    plain arrays pass through unchanged.
+
+    The boundary from FF results (and FF-structured cotangents) back to
+    plain-f32 code: exact up to the representation's own rounding, never
+    an additional operation."""
     return x.to_f32() if isinstance(x, FF) else x
 
 
 def asff(x) -> FF:
-    """Coerce an array/scalar/FF to FF."""
+    """Coerce an array/scalar/FF to FF (exact: non-FF inputs become the
+    ``hi`` limb with a zero ``lo``)."""
     if isinstance(x, FF):
         return x
     return FF.from_f32(x)

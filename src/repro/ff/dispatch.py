@@ -8,8 +8,15 @@ implementations, and resolution picks one per call site at trace time:
     per-call ``impl=`` kwarg
       > ``ff.use(op=impl)`` scope
       > policy (``PrecisionPolicy.matmul_impl``, for ``matmul``)
+      > mesh default (ops with a registered mesh impl, inside ``ff.on_mesh``)
       > per-backend default registered here
       > first registered implementation
+
+    Resolution is therefore *backend x mesh-context*: the same call site
+    picks the best single-device implementation for the active backend, and
+    — only inside an ``ff.on_mesh`` scope — the ``shard_map``-partitioned
+    implementation from ``repro.ff.sharded``.  Single-device call sites
+    (no mesh scope) never see the mesh tier.
 
 Implementations are plain callables over ``repro.core`` algorithms and
 ``repro.kernels`` Pallas kernels; several are themselves backend-aware
@@ -34,6 +41,7 @@ Array = jnp.ndarray
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
 _DEFAULTS: Dict[str, Dict[str, str]] = {}     # op -> {backend|"*": impl}
+_MESH_DEFAULTS: Dict[str, str] = {}           # op -> impl inside ff.on_mesh
 
 # static fallback order for a "tuned_accurate" request on an untuned shape
 # bucket (see resolve_name): per-op, first registered name wins
@@ -49,16 +57,28 @@ def backend() -> str:
 
 
 def register(op: str, impl: str, fn: Callable, *,
-             default_for: Tuple[str, ...] = ()) -> Callable:
+             default_for: Tuple[str, ...] = (),
+             mesh_default: bool = False) -> Callable:
     """Register ``fn`` as implementation ``impl`` of ``op``.
 
     ``default_for`` lists backends this impl is the default on ("*" = any
-    backend without a more specific default).
+    backend without a more specific default).  ``mesh_default=True`` makes
+    it the default *inside an* ``ff.on_mesh`` *scope* (mesh-context
+    resolution; see module docstring) — outside any mesh scope it is only
+    reachable by explicit ``impl=``/``ff.use`` selection.
     """
     _REGISTRY.setdefault(op, {})[impl] = fn
     for b in default_for:
         _DEFAULTS.setdefault(op, {})[b] = impl
+    if mesh_default:
+        _MESH_DEFAULTS[op] = impl
     return fn
+
+
+def mesh_default(op: str) -> Optional[str]:
+    """The implementation ``op`` resolves to inside ``ff.on_mesh`` scopes
+    (``None`` when the op has no mesh-partitioned implementation)."""
+    return _MESH_DEFAULTS.get(op)
 
 
 def ops() -> Tuple[str, ...]:
@@ -92,6 +112,14 @@ def resolve_name(op: str, impl: Optional[str] = None,
         pol = scope.current_policy().matmul_impl
         if pol and pol != "auto":
             name = pol
+    # mesh-context resolution: inside an ff.on_mesh scope, ops with a
+    # registered mesh impl route to the shard_map tier UNLESS something
+    # more explicit (per-call impl, use() scope, policy) chose otherwise.
+    # Outside any mesh scope this branch never fires — single-device call
+    # sites resolve exactly as before.
+    if name is None and op in _MESH_DEFAULTS \
+            and scope.current_mesh() is not None:
+        name = _MESH_DEFAULTS[op]
     if name in ("tuned", "tuned_accurate"):
         from repro.ff import tuning as _tune
         accurate = name == "tuned_accurate"

@@ -1,0 +1,142 @@
+"""Registry-driven documentation for ``repro.ff`` (``ff.render_api_table``).
+
+The dispatch registry is the single source of truth for which ops exist,
+which implementations each has, and what resolves where (per backend, and
+inside ``ff.on_mesh`` scopes).  ``docs/API.md`` embeds a generated op x
+backend x impl matrix between marker comments; this module renders it FROM
+the registry and checks the document against it, so the reference can never
+silently drift from the code:
+
+    python -m repro.ff.docgen --check docs/API.md    # CI gate (exit 1 on drift)
+    python -m repro.ff.docgen --write docs/API.md    # regenerate in place
+
+``--check`` additionally requires a ``### ff.<op>`` reference section for
+every registered op — a newly registered op fails CI until it is
+documented.  The matrix is built from static registration data only
+(registered names, ``default_for`` backends, mesh defaults), so its content
+is identical on every machine; measured/tuned winners deliberately do not
+appear (they are machine-local — see ``docs/API.md``'s prose).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from typing import List
+
+BEGIN = "<!-- BEGIN GENERATED: ff-api-matrix -->"
+END = "<!-- END GENERATED: ff-api-matrix -->"
+_REGEN = ("<!-- regenerate: python -m repro.ff.docgen --write docs/API.md "
+          "-->")
+
+
+def _summary(op: str) -> str:
+    """First sentence of the public ``repro.ff`` wrapper's docstring for
+    ``op`` (every registered op must have one — a missing public wrapper
+    fails here with AttributeError), capped for table width."""
+    import repro.ff as ff
+
+    doc = (getattr(ff, op).__doc__ or "").strip()
+    para = []
+    for line in doc.splitlines():
+        if not line.strip():
+            break
+        para.append(line.strip())
+    text = " ".join(para)
+    for stop in (". ", ".  "):
+        if stop in text:
+            text = text.split(stop, 1)[0]
+            break
+    text = text.rstrip(".:")
+    return text if len(text) <= 90 else text[:87].rstrip() + "..."
+
+
+def render_api_table() -> str:
+    """The op x backend x impl matrix, rendered from the dispatch registry.
+
+    One row per registered op: its one-line summary (taken from the public
+    wrapper's docstring), every registered implementation name, the static
+    per-backend defaults, and the ``ff.on_mesh`` default.  Returns a
+    markdown table bracketed by the generator markers."""
+    from repro.ff import dispatch
+
+    rows = []
+    for op in dispatch.ops():
+        impls = ", ".join(f"`{n}`" for n in dispatch.impls(op))
+        d = dispatch._DEFAULTS.get(op, {})
+        defaults = ", ".join(
+            f"{b}→`{d[b]}`" for b in sorted(d, key=lambda k: (k == "*", k)))
+        mesh = dispatch.mesh_default(op)
+        rows.append(f"| `ff.{op}` | {_summary(op)} | {impls} | "
+                    f"{defaults or '—'} | {f'`{mesh}`' if mesh else '—'} |")
+    body = "\n".join(rows)
+    return (f"{BEGIN}\n{_REGEN}\n"
+            "| op | summary | implementations | backend defaults "
+            "| `on_mesh` default |\n"
+            "|---|---|---|---|---|\n"
+            f"{body}\n{END}")
+
+
+def check_doc(path: str) -> List[str]:
+    """Consistency problems between ``path`` and the live registry
+    (empty list = the doc is in sync)."""
+    from repro.ff import dispatch
+
+    problems: List[str] = []
+    try:
+        with open(path) as f:
+            text = f.read()
+    except OSError as e:
+        return [f"cannot read {path}: {e}"]
+    m = re.search(re.escape(BEGIN) + r"\n(.*?)" + re.escape(END),
+                  text, re.S)
+    if not m:
+        problems.append(f"{path} has no generated ff-api-matrix block "
+                        f"({BEGIN} ... {END})")
+    elif f"{BEGIN}\n{m.group(1)}{END}" != render_api_table():
+        problems.append(
+            f"the generated matrix in {path} is stale — run "
+            f"`python -m repro.ff.docgen --write {path}`")
+    for op in dispatch.ops():
+        # closing delimiter required: a bare prefix match would let
+        # '### `ff.mean_sq(...)' satisfy the check for 'mean'
+        if not re.search(rf"^### `ff\.{re.escape(op)}\(", text, re.M):
+            problems.append(f"registered op {op!r} has no `### ff.{op}(...)` "
+                            f"reference section in {path}")
+    return problems
+
+
+def write_doc(path: str) -> None:
+    """Replace the generated block in ``path`` with a fresh render."""
+    with open(path) as f:
+        text = f.read()
+    pat = re.compile(re.escape(BEGIN) + r".*?" + re.escape(END), re.S)
+    if not pat.search(text):
+        raise SystemExit(f"{path} has no generated ff-api-matrix block to "
+                         f"replace")
+    with open(path, "w") as f:
+        f.write(pat.sub(lambda _: render_api_table(), text))
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    g = ap.add_mutually_exclusive_group(required=True)
+    g.add_argument("--check", metavar="PATH")
+    g.add_argument("--write", metavar="PATH")
+    args = ap.parse_args(argv)
+    if args.write:
+        write_doc(args.write)
+        print(f"[docgen] wrote ff-api-matrix into {args.write}")
+        return 0
+    problems = check_doc(args.check)
+    for p in problems:
+        print(f"[docgen] FAIL: {p}", file=sys.stderr)
+    if not problems:
+        print(f"[docgen] {args.check} is in sync with the dispatch registry")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

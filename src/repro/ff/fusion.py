@@ -405,6 +405,20 @@ class FusedFn:
 
     def __call__(self, *operands, interpret: Optional[bool] = None,
                  block: Optional[Tuple[int, int]] = None):
+        """Trace the wrapped fn over ``operands`` and run it fused.
+
+        Args:
+          operands: positional leaves — ``FF``, f32 array, or scalar; each
+            is classified per call (scalars stay broadcast immediates).
+          interpret/block: per-call overrides of the decorator options.
+
+        Returns the wrapped fn's structure with ``FFExpr`` leaves realized
+        (FF for ff-typed nodes/rowsums, f32 arrays otherwise).  Error
+        contract: the jnp executor is bitwise-identical to op-by-op
+        dispatch; the Pallas executor matches it exactly for pure
+        elementwise chains and to <=1-2 ulp for reduction-carrying chains
+        (two compensated summation orders — see docs/DESIGN_fusion.md).
+        """
         from repro.ff import dispatch
 
         interpret = self._interpret if interpret is None else interpret
@@ -431,9 +445,23 @@ def fused(fn: Optional[Callable] = None, *,
           block: Optional[Tuple[int, int]] = None):
     """Decorator: compile an FF elementwise chain into one kernel.
 
-    ``interpret``: None (auto — compiled Pallas on TPU, jnp elsewhere),
-    True (Pallas interpret mode anywhere — validation), False (force jnp).
-    ``block``: Pallas tile override; default is VMEM-budget derived.
+    Args:
+      fn: a function over :class:`FFExpr` stand-ins using ``+ - * /``,
+        :func:`sqrt`/:func:`exp`/:func:`log`/:func:`fma`/:func:`scale`/
+        :func:`pack`, limb views ``.hi``/``.lo``, and at most one
+        *trailing* ``.sum()`` row reduction per output (see module
+        docstring for the full op set and FF/f32 promotion rules).
+      interpret: None (auto — compiled Pallas on TPU, jnp elsewhere),
+        True (Pallas interpret mode anywhere — validation), False (force
+        the jnp executor).
+      block: Pallas tile override; default is VMEM-budget derived
+        (``planes * br * bc * 4B <= ~4 MiB``).
+
+    Returns a :class:`FusedFn`: call it with the operands (FF / f32 array
+    / scalar, classified per call); one kernel launch on TPU, the
+    bitwise-identical jnp graph elsewhere.  The result is a forward
+    kernel with no vjp rule — wrap it in a ``custom_vjp`` op (as the
+    dispatch composites do) rather than differentiating through it.
     """
     if fn is None:
         return lambda f: FusedFn(f, interpret=interpret, block=block)

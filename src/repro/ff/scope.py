@@ -30,6 +30,7 @@ class _ScopeState(threading.local):
     def __init__(self):
         self.policies = []      # innermost-last stack of PrecisionPolicy
         self.impls = []         # innermost-last stack of {op: impl_name}
+        self.meshes = []        # innermost-last stack of (mesh, axes) | None
 
 
 _STATE = _ScopeState()
@@ -123,4 +124,60 @@ def current_impl(op: str) -> Optional[str]:
     for m in reversed(_STATE.impls):
         if op in m:
             return m[op]
+    return None
+
+
+class on_mesh:
+    """Context manager establishing the ambient device mesh for FF dispatch.
+
+    Inside the scope, ops with a registered mesh implementation
+    (``matmul``/``sum``/``dot``/``norm_stats`` — see ``repro.ff.sharded``)
+    resolve to their ``shard_map``-partitioned variants, whose cross-device
+    combines preserve the per-op FF error contract instead of flattening to
+    a naive f32 ``psum``.  Call sites outside any ``on_mesh`` scope are
+    completely untouched — mesh routing is a scoped opt-in, exactly like
+    :class:`policy` / :class:`use`::
+
+        mesh = jax.make_mesh((8,), ("data",))
+        with ff.on_mesh(mesh, axis="data"):
+            C = ff.matmul(A, B)                    # K split over "data"
+            C = ff.matmul(A, B, impl="sharded_accurate")   # ppermute tree
+
+    ``axis`` names the mesh axis (or tuple of axes) the contraction /
+    leading dimension is partitioned over.  ``on_mesh(None)`` *disables*
+    mesh routing for an inner region (the sharded implementations use this
+    to resolve their per-shard inner op without re-entering themselves).
+
+    Like every ``repro.ff`` scope this is trace-time Python state: enter it
+    around ``jit``/``grad`` *tracing* (step-builder calls, first call of a
+    jitted function), not around already-compiled calls.  Thread-local.
+    """
+
+    def __init__(self, mesh, axis: Union[str, tuple] = "data"):
+        if mesh is not None:
+            axes = (axis,) if isinstance(axis, str) else tuple(axis)
+            missing = [a for a in axes if a not in mesh.axis_names]
+            if missing:
+                raise ValueError(
+                    f"on_mesh: axis {missing} not in mesh axes "
+                    f"{tuple(mesh.axis_names)}")
+            self._entry = (mesh, axis if isinstance(axis, str) else axes)
+        else:
+            self._entry = None
+
+    def __enter__(self):
+        _STATE.meshes.append(self._entry)
+        return self._entry
+
+    def __exit__(self, *exc):
+        _STATE.meshes.pop()
+        return False
+
+
+def current_mesh():
+    """The innermost active ``on_mesh`` entry: ``(mesh, axis)`` or ``None``
+    (no scope active, or the innermost scope is the ``on_mesh(None)``
+    disabler)."""
+    if _STATE.meshes:
+        return _STATE.meshes[-1]
     return None

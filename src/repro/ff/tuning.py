@@ -58,6 +58,11 @@ ACCURACY_CLASS: Dict[str, str] = {
     "pallas_ozaki": "accurate",
     "f64": "accurate",      # native dgemm where the hardware has f64;
                             # degrades to the ozaki kernel on TPU
+    # mesh tier (repro.ff.sharded): class = inner impl class; the combine
+    # preserves it (tree) or is documented separately (psum) — never timed
+    # by ff.tune (no mesh in the tuning harness), classified for dispatch
+    "sharded": "fast",
+    "sharded_accurate": "accurate",
 }
 
 # per-op accuracy tiers beyond matmul.  Elementwise/reduction impls are all
@@ -411,6 +416,24 @@ def tune(op: str = "matmul",
     and return the winners.  A bucket already in the cache is returned
     without re-timing (the round-trip contract) unless ``force``.
 
+    Args:
+      op: a tunable op name (see the families below).
+      shapes: iterable of shape tuples to bucket and measure (defaults:
+        a small + a large bucket per family).
+      impls: explicit impl names to time (default: every registered impl
+        except interpret-mode pallas off-TPU and the mesh-only sharded
+        tier, which has no mesh here and would mis-measure its fallback).
+      reps: timing repetitions fed to the shared shuffled-interleave
+        protocol (:func:`time_interleaved`).
+      cache: sidecar path override (default ``FF_TUNE.json`` /
+        ``$REPRO_FF_TUNE_CACHE``).
+      force: re-measure buckets already cached.
+
+    Returns ``{"table": <op's buckets>, "cache": <path written>}``.
+    Accuracy is never traded silently: winners are recorded per accuracy
+    class (``fast``/``accurate``) and only ``_FAST_ELIGIBLE`` impls can be
+    crowned the default-overriding fast winner.
+
     Tunable op families (one shared shuffled-interleave timing protocol):
 
       * ``matmul`` — 3-dim ``(M, K, N)`` shapes (PR 2);
@@ -440,9 +463,13 @@ def tune(op: str = "matmul",
         names = tuple(impls)
     else:
         # off-TPU the pallas impls run in interpret mode — orders of
-        # magnitude slow by construction, not worth timing
+        # magnitude slow by construction, not worth timing.  The sharded
+        # (mesh) impls are NEVER auto-timed: the tuning harness has no
+        # ff.on_mesh scope, so they would fall back to (and double-count)
+        # their single-device inner impl.
         names = tuple(n for n in dispatch.impls(op)
-                      if _backend() == "tpu" or not n.startswith("pallas"))
+                      if not n.startswith("sharded")
+                      and (_backend() == "tpu" or not n.startswith("pallas")))
     rng = np.random.default_rng(0)
 
     for shape in shapes:

@@ -20,3 +20,16 @@ def make_local_mesh():
     """1-device mesh with the same axis names (smoke tests / examples)."""
     n = len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_local_data_mesh():
+    """All local devices on the DATA axis (model=1).
+
+    The mesh the ``--mesh`` launchers hand to ``ff.on_mesh``: the FF
+    reductions partition over the data-parallel axis, so on a multi-device
+    host the compensated cross-device combines actually engage
+    (``make_local_mesh`` puts every device on 'model', leaving a size-1
+    data axis — correct for TP layout experiments, inert for the mesh
+    reduction tier)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

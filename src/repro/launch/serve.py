@@ -24,8 +24,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard params over the local device mesh and route "
+                         "the scoring reductions through the mesh-aware FF "
+                         "tier")
     args = ap.parse_args()
 
+    import contextlib
+
+    import repro.ff as ff
     from repro.configs import get_config
     from repro.models import init_params
     from repro.train.serve_step import greedy_generate
@@ -34,6 +41,16 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
+    mesh_scope = contextlib.nullcontext()
+    if args.mesh:
+        from repro.distributed.sharding import param_shardings
+        from repro.launch.mesh import make_local_data_mesh
+        mesh = make_local_data_mesh()
+        params = jax.device_put(params, param_shardings(cfg=cfg, mesh=mesh,
+                                                        params=params))
+        mesh_scope = ff.on_mesh(mesh, axis="data")
+        print(f"[serve] mesh: {dict(mesh.shape)} — params sharded, FF "
+              f"scoring reductions mesh-routed")
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len),
                                 0, cfg.vocab_size)
@@ -45,14 +62,20 @@ def main():
         extra["frames"] = jnp.zeros(
             (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
     t0 = time.perf_counter()
-    toks = greedy_generate(
-        params, cfg, prompt, max_new=args.max_new,
-        cache_len=args.prompt_len + args.max_new + 8
-        + (cfg.num_patches if cfg.family == "vlm" else 0),
-        extra_inputs=extra or None)
+    with mesh_scope:
+        toks, lps = greedy_generate(
+            params, cfg, prompt, max_new=args.max_new,
+            cache_len=args.prompt_len + args.max_new + 8
+            + (cfg.num_patches if cfg.family == "vlm" else 0),
+            extra_inputs=extra or None, return_logprobs=True)
+        # sequence score: compensated FF sum of token logprobs — inside a
+        # --mesh scope this is the mesh-partitioned ff.sum (compensated
+        # cross-device combine); without it, the blocked cascade
+        mean_lp = ff.sum(lps.reshape(-1)).to_f32() / lps.size
     dt = time.perf_counter() - t0
     print(f"[serve] {cfg.name}: generated {toks.shape} in {dt:.1f}s "
-          f"({args.batch * args.max_new / dt:.1f} tok/s)")
+          f"({args.batch * args.max_new / dt:.1f} tok/s), "
+          f"mean token logprob {float(mean_lp):.4f}")
     print(toks[0])
 
 

@@ -32,6 +32,10 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", action="store_true",
+                    help="build the local device mesh and route the step's "
+                         "loss/grad reductions through the mesh-partitioned "
+                         "FF tier (compensated cross-device combines)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -53,11 +57,18 @@ def main():
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"[train] {cfg.name}: {n/1e6:.1f}M params, policy={policy.level}")
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_local_data_mesh
+        mesh = make_local_data_mesh()
+        print(f"[train] mesh: {dict(mesh.shape)} — FF reductions are "
+              f"mesh-partitioned (repro.ff.sharded)")
     opt = AdamW(learning_rate=cosine_schedule(args.lr, 10, args.steps),
                 ff=policy.ff_master_weights)
     opt_state = opt.init(params)
     step_fn = jax.jit(make_train_step(cfg, policy, opt,
-                                      microbatches=args.microbatches),
+                                      microbatches=args.microbatches,
+                                      mesh=mesh),
                       donate_argnums=(0, 1))
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
                                   seq_len=args.seq,

@@ -114,14 +114,36 @@ def global_grad_norm(grads, ff: bool = False) -> Array:
     """Global L2 norm; with ff=True uses compensated accumulation ACROSS
     leaves (per-leaf sums stay plain f32: XLA reduces pairwise, and a
     1-D FF scan over a 7.5e10-element MoE tensor both overflows int32
-    dims and would serialize — measured on deepseek-v2)."""
+    dims and would serialize — measured on deepseek-v2).
+
+    Inside an ``ff.on_mesh`` scope the per-leaf sum-of-squares goes through
+    the mesh-partitioned ``ff.sum`` instead: each device runs the blocked
+    compensated cascade over its shard and the cross-device combine is the
+    compensated ``ppermute`` tree — the grad-norm keeps the FF error
+    contract across the mesh rather than flattening to a naive f32
+    ``psum``.  Leaves keep their ND shape (the sharded sum splits the
+    leading dim — no 1-D flatten, so the int32-dim hazard above never
+    applies) and fall back to the plain per-leaf f32 sum when the mesh
+    axis does not divide their leading dim or the leaf is in the
+    giant-MoE class where the in-shard FF cascade would serialize.
+    """
     leaves = jax.tree_util.tree_leaves(grads)
     if not ff:
         return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
                             for l in leaves))
+    from repro.ff import scope as ff_scope
+    from repro.ff import sharded as ff_sharded
+
+    ctx = ff_scope.current_mesh()
+    nshard = ff_sharded.axis_size(ctx[0], ctx[1]) if ctx is not None else 1
     acc = FF.from_f32(jnp.float32(0))
     for l in leaves:
-        acc = ff_ns.add(acc, jnp.sum(l.astype(jnp.float32) ** 2))
+        if (nshard > 1 and l.ndim >= 1 and l.shape[0] % nshard == 0
+                and l.size < 2 ** 31):
+            sq = l.astype(jnp.float32)
+            acc = ff_ns.add(acc, ff_ns.sum(sq * sq))   # mesh-routed, ND
+        else:
+            acc = ff_ns.add(acc, jnp.sum(l.astype(jnp.float32) ** 2))
     return jnp.sqrt(acc.to_f32())
 
 

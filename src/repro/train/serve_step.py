@@ -37,12 +37,31 @@ def make_decode_step(cfg: ModelConfig,
     return step
 
 
+def token_logprob(logits: Array, token: Array) -> Array:
+    """Log-probability of ``token`` under ``logits`` (B, V) -> (B,).
+
+    The normalizer goes through the compensated ``ff.logsumexp`` — at
+    serving scale the per-token score is a *loss reduction over the vocab
+    axis*, and a naive f32 LSE over a 100k+ vocab loses the very bits the
+    confidence consumer cares about."""
+    import repro.ff as ff
+
+    lse = ff.logsumexp(jnp.asarray(logits, jnp.float32), axis=-1)
+    chosen = jnp.take_along_axis(
+        jnp.asarray(logits, jnp.float32), token[:, None], axis=-1)[:, 0]
+    return chosen - lse
+
+
 def greedy_generate(params, cfg: ModelConfig, prompt: Array, max_new: int,
                     cache_len: int,
                     policy: Optional[PrecisionPolicy] = None,
-                    extra_inputs: Dict[str, Array] | None = None
-                    ) -> Array:
-    """Greedy decoding loop (jit per step).  prompt: (B, S) int32."""
+                    extra_inputs: Dict[str, Array] | None = None,
+                    return_logprobs: bool = False):
+    """Greedy decoding loop (jit per step).  prompt: (B, S) int32.
+
+    ``return_logprobs=True`` additionally returns the (B, max_new) array of
+    chosen-token log-probabilities, scored with the compensated FF
+    log-sum-exp (:func:`token_logprob`)."""
     B, S = prompt.shape
     cache = init_cache(cfg, B, cache_len)
     batch = {"tokens": prompt}
@@ -50,10 +69,17 @@ def greedy_generate(params, cfg: ModelConfig, prompt: Array, max_new: int,
         batch.update(extra_inputs)
     pf = jax.jit(make_prefill_step(cfg, policy))
     dc = jax.jit(make_decode_step(cfg, policy))
+    score = jax.jit(token_logprob)
     logits, cache = pf(params, batch, cache)
     toks = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    lps = [score(logits, toks[-1])] if return_logprobs else None
     pos0 = S + (cfg.num_patches if cfg.family == "vlm" else 0)
     for t in range(max_new - 1):
         logits, cache = dc(params, toks[-1][:, None], jnp.int32(pos0 + t), cache)
         toks.append(jnp.argmax(logits, -1).astype(jnp.int32))
-    return jnp.stack(toks, axis=1)
+        if return_logprobs:
+            lps.append(score(logits, toks[-1]))
+    out = jnp.stack(toks, axis=1)
+    if return_logprobs:
+        return out, jnp.stack(lps, axis=1)
+    return out

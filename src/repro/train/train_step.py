@@ -8,6 +8,7 @@ the standard memory/throughput knob at scale).
 
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -15,8 +16,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.ff import FF
 from repro.core.policy import PrecisionPolicy
-from repro.ff.scope import resolve_policy
+from repro.ff.scope import on_mesh, resolve_policy
 from repro.models import train_forward
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamW, AdamWState, clip_by_global_norm
@@ -24,13 +26,63 @@ from repro.optim.adamw import AdamW, AdamWState, clip_by_global_norm
 Array = jnp.ndarray
 
 
-def make_loss_fn(cfg: ModelConfig, policy: Optional[PrecisionPolicy] = None):
+def _mesh_axes(mesh, mesh_axis):
+    """Data-parallel mesh axes the step's reductions partition over."""
+    if mesh is None:
+        return None
+    if mesh_axis is not None:
+        return mesh_axis
+    from repro.distributed.sharding import dp_axes
+    axes = dp_axes(mesh)
+    return axes or tuple(mesh.axis_names)[:1]
+
+
+def _reduction_scope(mesh, axes, policy: Optional[PrecisionPolicy] = None):
+    """``ff.on_mesh`` scope for the step's LOSS/GRAD reductions only.
+
+    Matmul stays pinned to its single-device resolution inside the scope
+    (the model's compute matmuls are already partitioned by the XLA SPMD
+    layer; re-splitting their K over the data axis would fight it), unless
+    the step's policy names an impl explicitly — so exactly the
+    *reductions* (loss sum, grad-norm, norm stats) cross the mesh through
+    the compensated FF combines."""
+    import repro.ff as ff
+
+    from repro.ff import scope as ff_scope
+
+    @contextlib.contextmanager
+    def scope_cm():
+        if mesh is None:
+            yield
+            return
+        # an ambient user `ff.use(matmul=...)` choice outranks the pin —
+        # the pin only exists to beat the MESH default, not user config
+        user = ff_scope.current_impl("matmul")
+        pol = policy.matmul_impl if policy is not None else \
+            ff.current_policy().matmul_impl
+        pin = user or (pol if pol and pol != "auto" else "tuned")
+        with on_mesh(mesh, axes), ff.use(matmul=pin):
+            yield
+    return scope_cm
+
+
+def make_loss_fn(cfg: ModelConfig, policy: Optional[PrecisionPolicy] = None,
+                 *, mesh=None, mesh_axis=None):
     """policy=None reads the ambient ``repro.ff.policy`` scope (resolved
-    eagerly, at builder time, so the scope only needs to wrap the builder)."""
+    eagerly, at builder time, so the scope only needs to wrap the builder).
+
+    With ``mesh`` (and optionally ``mesh_axis``, default: the mesh's
+    data-parallel axes), the loss-side FF reductions — the chunked-CE
+    ``ff.sum`` and the norm statistics — trace inside an ``ff.on_mesh``
+    scope, partitioning over the mesh with compensated cross-device
+    combines (see ``repro.ff.sharded``).  ``mesh=None`` is bitwise the
+    pre-mesh behavior."""
     policy = resolve_policy(policy)
+    scope_cm = _reduction_scope(mesh, _mesh_axes(mesh, mesh_axis), policy)
 
     def loss_fn(params, batch):
-        loss, metrics = train_forward(params, batch, cfg, policy)
+        with scope_cm():
+            loss, metrics = train_forward(params, batch, cfg, policy)
         return loss, metrics
     return loss_fn
 
@@ -39,14 +91,26 @@ def make_train_step(cfg: ModelConfig,
                     policy: Optional[PrecisionPolicy] = None,
                     optimizer: Optional[AdamW] = None, *,
                     microbatches: int = 1,
-                    clip_norm: Optional[float] = 1.0) -> Callable:
+                    clip_norm: Optional[float] = 1.0,
+                    mesh=None, mesh_axis=None) -> Callable:
+    """Build ``step(params, opt_state, batch) -> (params, opt_state,
+    metrics)``.
+
+    ``mesh``/``mesh_axis`` opt the step's loss and gradient reductions into
+    the mesh-partitioned FF tier (``ff.on_mesh`` around loss tracing and
+    the global grad-norm): cross-device combining then preserves the FF
+    error contract instead of flattening to naive f32 ``psum``s.  The
+    microbatch loss accumulator always uses the compensated FF carry.
+    """
     if optimizer is None:
         raise TypeError("make_train_step requires an optimizer "
                         "(policy is optional — it falls back to the "
                         "ambient ff.policy scope — but the optimizer is not)")
     policy = resolve_policy(policy)
-    loss_fn = make_loss_fn(cfg, policy)
+    axes = _mesh_axes(mesh, mesh_axis)
+    loss_fn = make_loss_fn(cfg, policy, mesh=mesh, mesh_axis=axes)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    scope_cm = _reduction_scope(mesh, axes, policy)
 
     def step(params, opt_state: AdamWState, batch: Dict[str, Array]):
         if microbatches == 1:
@@ -64,19 +128,24 @@ def make_train_step(cfg: ModelConfig,
                 g_acc, l_acc = carry
                 (l, m), g = grad_fn(params, mbatch)
                 g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
-                return (g_acc, l_acc + l), None
+                # compensated loss carry: microbatch losses accumulate in
+                # FF, so long accumulation chains keep the ~2^-44 contract
+                from repro.core.ff import add212
+                return (g_acc, add212(l_acc, l)), None
 
             g0 = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (grads, loss_sum), _ = lax.scan(acc_body, (g0, jnp.float32(0)), mb)
+            (grads, loss_acc), _ = lax.scan(
+                acc_body, (g0, FF.from_f32(jnp.float32(0))), mb)
             grads = jax.tree_util.tree_map(
                 lambda g: g / microbatches, grads)
-            loss = loss_sum / microbatches
+            loss = loss_acc.to_f32() / microbatches
             metrics = {"loss": loss, "aux": jnp.float32(0)}
 
         if clip_norm is not None:
-            grads, gnorm = clip_by_global_norm(
-                grads, clip_norm, ff=policy.ff_reductions)
+            with scope_cm():
+                grads, gnorm = clip_by_global_norm(
+                    grads, clip_norm, ff=policy.ff_reductions)
         else:
             gnorm = jnp.float32(0)
         new_params, new_state = optimizer.update(grads, opt_state, params)

@@ -29,6 +29,10 @@ LOG2_CEILING = {
     "dot2": -44.0, "pallas_dot2": -44.0,
     "ozaki": -44.0, "pallas_ozaki": -44.0,
     "f64": -44.0,   # native dgemm lands ~2^-48; ozaki-kernel bound on TPU
+    # mesh tier: outside an on_mesh scope (this file) these fall back to
+    # the single-device impl of their class, so the class ceiling holds;
+    # the on-mesh bounds are asserted in tests/test_sharded.py
+    "sharded": -18.0, "sharded_accurate": -44.0,
 }
 
 SHAPES = [
