@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV per table:
   * elementwise (beyond paper): fused FF expression pipelines
     (adamw/softmax/logsumexp/norm-stats chains) vs op-by-op streaming;
     emits ``BENCH_elementwise.json``.
+  * math (beyond paper): the ff.math elementary-function tiers vs the
+    hardware builtins vs native f64 (throughput + measured worst error);
+    emits ``BENCH_math.json``.
   * optimizer (beyond paper): FF master-weight AdamW cost + the
     f32-stagnation experiment.
 
@@ -33,7 +36,8 @@ def main() -> None:
     require_eft_safe(strict=False)
 
     from benchmarks import (table_accuracy, table_elementwise,
-                            table_ffmatmul, table_optimizer, table_timing)
+                            table_ffmatmul, table_math, table_optimizer,
+                            table_timing)
     print("# paper Table 3/4 analogue — operator timings")
     table_timing.main()
     print("\n# paper Table 5 analogue — operator accuracy")
@@ -42,6 +46,8 @@ def main() -> None:
     table_ffmatmul.main()
     print("\n# beyond paper — fused FF pipelines vs op-by-op streaming")
     table_elementwise.main()   # default shapes == the committed baseline's
+    print("\n# beyond paper — ff.math elementary functions vs builtins")
+    table_math.main()
     print("\n# beyond paper — FF master-weight optimizer")
     table_optimizer.main()
 

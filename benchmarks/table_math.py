@@ -1,0 +1,233 @@
+"""Beyond-paper table: FF elementary functions vs hardware builtins vs f64.
+
+The paper's companion study (Daumas, Da Graça & Defour) benchmarked GPU
+built-in elementary functions and found them far less accurate than the
+emulated arithmetic; this table reproduces that measurement for the
+``ff.math`` tier on today's backends and prices the fix:
+
+  arm ``ff``    — the compensated FF implementation (``impl="jnp"``:
+                  argument reduction + FF polynomial kernels), jitted.
+  arm ``f32``   — the hardware builtin (``impl="fast"``: one ``jnp.exp``
+                  etc. on the rounded hi limb) — the baseline every FF
+                  pipeline silently drops to without this subsystem.
+  arm ``f64``   — the native-double tier (``impl="f64"``, CPU/GPU; on TPU
+                  it degrades to the FF kernel and the row says so).
+
+Per row: throughput (shared shuffled-interleave protocol,
+``repro.ff.tuning.time_interleaved``), the measured worst relative error
+of each arm vs an f64 oracle (as ``log2``), and the documented contract
+bound.  The accuracy gate is hard — an ``ff`` arm missing its NUMERICS
+contract fails the run, matching the acceptance criterion.  Emits
+``BENCH_math.json``; ``--check-regression`` compares the ``ff``/``f32``
+cost ratio against a committed baseline ratio-wise (machine-portable)
+and re-asserts the accuracy contracts.
+
+Modes:
+  python -m benchmarks.table_math                       # default table
+  python -m benchmarks.table_math --shape 512x512
+  python -m benchmarks.table_math --check-regression BENCH_math.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_cpu_max_isa" not in _flags:
+    os.environ["XLA_FLAGS"] = ("--xla_cpu_max_isa=SSE4_2 " + _flags).strip()
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro.ff as ff
+from repro.core.ff import FF
+
+REGRESSION_FACTOR = 1.5
+# sub-ms rows are dispatch/launch noise, not kernel signal (same floor
+# philosophy as table_elementwise, scaled to elementwise-op cost)
+TIMING_GATE_FLOOR_US = 2000.0
+
+_ERF64 = np.vectorize(math.erf)
+
+# (sampler low/high on the f64 input, oracle, documented ff contract)
+FUNCS: Dict[str, Tuple[Tuple[float, float], object, float]] = {
+    "exp": ((-55.0, 80.0), np.exp, 2.0**-42),
+    "expm1": ((-20.0, 20.0), np.expm1, 2.0**-41),
+    "log": ((math.exp(-50.0), math.exp(50.0)), np.log, 2.0**-42),
+    "log1p": ((-0.29, 10.0), np.log1p, 2.0**-43),
+    "tanh": ((-20.0, 20.0), np.tanh, 2.0**-41),
+    "sigmoid": ((-30.0, 30.0), lambda t: 1 / (1 + np.exp(-t)), 2.0**-42),
+    "erf": ((-6.0, 6.0), _ERF64, 2.0**-42),
+    "gelu": ((-1.0, 20.0), lambda t: 0.5 * t * (1 + _ERF64(t / np.sqrt(2))),
+             2.0**-42),
+    "silu": ((-30.0, 30.0), lambda t: t / (1 + np.exp(-t)), 2.0**-42),
+}
+
+
+def _ff_operand(rng, shape, lo_, hi_):
+    x64 = rng.uniform(lo_, hi_, shape)
+    h = np.float32(x64)
+    l = np.float32(x64 - np.float64(h))
+    return FF(jnp.asarray(h), jnp.asarray(l)), np.float64(h) + np.float64(l)
+
+
+def _measured_err(fn: str, out: FF, xin, oracle) -> float:
+    got = np.float64(np.asarray(out.hi)) + np.float64(np.asarray(out.lo))
+    want = oracle(xin)
+    ok = np.isfinite(want) & (np.abs(want) > 1e-300)
+    err = np.abs(got[ok] - want[ok]) / np.abs(want[ok])
+    return float(err.max()) if err.size else 0.0
+
+
+def run(shape: Tuple[int, int] = (1024, 1024),
+        funcs: Optional[Sequence[str]] = None,
+        reps: int = 5, rounds: int = 7) -> List[Dict]:
+    from repro.ff.tuning import time_interleaved
+
+    rng = np.random.default_rng(0)
+    R, C = shape
+    rows: List[Dict] = []
+    for name in (funcs or FUNCS):
+        (lo_, hi_), oracle, bound = FUNCS[name]
+        x, xin = _ff_operand(rng, (R, C), lo_, hi_)
+        op = getattr(ff, name)
+        arms = {
+            "ff": jax.jit(lambda a, op=op: op(a, impl="jnp")),
+            "f32": jax.jit(lambda a, op=op: op(a, impl="fast")),
+            "f64": jax.jit(lambda a, op=op: op(a, impl="f64")),
+        }
+        res = time_interleaved(list(arms.values()), (x,), reps,
+                               rounds=rounds, sample_target_s=0.05)
+        bad = [a for a, r in zip(arms, res) if r is None]
+        if bad:
+            raise RuntimeError(f"{name} arms failed to run: {bad}")
+        t = {a: r[0] for a, r in zip(arms, res)}
+        errs = {a: _measured_err(name, arms[a](x), xin, oracle)
+                for a in arms}
+        row = {
+            "fn": name, "R": R, "C": C,
+            "us_ff": t["ff"] * 1e6, "us_f32": t["f32"] * 1e6,
+            "us_f64": t["f64"] * 1e6,
+            "cost_ratio": t["ff"] / t["f32"],
+            # informational only — check_regression gates on the
+            # median-normalized us_ff (the f32/f64 arms are few-ms
+            # programs whose wall-clock swings 1.5x+ under load)
+            "ratio_vs_f64": t["ff"] / t["f64"],
+            "log2_err_ff": math.log2(max(errs["ff"], 1e-300)),
+            "log2_err_f32": math.log2(max(errs["f32"], 1e-300)),
+            "log2_err_f64": math.log2(max(errs["f64"], 1e-300)),
+            "log2_bound": math.log2(bound),
+            "backend": ff.backend(),
+            "jax": jax.__version__,
+        }
+        rows.append(row)
+        # hard accuracy gates: the documented contract is the product
+        if errs["ff"] > bound:
+            raise AssertionError(
+                f"ff.{name}: measured 2^{row['log2_err_ff']:.1f} exceeds "
+                f"the documented contract 2^{row['log2_bound']:.1f}")
+        if errs["f32"] < errs["ff"]:
+            raise AssertionError(
+                f"ff.{name}: the f32 builtin out-measured the FF impl — "
+                f"the subsystem's premise is broken")
+    return rows
+
+
+def check_regression(rows: List[Dict], baseline,
+                     factor: float = REGRESSION_FACTOR) -> List[str]:
+    """Per shared (fn, R, C) row: the accuracy contract (hard) and the
+    function's MEDIAN-NORMALIZED ff cost (``us_ff`` divided by the median
+    ``us_ff`` over the shared rows), which must not grow by more than
+    ``factor`` vs the committed baseline.  Only the heavyweight ff arms
+    enter the ratio — they are the one timing signal stable across both
+    load and machines (the f32/f64 arms are few-ms programs whose
+    wall-clock swings 1.5x+ under contention; measured while building
+    this gate).  Catches "one kernel got relatively slower" — the
+    realistic regression for an elementwise family.  Sub-2ms rows skip
+    the timing gate (noise floor)."""
+    if isinstance(baseline, str):
+        with open(baseline) as f:
+            baseline = json.load(f)
+    now = {(r["fn"], r["R"], r["C"]): r for r in rows}
+    then = {(r["fn"], r["R"], r["C"]): r for r in baseline.get("rows", [])}
+    shared = sorted(set(now) & set(then))
+    if not shared:
+        return ["no overlapping (fn, R, C) rows between this run and the "
+                "baseline: the regression gate compared nothing"]
+    import statistics
+    med_now = statistics.median(now[k]["us_ff"] for k in shared)
+    med_then = statistics.median(then[k]["us_ff"] for k in shared)
+    failures = []
+    for key in shared:
+        r_now, r_then = now[key], then[key]
+        tag = f"{key[0]} {key[1]}x{key[2]}"
+        if r_now["log2_err_ff"] > r_now["log2_bound"]:
+            failures.append(
+                f"{tag}: accuracy 2^{r_now['log2_err_ff']:.1f} > contract "
+                f"2^{r_now['log2_bound']:.1f}")
+        if r_now["us_ff"] < TIMING_GATE_FLOOR_US:
+            continue
+        rel_now = r_now["us_ff"] / med_now
+        rel_then = r_then["us_ff"] / med_then
+        if rel_now > rel_then * factor:
+            failures.append(
+                f"{tag}: median-normalized ff cost {rel_now:.2f} vs "
+                f"baseline {rel_then:.2f} (allowed {factor}x growth)")
+    return failures
+
+
+def main(argv: Optional[Sequence[str]] = None,
+         out_json: str = "BENCH_math.json"):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--shape", type=str, default="1024x1024")
+    ap.add_argument("--funcs", type=str, default="",
+                    help="comma-separated subset of functions")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--rounds", type=int, default=7)
+    ap.add_argument("--out", type=str, default=out_json)
+    ap.add_argument("--check-regression", type=str, default="",
+                    help="baseline BENCH json; exit 1 on ratio/contract "
+                         "regression")
+    args = ap.parse_args([] if argv is None else argv)
+
+    R, C = (int(d) for d in args.shape.split("x"))
+    funcs = tuple(f for f in args.funcs.split(",") if f) or None
+    rows = run(shape=(R, C), funcs=funcs, reps=args.reps,
+               rounds=args.rounds)
+
+    print("math: fn,us_ff,us_f32,us_f64,ratio,err_ff,err_f32,err_f64,bound")
+    for r in rows:
+        print(f"{r['fn']},{r['us_ff']:.0f},{r['us_f32']:.0f},"
+              f"{r['us_f64']:.0f},{r['cost_ratio']:.1f}x,"
+              f"2^{r['log2_err_ff']:.1f},2^{r['log2_err_f32']:.1f},"
+              f"2^{r['log2_err_f64']:.1f},2^{r['log2_bound']:.0f}")
+    payload = {
+        "bench": "math",
+        "backend": ff.backend(),
+        "jax": jax.__version__,
+        "shape": [R, C],
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out} (backend={payload['backend']})")
+
+    if args.check_regression:
+        failures = check_regression(rows, args.check_regression)
+        if failures:
+            print("PERF/ACCURACY REGRESSION vs", args.check_regression)
+            for f_ in failures:
+                print(" ", f_)
+            sys.exit(1)
+        print(f"regression check vs {args.check_regression}: OK")
+    return rows
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,639 @@
+"""Float-float elementary functions — the ``ff.math`` algorithm core.
+
+The source paper ships float-float *arithmetic*; its companion study
+(Daumas, Da Graça & Defour, "Caractéristiques arithmétiques des
+processeurs graphiques") measures the other half of the story: GPU
+*built-in* elementary functions are far less accurate than the emulated
+arithmetic.  The same split exists in this port — every ``jnp.exp`` /
+``jnp.tanh`` is a ~2^-24-accurate builtin, capping any FF pipeline that
+calls one.  This module closes the gap with classic libm construction on
+top of the paper's own operators:
+
+  * **argument reduction** with error-free steps (Cody–Waite ``ln2``
+    splitting whose high pieces multiply *exactly* against the reduction
+    integer, TwoSum folds for the tails);
+  * **compensated polynomial kernels**: FF Horner (Mul22/Add22) for the
+    leading coefficients, a plain-f32 Horner tail exactly where the terms
+    are provably below the FF noise floor (each crossover is justified in
+    ``docs/DESIGN_math.md``);
+  * **branch-free selection** (``where`` over both evaluated branches) and
+    saturation at the f32 range edges, matching the paper's stream-friendly
+    no-branches design rule.
+
+Every algorithm is written ONCE over raw ``(hi, lo)`` limb pairs and
+parameterized by an EFT-primitive namespace ``E``:
+
+  * :data:`CORE` (default) — the barrier-carrying ``repro.core`` EFTs,
+    safe under XLA:CPU FMA contraction; used by the ``jnp`` dispatch
+    implementations and the fusion tracer's jnp executor.
+  * ``repro.kernels.eft`` — the barrier-free twin for Pallas kernel
+    bodies (``repro.kernels.ff_math``, the fused-pipeline executor).
+
+Both namespaces execute the identical arithmetic, so the two executors
+produce bitwise-identical results wherever the EFT-safe ISA contract
+holds (the same invariant the fused elementwise chains already pin).
+
+Accuracy (details and budgets in ``docs/DESIGN_math.md``, contracts
+doctested in ``docs/NUMERICS.md``): each function meets <= 2 ulp of FF
+(~2^-43 relative) on its reduced domain; reconstruction amplification
+outside it is documented per function (e.g. ``expm1`` near the k = +-1
+bands, ``pow`` growing with ``|b*ln a|``).
+
+f64 never appears here (the point is no wide hardware type); the
+native-f64 *dispatch* implementations live in ``repro.ff.dispatch`` as a
+separate accuracy-tier escape on hardware that has f64 units.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ff as core_ff
+from repro.core import transforms as T
+from repro.core.ff import FF
+
+Array = jnp.ndarray
+Limb = Tuple[Array, Array]
+
+F32 = jnp.float32
+
+
+class _CorePrims:
+    """Raw-limb adapter over the barrier-carrying ``repro.core`` EFTs.
+
+    Mirrors the ``repro.kernels.eft`` signatures exactly so the generic
+    algorithms below can take either namespace.  Delegates to the
+    ``core_ff`` algorithms (one source of truth for the sequences)."""
+
+    two_sum = staticmethod(T.two_sum)
+    fast_two_sum = staticmethod(T.fast_two_sum)
+    two_prod = staticmethod(T.two_prod)
+
+    @staticmethod
+    def add22(ah, al, bh, bl):
+        r = core_ff.add22(FF(ah, al), FF(bh, bl))
+        return r.hi, r.lo
+
+    @staticmethod
+    def mul22(ah, al, bh, bl):
+        r = core_ff.mul22(FF(ah, al), FF(bh, bl))
+        return r.hi, r.lo
+
+    @staticmethod
+    def add212(ah, al, b):
+        r = core_ff.add212(FF(ah, al), b)
+        return r.hi, r.lo
+
+    @staticmethod
+    def mul212(ah, al, b):
+        r = core_ff.mul212(FF(ah, al), b)
+        return r.hi, r.lo
+
+    @staticmethod
+    def div22(ah, al, bh, bl):
+        r = core_ff.div22(FF(ah, al), FF(bh, bl))
+        return r.hi, r.lo
+
+
+CORE = _CorePrims
+
+# ---------------------------------------------------------------------------
+# constants (derived offline from 120-bit mpmath; see docs/DESIGN_math.md)
+# ---------------------------------------------------------------------------
+
+# Cody–Waite split of ln2: L1/L2 carry <= 16 significand bits each, so
+# k*L1 and k*L2 are EXACT f32 products for |k| <= 2^8 (the reduction
+# integer k never exceeds ~160 after input clipping); L3 is the f32
+# residual (|k*L3| <= 2^-28, one negligible rounding).
+_EXP_L1 = 0.693145751953125          # 45426 * 2^-16
+_EXP_L2 = 1.4286197256296873e-06     # 49087 * 2^-35
+_EXP_L3 = -1.290532e-11
+_INV_LN2 = 1.4426950408889634
+
+# ln2 as an FF constant (for the log reconstruction e*ln2)
+_LN2_H, _LN2_L = 0.6931471824645996, -1.9046542121259336e-09
+
+_TWO_OVER_SQRTPI = (1.1283792, -5.8635383e-08)
+_INV_SQRT2 = (0.70710677, 1.21016175e-08)
+
+# exp kernel: exp(r) = 1 + r + r^2 * W(r), W(r) = sum_j r^j / (j+2)!.
+# FF coefficients for j = 0..5; f32 Horner tail for j = 6..11 (tail terms
+# contribute < 2^-46 relative — below the FF noise floor).
+_EXP_W_FF = (
+    (0.5, 0.0),
+    (0.16666667, -4.967054e-09),
+    (0.041666668, -1.2417635e-09),
+    (0.008333334, -4.346172e-10),
+    (0.0013888889, -3.3631094e-11),
+    (0.0001984127, -2.7255969e-12),
+)
+_EXP_W_F32 = (2.4801588e-05, 2.7557319e-06, 2.755732e-07,
+              2.5052108e-08, 2.0876756e-09, 1.6059044e-10)
+
+# atanh kernel: log(m) = 2 s S(s^2), s = (m-1)/(m+1), m in [1/sqrt2, sqrt2):
+# S(z) = sum_n z^n / (2n+1).  FF for n = 0..3, f32 tail n = 4..9
+# (z <= 0.0295, so the n >= 4 terms sit below 2^-45 relative).
+_LOG_S_FF = (
+    (1.0, 0.0),
+    (0.33333334, -9.934108e-09),
+    (0.2, -2.9802323e-09),
+    (0.14285715, -6.386212e-09),
+)
+_LOG_S_F32 = (0.11111111, 0.09090909, 0.07692308,
+              0.06666667, 0.05882353, 0.05263158)
+
+# tanh Maclaurin (odd series, coefficients of x^(2n+1)) for |x| <= 0.35:
+# FF for n = 0..5, f32 tail n = 6..11 (truncation 2^-52 at the boundary).
+_TANH_C_FF = (
+    (1.0, 0.0),
+    (-0.33333334, 9.934108e-09),
+    (0.13333334, -6.9538753e-09),
+    (-0.053968254, 5.085317e-10),
+    (0.021869488, 4.7568083e-10),
+    (-0.008863236, 2.939079e-10),
+)
+_TANH_C_F32 = (0.003592128, -0.0014558344, 0.0005900274,
+               -0.00023912912, 9.691538e-05, -3.9278322e-05)
+
+# sqrt(pi) as an FF constant (asymptotic-erfc denominator)
+_SQRTPI = (1.7724539, -5.32464e-08)
+
+# asymptotic erfc series A(w) = sum_k (-1)^k (2k-1)!! w^k, w = 1/(2x^2),
+# truncated at k = 12 (first omitted term < 2^-22 at x = 4, far below the
+# band's needed accuracy — see DESIGN_math.md); f32 Horner suffices there.
+_ERFC_ASY = (1.0, -1.0, 3.0, -15.0, 105.0, -945.0, 10395.0, -135135.0,
+             2027025.0, -34459425.0, 654729075.0, -13749310575.0,
+             316234143225.0)
+
+# domain edges
+_EXP_CLIP_LO, _EXP_CLIP_HI = -105.0, 89.0   # beyond: saturated anyway
+_TANH_SMALL = 0.35                          # Maclaurin branch bound
+_ERF_SMALL = 1.0                            # alternating-series bound
+_ERF_MID = 4.0                              # positive-series / asymptotic seam
+_ERF_ALT_TERMS = 17                         # n = 1..16 after the n=0 seed
+_ERF_POS_TERMS = 60                         # n = 1..59 after the n=0 seed
+
+
+def _exp2i(k: Array) -> Array:
+    """Exact 2^k for int32 k in [-126, 127], built from exponent bits
+    (``jnp.exp2`` is polynomial-approximated on XLA:CPU — inexact at 221
+    of 254 integer exponents under the EFT-safe ISA; see PR 2's ldexp
+    repair of the Ozaki slice grid)."""
+    return lax.bitcast_convert_type(
+        ((k + jnp.int32(127)) << jnp.int32(23)).astype(jnp.int32),
+        jnp.float32)
+
+
+def _scale2k(h: Array, l: Array, k: Array) -> Limb:
+    """(h, l) * 2^k for int32 k in [-252, 254], exact via two half-steps
+    (each half exponent stays in the normal range)."""
+    k1 = k >> 1
+    k2 = k - k1
+    s1, s2 = _exp2i(k1), _exp2i(k2)
+    return (h * s1) * s2, (l * s1) * s2
+
+
+# ---------------------------------------------------------------------------
+# exp / expm1
+# ---------------------------------------------------------------------------
+
+def _exp_reduce(xh: Array, xl: Array, E) -> Tuple[Array, Array, Array]:
+    """Cody–Waite reduction x = k*ln2 + r with r an FF pair, |r| <= ln2/2.
+
+    k*L1 and k*L2 are exact f32 products (16-bit pieces, |k| <= 160 after
+    clipping) and ``xc - k*L1`` is exact by the classic Cody–Waite grid
+    argument, so the only reduction errors are one rounding of the
+    negligible ``k*L3`` fold and the Add212 renormalization (~2^-45.5
+    absolute).  Returns (rh, rl, k_int32)."""
+    xc = jnp.clip(xh, F32(_EXP_CLIP_LO), F32(_EXP_CLIP_HI))
+    kf = jnp.round(xc * F32(_INV_LN2))
+    h1 = xc - kf * F32(_EXP_L1)                   # exact
+    sh, sl = E.two_sum(h1, -(kf * F32(_EXP_L2)))  # k*L2 exact; TwoSum exact
+    v = xl - kf * F32(_EXP_L3)                    # both ~2^-28: one rounding
+    rh, rl = E.add212(sh, sl, v)
+    return rh, rl, kf.astype(jnp.int32)
+
+
+def _exp_poly(rh: Array, rl: Array, E) -> Limb:
+    """expm1(r) = r + r^2 W(r) on |r| <= ln2/2 as an FF pair.
+
+    W runs a plain-f32 Horner for degrees 11..6 (terms < 2^-46 of the
+    result) and an FF Horner for degrees 5..0; the r^2 W term is <= 0.087,
+    so W's own error budget relaxes by that factor (DESIGN_math.md)."""
+    t = F32(_EXP_W_F32[-1])
+    for c in _EXP_W_F32[-2::-1]:
+        t = t * rh + F32(c)
+    wh, wl = t, jnp.zeros_like(t)
+    for ch, cl in _EXP_W_FF[::-1]:
+        wh, wl = E.mul22(wh, wl, rh, rl)
+        wh, wl = E.add22(wh, wl, jnp.broadcast_to(F32(ch), rh.shape),
+                         jnp.broadcast_to(F32(cl), rh.shape))
+    zh, zl = E.mul22(rh, rl, rh, rl)              # r^2
+    qh, ql = E.mul22(zh, zl, wh, wl)              # r^2 W
+    return E.add22(rh, rl, qh, ql)                # r + r^2 W
+
+
+def exp22(xh: Array, xl: Array, E=CORE) -> Limb:
+    """FF exp of an FF input (raw limbs).  <= 2 ulp_FF on the reduced
+    domain; saturates to inf above ~88.72 and to 0 below ~-103 (f32
+    range; the lo limb flushes first near the subnormal edge)."""
+    rh, rl, k = _exp_reduce(xh, xl, E)
+    sh, sl = _exp_poly(rh, rl, E)
+    ph, pl = E.add212(sh, sl, F32(1.0))           # 1 + expm1(r)
+    eh, el = _scale2k(ph, pl, k)
+    inf = F32(jnp.inf)
+    big = xh > F32(_EXP_CLIP_HI)
+    tiny = xh < F32(_EXP_CLIP_LO)
+    eh = jnp.where(big, inf, jnp.where(tiny, F32(0.0), eh))
+    # natural hi-limb overflow (x in (~88.72, CLIP_HI]): zero the lo limb
+    # so the saturated FF is a clean (inf, 0), not (inf, garbage)
+    el = jnp.where(big | tiny | (eh == inf), F32(0.0), el)
+    nan = xh != xh
+    return jnp.where(nan, xh, eh), jnp.where(nan, xh, el)
+
+
+def expm122(xh: Array, xl: Array, E=CORE) -> Limb:
+    """FF expm1: full relative accuracy on |x| <= ln2/2 (the k = 0 branch
+    is the exp kernel *without* the +1), exp(x) - 1 with the documented
+    k = +-1 cancellation amplification (~x5) beyond."""
+    rh, rl, k = _exp_reduce(xh, xl, E)
+    sh, sl = _exp_poly(rh, rl, E)                 # expm1(r): the k=0 answer
+    ph, pl = E.add212(sh, sl, F32(1.0))
+    eh, el = _scale2k(ph, pl, k)
+    gh, gl = E.add212(eh, el, F32(-1.0))          # exp(x) - 1, k != 0
+    # exp's hi limb overflows naturally just below the clip bound
+    # (x in (~88.72, CLIP_HI]): inf - 1 trips TwoSum nans — saturate
+    ovf = eh == F32(jnp.inf)
+    gh = jnp.where(ovf, eh, gh)
+    gl = jnp.where(ovf, F32(0.0), gl)
+    small = k == 0
+    oh = jnp.where(small, sh, gh)
+    ol = jnp.where(small, sl, gl)
+    # |x| < 2^-45: expm1(x) == x at FF precision (x^2/2 < 2^-46 |x|), and
+    # the identity keeps signed zero (the EFT renormalization's -0 + 0
+    # rounds to +0) and sidesteps the sub-2^-100 TwoProd underflow domain
+    idt = jnp.abs(xh) < F32(2.0**-45)
+    oh = jnp.where(idt, xh, oh)
+    ol = jnp.where(idt, xl, ol)
+    inf = F32(jnp.inf)
+    big = xh > F32(_EXP_CLIP_HI)
+    tiny = xh < F32(_EXP_CLIP_LO)
+    oh = jnp.where(big, inf, jnp.where(tiny, F32(-1.0), oh))
+    ol = jnp.where(big | tiny, F32(0.0), ol)
+    nan = xh != xh
+    return jnp.where(nan, xh, oh), jnp.where(nan, xh, ol)
+
+
+# ---------------------------------------------------------------------------
+# log / log1p
+# ---------------------------------------------------------------------------
+
+def _atanh_poly(sh: Array, sl: Array, E) -> Limb:
+    """S(z) = sum z^n/(2n+1) at z = s^2 <= 0.0295 (FF Horner n=3..0 over
+    an f32 tail n=9..4)."""
+    zh, zl = E.mul22(sh, sl, sh, sl)
+    t = F32(_LOG_S_F32[-1])
+    for c in _LOG_S_F32[-2::-1]:
+        t = t * zh + F32(c)
+    ah, al = t, jnp.zeros_like(t)
+    for ch, cl in _LOG_S_FF[::-1]:
+        ah, al = E.mul22(ah, al, zh, zl)
+        ah, al = E.add22(ah, al, jnp.broadcast_to(F32(ch), sh.shape),
+                         jnp.broadcast_to(F32(cl), sh.shape))
+    return ah, al
+
+
+def _log_core(mh: Array, ml: Array, ef: Array, E) -> Limb:
+    """log(2^e * m) = e*ln2 + 2 s S(s^2), s = (m-1)/(m+1), for m already
+    reduced to [1/sqrt2, sqrt2) — no cancellation between the two terms
+    by construction of the symmetric mantissa range."""
+    nh, nl = E.add212(mh, ml, F32(-1.0))
+    dh, dl = E.add212(mh, ml, F32(1.0))
+    sh, sl = E.div22(nh, nl, dh, dl)
+    ph, pl = _atanh_poly(sh, sl, E)
+    lh, ll = E.mul22(sh, sl, ph, pl)
+    lh, ll = F32(2.0) * lh, F32(2.0) * ll         # exact
+    th, tl = E.mul212(jnp.broadcast_to(F32(_LN2_H), ef.shape),
+                      jnp.broadcast_to(F32(_LN2_L), ef.shape), ef)
+    return E.add22(th, tl, lh, ll)
+
+
+def _frexp_sqrt2(xh: Array, xl: Array):
+    """Branch-free frexp variant: x = 2^e * m with m in [1/sqrt2, sqrt2).
+    Exact: exponent/mantissa bit surgery on hi, exact 2^-e scaling of lo."""
+    bits = lax.bitcast_convert_type(xh, jnp.int32)
+    e = ((bits >> jnp.int32(23)) & jnp.int32(0xFF)) - jnp.int32(127)
+    mh = lax.bitcast_convert_type(
+        (bits & jnp.int32(0x007FFFFF)) | jnp.int32(0x3F800000), jnp.float32)
+    big = mh > F32(1.4142135)
+    mh = jnp.where(big, mh * F32(0.5), mh)
+    e = e + big.astype(jnp.int32)
+    ml, _zero = _scale2k(xl, jnp.zeros_like(xl), -e)
+    return mh, ml, e
+
+
+def log22(xh: Array, xl: Array, E=CORE) -> Limb:
+    """FF natural log of an FF input.  <= 2 ulp_FF on the reduced domain
+    (e = 0); nan for x < 0, -inf at x == 0."""
+    mh, ml, e = _frexp_sqrt2(xh, xl)
+    rh, rl = _log_core(mh, ml, e.astype(jnp.float32), E)
+    neg_inf, inf, nan = F32(-jnp.inf), F32(jnp.inf), F32(jnp.nan)
+    bad = (xh < 0) | (xh != xh)
+    rh = jnp.where(xh == 0, neg_inf, jnp.where(bad, nan, rh))
+    rh = jnp.where(xh == inf, inf, rh)
+    rl = jnp.where((xh == 0) | bad | (xh == inf), F32(0.0), rl)
+    return rh, rl
+
+
+def log1p22(xh: Array, xl: Array, E=CORE) -> Limb:
+    """FF log1p.  The near branch (1+x in the reduced mantissa range,
+    x in [-0.2929, 0.4142]) evaluates 2 atanh(x/(2+x)) directly from x —
+    full relative accuracy down to the last FF bit even for tiny x (never
+    forming 1+x, whose FF representation would floor the error at
+    2^-49/|x|); the far branch folds x into an exact TwoSum with 1 and
+    takes the regular log."""
+    # near: s = x / (2 + x), |s| <= 0.1716 — same kernel as log
+    dh, dl = E.add212(xh, xl, F32(2.0))
+    sh, sl = E.div22(xh, xl, dh, dl)
+    ph, pl = _atanh_poly(sh, sl, E)
+    nh, nl = E.mul22(sh, sl, ph, pl)
+    nh, nl = F32(2.0) * nh, F32(2.0) * nl
+    # far: w = 1 + x exactly (TwoSum + lo fold), then log.  The traced
+    # operand goes FIRST: XLA's algebraic simplifier folds the residual of
+    # two_sum(<literal>, x) to zero ((1 + x) - 1 -> x — the paper's §5
+    # compiler hazard resurfacing through constant folding), while the
+    # (x, <literal>) orientation survives; pinned by tests/test_ff_math.py.
+    wh, we = E.two_sum(xh, jnp.ones_like(xh))
+    wl = we + xl
+    wh, wl = E.fast_two_sum(wh, wl)
+    fh, fl = log22(wh, wl, E)
+    near = (xh >= F32(-0.2928932)) & (xh <= F32(0.41421354))
+    rh = jnp.where(near, nh, fh)
+    rl = jnp.where(near, nl, fl)
+    # identity band: log1p(x) == x at FF precision below 2^-45; also keeps
+    # signed zero and the sub-2^-100 EFT underflow domain exact
+    idt = jnp.abs(xh) < F32(2.0**-45)
+    rh = jnp.where(idt, xh, rh)
+    rl = jnp.where(idt, xl, rl)
+    inf = xh == F32(jnp.inf)                      # 1 + inf trips TwoSum nans
+    rh = jnp.where(inf, F32(jnp.inf), rh)
+    rl = jnp.where(inf, F32(0.0), rl)
+    nan = xh != xh
+    return jnp.where(nan, xh, rh), jnp.where(nan, xh, rl)
+
+
+# ---------------------------------------------------------------------------
+# tanh / sigmoid
+# ---------------------------------------------------------------------------
+
+def tanh22(xh: Array, xl: Array, E=CORE) -> Limb:
+    """FF tanh: odd Maclaurin kernel on |x| <= 0.35 (<= 2 ulp_FF), the
+    bounded rational expm1 form tanh = -t/(2+t), t = expm1(-2|x|)
+    beyond (saturating smoothly: t -> -1 => tanh -> +-1 exactly at FF
+    resolution for |x| >~ 17)."""
+    # small: x * P(x^2), FF Horner over the f32 tail
+    zh, zl = E.mul22(xh, xl, xh, xl)
+    t = F32(_TANH_C_F32[-1])
+    for c in _TANH_C_F32[-2::-1]:
+        t = t * zh + F32(c)
+    ph, pl = t, jnp.zeros_like(t)
+    for ch, cl in _TANH_C_FF[::-1]:
+        ph, pl = E.mul22(ph, pl, zh, zl)
+        ph, pl = E.add22(ph, pl, jnp.broadcast_to(F32(ch), xh.shape),
+                         jnp.broadcast_to(F32(cl), xh.shape))
+    smh, sml = E.mul22(xh, xl, ph, pl)
+    # large: -t/(2+t) on |x|, sign restored (negation is exact)
+    sgn = jnp.where(xh < 0, F32(-1.0), F32(1.0))
+    yh, yl = F32(-2.0) * sgn * xh, F32(-2.0) * sgn * xl
+    th, tl = expm122(yh, yl, E)
+    dh, dl = E.add212(th, tl, F32(2.0))
+    qh, ql = E.div22(-th, -tl, dh, dl)
+    lgh, lgl = sgn * qh, sgn * ql
+    small = jnp.abs(xh) <= F32(_TANH_SMALL)
+    rh = jnp.where(small, smh, lgh)
+    rl = jnp.where(small, sml, lgl)
+    # identity band (tanh(x) == x below 2^-45: x^3/3 < 2^-90); keeps
+    # signed zero and the sub-2^-100 EFT underflow domain exact
+    idt = jnp.abs(xh) < F32(2.0**-45)
+    return jnp.where(idt, xh, rh), jnp.where(idt, xl, rl)
+
+
+def sigmoid22(xh: Array, xl: Array, E=CORE) -> Limb:
+    """FF logistic sigmoid via the cancellation-free two-sided form
+    sigma(x) = u/(1 + z), z = exp(-|x|), u = 1 for x >= 0 else z."""
+    sgn = jnp.where(xh < 0, F32(-1.0), F32(1.0))
+    zh, zl = exp22(-sgn * xh, -sgn * xl, E)
+    dh, dl = E.add212(zh, zl, F32(1.0))
+    pos = xh >= 0
+    nh = jnp.where(pos, jnp.ones_like(zh), zh)
+    nl = jnp.where(pos, jnp.zeros_like(zl), zl)
+    rh, rl = E.div22(nh, nl, dh, dl)
+    nan = xh != xh
+    return jnp.where(nan, xh, rh), jnp.where(nan, xh, rl)
+
+
+# ---------------------------------------------------------------------------
+# erf / gelu / silu
+# ---------------------------------------------------------------------------
+
+def _erf_small(xh: Array, xl: Array, E) -> Limb:
+    """Alternating Maclaurin sum for |x| <= 1: erf = (2/sqrt pi) x
+    sum_n (-1)^n (x^2)^n / (n! (2n+1)).  Mild cancellation (amplification
+    <= 1.5 at the boundary); every term update is FF (Mul22 + exact-
+    integer Div22), so the sum holds ~2^-43."""
+    zh, zl = E.mul22(xh, xl, xh, xl)
+    one = jnp.ones_like(xh)
+    zero = jnp.zeros_like(xh)
+
+    def body(n, carry):
+        uh, ul, ah, al = carry
+        nf = n.astype(jnp.float32)
+        uh, ul = E.mul22(uh, ul, zh, zl)
+        uh, ul = E.div22(uh, ul, nf * one, zero)            # u = z^n / n!
+        th, tl = E.div22(uh, ul, (F32(2.0) * nf + F32(1.0)) * one, zero)
+        s = jnp.where(n % 2 == 1, F32(-1.0), F32(1.0))
+        ah, al = E.add22(ah, al, s * th, s * tl)
+        return uh, ul, ah, al
+
+    _, _, ah, al = lax.fori_loop(1, _ERF_ALT_TERMS, body,
+                                 (one, zero, one, zero))
+    sh, sl = E.mul22(xh, xl, ah, al)
+    return E.mul22(sh, sl, jnp.broadcast_to(F32(_TWO_OVER_SQRTPI[0]),
+                                            xh.shape),
+                   jnp.broadcast_to(F32(_TWO_OVER_SQRTPI[1]), xh.shape))
+
+
+def _erf_mid(axh: Array, axl: Array, E) -> Limb:
+    """Positive (Kummer) series for 1 < x <= 4: erf = (2x/sqrt pi)
+    e^{-x^2} sum_n (2x^2)^n / (2n+1)!!.  All terms positive — no
+    cancellation — so the FF sum holds ~2^-43 relative; 60 terms carry
+    the slow post-peak geometric decay (ratio 2x^2/(2n+3)) below 2^-45
+    at the x = 4 seam.  The e^{-x^2} factor reuses the FF exp with x^2
+    carried as an FF product."""
+    zh, zl = E.mul22(axh, axl, axh, axl)          # x^2
+    vh, vl = F32(2.0) * zh, F32(2.0) * zl         # 2 x^2 (exact)
+    one = jnp.ones_like(axh)
+    zero = jnp.zeros_like(axh)
+
+    def body(n, carry):
+        th, tl, ah, al = carry
+        nf = n.astype(jnp.float32)
+        th, tl = E.mul22(th, tl, vh, vl)
+        th, tl = E.div22(th, tl, (F32(2.0) * nf + F32(1.0)) * one, zero)
+        ah, al = E.add22(ah, al, th, tl)
+        return th, tl, ah, al
+
+    _, _, ah, al = lax.fori_loop(1, _ERF_POS_TERMS, body,
+                                 (one, zero, one, zero))
+    eh, el = exp22(-zh, -zl, E)
+    gh, gl = E.mul22(axh, axl, eh, el)
+    gh, gl = E.mul22(gh, gl, ah, al)
+    return E.mul22(gh, gl, jnp.broadcast_to(F32(_TWO_OVER_SQRTPI[0]),
+                                            axh.shape),
+                   jnp.broadcast_to(F32(_TWO_OVER_SQRTPI[1]), axh.shape))
+
+
+def _erf_big(axh: Array, axl: Array, E) -> Limb:
+    """Asymptotic band x > 4: erf = 1 - erfc, erfc = e^{-x^2} A(w) /
+    (x sqrt pi), w = 1/(2x^2).  erf is within 2^-48 of 1 here, so erfc
+    only needs relative accuracy 2^-43/erfc(x) — an f32 Horner over the
+    13-term divergent-series prefix clears that with >2^4 margin at the
+    seam and exponentially more beyond; e^{-x^2} underflowing to 0 IS the
+    saturation branch (erf -> exactly 1)."""
+    zh, zl = E.mul22(axh, axl, axh, axl)          # x^2
+    w = F32(0.5) / zh                             # f32 precision suffices
+    a = F32(_ERFC_ASY[-1])
+    for c in _ERFC_ASY[-2::-1]:
+        a = a * w + F32(c)
+    eh, el = exp22(-zh, -zl, E)
+    uh, ul = E.mul212(eh, el, a)
+    dh, dl = E.mul22(axh, axl, jnp.broadcast_to(F32(_SQRTPI[0]), axh.shape),
+                     jnp.broadcast_to(F32(_SQRTPI[1]), axh.shape))
+    ch, cl = E.div22(uh, ul, dh, dl)              # erfc
+    return E.add212(-ch, -cl, F32(1.0))           # 1 - erfc
+
+
+def erf22(xh: Array, xl: Array, E=CORE) -> Limb:
+    """FF error function.  <= 2 ulp_FF relative on |x| <= 1 (the series
+    kernel domain); the positive-series band (1 < x <= 4) and the
+    asymptotic-erfc band (x > 4) keep erf's 2^-43 contract through to
+    exact +-1 saturation once e^{-x^2} underflows."""
+    sgn = jnp.where(xh < 0, F32(-1.0), F32(1.0))
+    axh, axl = sgn * xh, sgn * xl
+    # clamp the tail bands at 30 (erf(30) == 1 at any FF precision): keeps
+    # x^2 inside the Dekker-split overflow bound and turns +-inf into the
+    # saturated value instead of split-generated nans
+    big_in = axh > F32(30.0)
+    axh = jnp.minimum(axh, F32(30.0))
+    axl = jnp.where(big_in, F32(0.0), axl)
+    smh, sml = _erf_small(xh, xl, E)              # odd series: sign built in
+    mdh, mdl = _erf_mid(axh, axl, E)
+    bgh, bgl = _erf_big(axh, axl, E)
+    mid = axh <= F32(_ERF_MID)
+    lgh = jnp.where(mid, mdh, bgh)
+    lgl = jnp.where(mid, mdl, bgl)
+    small = axh <= F32(_ERF_SMALL)
+    rh = jnp.where(small, smh, sgn * lgh)
+    rl = jnp.where(small, sml, sgn * lgl)
+    zero = xh == 0                                # erf(+-0) = +-0 exactly
+    rh = jnp.where(zero, xh, rh)
+    rl = jnp.where(zero, F32(0.0), rl)
+    nan = xh != xh
+    return jnp.where(nan, xh, rh), jnp.where(nan, xh, rl)
+
+
+def gelu22(xh: Array, xl: Array, E=CORE) -> Limb:
+    """FF exact-form GELU: 0.5 x (1 + erf(x/sqrt2)).  Relative contract
+    for x >= -1; absolute (2^-40-class) in the deep-negative tail where
+    1 + erf cancels (an FF erfc kernel would be the upgrade path —
+    documented in DESIGN_math.md)."""
+    vh, vl = E.mul22(xh, xl, jnp.broadcast_to(F32(_INV_SQRT2[0]), xh.shape),
+                     jnp.broadcast_to(F32(_INV_SQRT2[1]), xh.shape))
+    eh, el = erf22(vh, vl, E)
+    oh, ol = E.add212(eh, el, F32(1.0))
+    rh, rl = E.mul22(xh, xl, oh, ol)
+    rh, rl = F32(0.5) * rh, F32(0.5) * rl         # exact scale
+    zero = xh == 0                                # gelu(+-0) = +-0 exactly
+    rh = jnp.where(zero, xh, rh)
+    rl = jnp.where(zero, F32(0.0), rl)
+    # inf * (1 + erf) trips TwoProd nans at both rails; take the limits
+    ninf, pinf = xh == F32(-jnp.inf), xh == F32(jnp.inf)
+    rh = jnp.where(ninf, F32(0.0), jnp.where(pinf, F32(jnp.inf), rh))
+    rl = jnp.where(ninf | pinf, F32(0.0), rl)
+    return rh, rl
+
+
+def silu22(xh: Array, xl: Array, E=CORE) -> Limb:
+    """FF SiLU (swish): x * sigmoid(x).  Cancellation-free on both sides,
+    so the relative contract holds on the full f32 range."""
+    sh, sl = sigmoid22(xh, xl, E)
+    rh, rl = E.mul22(xh, xl, sh, sl)
+    zero = xh == 0                                # silu(+-0) = +-0 exactly
+    rh = jnp.where(zero, xh, rh)
+    rl = jnp.where(zero, F32(0.0), rl)
+    ninf, pinf = xh == F32(-jnp.inf), xh == F32(jnp.inf)
+    rh = jnp.where(ninf, F32(0.0), jnp.where(pinf, F32(jnp.inf), rh))
+    rl = jnp.where(ninf | pinf, F32(0.0), rl)
+    return rh, rl
+
+
+# ---------------------------------------------------------------------------
+# pow
+# ---------------------------------------------------------------------------
+
+def pow22(ah: Array, al: Array, bh: Array, bl: Array, E=CORE) -> Limb:
+    """FF power a**b = exp(b * log a) for a > 0 (nan for a < 0 — no
+    integer-exponent special-casing; a == 0 follows IEEE pow: 0**0 = 1,
+    0**+b = 0, 0**-b = inf).  Error grows with the exponent magnitude:
+    ~(1 + |b ln a|) * 2^-43 relative (the log's FF error is amplified
+    |b ln a|-fold through exp — the standard double-word pow bound)."""
+    lh, ll = log22(ah, al, E)
+    th, tl = E.mul22(lh, ll, bh, bl)
+    rh, rl = exp22(th, tl, E)
+    # a == 0 / a == inf: the +-inf log trips TwoProd nans in the b fold —
+    # select the IEEE limits explicitly (b == 0 -> 1 last: 0**0 == 1)
+    inf, zero, one = F32(jnp.inf), F32(0.0), F32(1.0)
+    for edge, blim in ((ah == 0, zero), (ah == inf, inf)):
+        rh = jnp.where(edge & (bh > 0), blim, rh)
+        rh = jnp.where(edge & (bh < 0), jnp.where(blim == 0, inf, zero), rh)
+        rl = jnp.where(edge, zero, rl)
+    b0 = bh == 0
+    rh = jnp.where(b0, one, rh)
+    rl = jnp.where(b0, zero, rl)
+    return rh, rl
+
+
+# ---------------------------------------------------------------------------
+# FF-object convenience wrappers (the jnp dispatch impls and autodiff
+# rules call these; kernels call the raw-limb forms with E=kernels.eft)
+# ---------------------------------------------------------------------------
+
+def _wrap1(fn):
+    def call(a: FF) -> FF:
+        return FF(*fn(a.hi, a.lo, CORE))
+    return call
+
+
+exp = _wrap1(exp22)
+expm1 = _wrap1(expm122)
+log = _wrap1(log22)
+log1p = _wrap1(log1p22)
+tanh = _wrap1(tanh22)
+sigmoid = _wrap1(sigmoid22)
+erf = _wrap1(erf22)
+gelu = _wrap1(gelu22)
+silu = _wrap1(silu22)
+
+
+def pow(a: FF, b: FF) -> FF:  # noqa: A001 - mirrors jnp.pow
+    return FF(*pow22(a.hi, a.lo, b.hi, b.lo, CORE))
+
+
+UNARY22 = {
+    "exp": exp22, "expm1": expm122, "log": log22, "log1p": log1p22,
+    "tanh": tanh22, "sigmoid": sigmoid22, "erf": erf22, "gelu": gelu22,
+    "silu": silu22,
+}

@@ -30,6 +30,13 @@ class PrecisionPolicy:
     ff_master_weights: bool = True
     ff_reductions: bool = False
     ff_logits: bool = False
+    # Route model transcendentals (silu gates, tanh logit soft-caps,
+    # Mamba2 exp decay chains, token-logprob scoring) through the FF
+    # elementary functions (``repro.ff.math``).  Derived False at EVERY
+    # level — the default policies stay bitwise-identical to the
+    # pre-ff.math library — and opted in per scope:
+    # ``ff.policy("ff_full", ff_math=True)``.
+    ff_math: bool = False
     # activation compute dtype for the bulk matmuls
     compute_dtype: str = "bfloat16"
     # Block size for blocked-K compensated matmuls.  MUST match the

@@ -53,6 +53,10 @@ from repro.ff.autodiff import (  # noqa: F401
     softmax, mean_sq, norm_stats, adamw_update,
     two_sum, two_prod,
 )
+from repro.ff import math  # noqa: F401  (the FF elementary-function tier)
+from repro.ff.math import (  # noqa: F401
+    exp, expm1, log, log1p, tanh, sigmoid, erf, gelu, silu, pow,
+)
 from repro.ff import fusion  # noqa: F401
 from repro.ff.fusion import fused  # noqa: F401
 from repro.ff import sharded  # noqa: F401  (registers the mesh impls)

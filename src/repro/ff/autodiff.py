@@ -638,3 +638,143 @@ def adamw_update(g: Array, m: Array, v: Array, w: Array, wlo: Array,
     opts = _merge_tuned("adamw_update", name, shape, opts)
     return dispatch.lookup("adamw_update", name)(
         g, m, v, w, wlo, lr, b1, b2, bc1, bc2, eps=eps, wd=wd, **opts)
+
+
+# ---------------------------------------------------------------------------
+# elementary functions (ff.math): one generic unary primitive + pow
+# ---------------------------------------------------------------------------
+#
+# Derivative rules computed IN FF (same policy as the arithmetic ops):
+# d(exp x) = exp(x) dx, d(log x) = dx/x, d(tanh x) = (1-t)(1+t) dx, etc. —
+# each factor built from Mul22/Div22/the ffmath kernels, so gradients
+# inherit the ~2^-43 operator accuracy (grad tests pin <= 2^-40 vs f64).
+
+from repro.core import ffmath as _ffmath
+
+
+def _ffc(pair, like) -> FF:
+    h, l = pair
+    return FF(jnp.broadcast_to(jnp.float32(h), jnp.shape(like.hi)),
+              jnp.broadcast_to(jnp.float32(l), jnp.shape(like.hi)))
+
+
+def _asff_op(x) -> FF:
+    return x if isinstance(x, FF) else FF.from_f32(x)
+
+
+def _one_minus(t: FF) -> FF:
+    return core_ff.add212(FF(-t.hi, -t.lo), jnp.float32(1.0))
+
+
+def _bwd_exp(gv, a, out):
+    return core_ff.mul22(gv, out)
+
+
+def _bwd_expm1(gv, a, out):
+    return core_ff.mul22(gv, core_ff.add212(out, jnp.float32(1.0)))
+
+
+def _bwd_log(gv, a, out):
+    return core_ff.div22(gv, _asff_op(a))
+
+
+def _bwd_log1p(gv, a, out):
+    return core_ff.div22(gv, core_ff.add212(_asff_op(a), jnp.float32(1.0)))
+
+
+def _bwd_tanh(gv, a, out):
+    # (1 - t)(1 + t): factored form keeps relative accuracy as |t| -> 1
+    sech2 = core_ff.mul22(_one_minus(out),
+                          core_ff.add212(out, jnp.float32(1.0)))
+    return core_ff.mul22(gv, sech2)
+
+
+def _bwd_sigmoid(gv, a, out):
+    return core_ff.mul22(gv, core_ff.mul22(out, _one_minus(out)))
+
+
+def _bwd_erf(gv, a, out):
+    af = _asff_op(a)
+    z = core_ff.mul22(af, af)
+    e = FF(*_ffmath.exp22(-z.hi, -z.lo))
+    return core_ff.mul22(gv, core_ff.mul22(e, _ffc(_ffmath._TWO_OVER_SQRTPI,
+                                                   af)))
+
+
+# 1/sqrt(2 pi), FF (gelu's pdf factor)
+_INV_SQRT2PI = (0.3989423, -1.133517e-08)
+
+
+def _bwd_gelu(gv, a, out):
+    # gelu'(x) = Phi(x) + x phi(x), Phi = 0.5 (1 + erf(x/sqrt2)),
+    # phi = exp(-x^2/2)/sqrt(2 pi)
+    af = _asff_op(a)
+    v = core_ff.mul22(af, _ffc(_ffmath._INV_SQRT2, af))
+    e = FF(*_ffmath.erf22(v.hi, v.lo))
+    phi_cap = core_ff.add212(e, jnp.float32(1.0))
+    phi_cap = FF(jnp.float32(0.5) * phi_cap.hi, jnp.float32(0.5) * phi_cap.lo)
+    z = core_ff.mul22(af, af)
+    w = FF(*_ffmath.exp22(jnp.float32(-0.5) * z.hi,
+                          jnp.float32(-0.5) * z.lo))
+    pdf = core_ff.mul22(w, _ffc(_INV_SQRT2PI, af))
+    return core_ff.mul22(gv, core_ff.add22(phi_cap, core_ff.mul22(af, pdf)))
+
+
+def _bwd_silu(gv, a, out):
+    # silu'(x) = s (1 + x (1 - s))
+    af = _asff_op(a)
+    s = FF(*_ffmath.sigmoid22(af.hi, af.lo))
+    inner = core_ff.add212(core_ff.mul22(af, _one_minus(s)), jnp.float32(1.0))
+    return core_ff.mul22(gv, core_ff.mul22(s, inner))
+
+
+_MATH_BWD = {
+    "exp": _bwd_exp, "expm1": _bwd_expm1, "log": _bwd_log,
+    "log1p": _bwd_log1p, "tanh": _bwd_tanh, "sigmoid": _bwd_sigmoid,
+    "erf": _bwd_erf, "gelu": _bwd_gelu, "silu": _bwd_silu,
+}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _math1_p(meta, a):
+    op, impl, _kind, opts = meta
+    return dispatch.lookup(op, impl)(a, **dict(opts))
+
+
+def _math1_fwd(meta, a):
+    out = _math1_p(meta, a)
+    return out, (a, out)
+
+
+def _math1_bwd(meta, res, g):
+    op, _impl, kind, _opts = meta
+    a, out = res
+    gv = _g_val(g)
+    return (_ct(kind, _MATH_BWD[op](gv, a, out)),)
+
+
+_math1_p.defvjp(_math1_fwd, _math1_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pow_p(meta, a, b):
+    _impl, _ka, _kb, opts = meta
+    return dispatch.lookup("pow", meta[0])(a, b, **dict(opts))
+
+
+def _pow_fwd(meta, a, b):
+    out = _pow_p(meta, a, b)
+    return out, (a, b, out)
+
+
+def _pow_bwd(meta, res, g):
+    a, b, out = res
+    gv = _g_val(g)
+    af, bf = _asff_op(a), _asff_op(b)
+    da = core_ff.mul22(gv, core_ff.mul22(bf, core_ff.div22(out, af)))
+    ln_a = FF(*_ffmath.log22(af.hi, af.lo))
+    db = core_ff.mul22(gv, core_ff.mul22(out, ln_a))
+    return _ct(meta[1], da), _ct(meta[2], db)
+
+
+_pow_p.defvjp(_pow_fwd, _pow_bwd)

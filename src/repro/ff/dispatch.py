@@ -31,7 +31,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import compensated, ffmatmul
+from repro.core import compensated, ffmatmul, ffmath
 from repro.core import ff as core_ff
 from repro.core import transforms as T
 from repro.core.ff import FF
@@ -48,6 +48,13 @@ _MESH_DEFAULTS: Dict[str, str] = {}           # op -> impl inside ff.on_mesh
 _ACCURATE_FALLBACK: Dict[str, Tuple[str, ...]] = {
     "matmul": ("f64", "ozaki", "dot2"),
     "add": ("accurate",),
+    # composites whose f32-builtin exponentials cap them at the fast class:
+    # the accurate tier is the ff.math-powered impl
+    "softmax": ("ff",),
+    "logsumexp": ("ff",),
+    # ff.math family: native f64 where the hardware has it (degrades to the
+    # compensated jnp formulation on TPU), else the FF kernel itself
+    **{op: ("f64", "jnp") for op in tuple(ffmath.UNARY22) + ("pow",)},
 }
 
 
@@ -655,3 +662,261 @@ def _norm_stats_pallas(x: Array, *, br: int = 256,
 
 register("norm_stats", "jnp", _norm_stats_jnp, default_for=("*",))
 register("norm_stats", "pallas", _norm_stats_pallas, default_for=("tpu",))
+
+
+# -- FF elementary functions (the ff.math subsystem) -------------------------
+#
+# Four implementation classes per function, mirroring the matmul tiers:
+#
+#   * ``jnp``     — the compensated reference: repro.core.ffmath argument
+#                   reduction + FF polynomial kernels over the barrier-
+#                   carrying core EFTs (the default on every backend
+#                   WITHOUT native f64 — i.e. everywhere but CPU below;
+#                   fuses into the surrounding XLA graph like the
+#                   arithmetic elementwise ops).
+#   * ``pallas``  — the same algorithm as a Pallas kernel (barrier-free
+#                   eft primitives; compiled on TPU, interpret-mode
+#                   validation elsewhere).  Bitwise-identical to ``jnp``
+#                   under the EFT-safe ISA contract.
+#   * ``f64``     — native double transcendental rounded to FF, scoped
+#                   exactly like ``matmul_f64`` (trace-local enable_x64
+#                   behind a module-level nested jit).  The accurate-tier
+#                   default on CPU; degrades to ``jnp`` on TPU (no f64
+#                   unit) — "f64-quality the fastest way this hardware
+#                   can".
+#   * ``fast``    — the f32 builtin on the rounded hi limb, lifted back to
+#                   FF with a zero lo.  ~2^-24: a *documented-contract*
+#                   escape hatch for throughput experiments, never a
+#                   default and never fast-winner eligible in ff.tune.
+
+MATH_UNARY_OPS: Tuple[str, ...] = tuple(sorted(ffmath.UNARY22))
+MATH_OPS: Tuple[str, ...] = MATH_UNARY_OPS + ("pow",)
+
+
+def _math_jnp(op: str):
+    fn = ffmath.UNARY22[op]
+
+    def impl(a, **_kw) -> FF:
+        af = _as_ff(a)
+        return FF(*fn(af.hi, af.lo, ffmath.CORE))
+    return impl
+
+
+def _math_pallas(op: str):
+    def impl(a, *, block=None, interpret: Optional[bool] = None,
+             **_kw) -> FF:
+        from repro.kernels import ff_math
+        af = _as_ff(a)
+        rh, rl = ff_math.math_elementwise(
+            op, af.hi, af.lo,
+            block=tuple(block) if block else ff_math.DEFAULT_BLOCK,
+            interpret=_interpret(interpret))
+        return FF(rh, rl)
+    return impl
+
+
+def _math_f64_fns():
+    # resolved lazily inside the jitted body so the x64 scope is active.
+    # gelu is spelled out with weakly-typed python-float constants:
+    # jax.nn.gelu's own constants canonicalize to f32 under the ambient
+    # (x64-off) jit config and poison the f64 trace
+    from jax import lax as _lax
+
+    # constants are DERIVED from the traced value (exp(x-x) == 1): a bare
+    # literal — python float or jnp.float64 — gets constant-folded at
+    # trace time and canonicalized back to f32 under the ambient x64-off
+    # config, poisoning the f64 graph (same hazard _pow_f64_jit dodges)
+    def sig(x):
+        one = jnp.exp(x - x)
+        return one / (one + jnp.exp(-x))
+
+    def gelu(x):
+        one = jnp.exp(x - x)
+        two = one + one
+        return (one / two) * x * (one + _lax.erf(x / jnp.sqrt(two)))
+
+    return {
+        "exp": jnp.exp, "expm1": jnp.expm1, "log": jnp.log,
+        "log1p": jnp.log1p, "tanh": jnp.tanh, "sigmoid": sig,
+        "erf": _lax.erf, "gelu": gelu,
+        "silu": lambda x: x * sig(x),
+    }
+
+
+@_ft.partial(jax.jit, static_argnames=("op",))
+def _math_f64_jit(op: str, ah: Array, al: Array) -> Tuple[Array, Array]:
+    """Native-f64 elementary function -> FF (the matmul_f64 corollary for
+    transcendentals).  Same trace-scoped enable_x64 behind a module-level
+    nested-jit boundary (see ``ffmatmul._matmul_f64_jit`` for why the
+    boundary is load-bearing under custom_vjp lowering)."""
+    import jax.experimental
+    from jax import lax
+
+    with jax.experimental.enable_x64():
+        x = (lax.convert_element_type(ah, jnp.float64)
+             + lax.convert_element_type(al, jnp.float64))
+        r = _math_f64_fns()[op](x)
+        hi = lax.convert_element_type(r, jnp.float32)
+        lo = lax.convert_element_type(
+            r - lax.convert_element_type(hi, jnp.float64), jnp.float32)
+    return hi, lo
+
+
+def _math_f64(op: str):
+    jnp_impl = _math_jnp(op)
+
+    def impl(a, **_kw) -> FF:
+        if backend() == "tpu":
+            return jnp_impl(a)
+        af = _as_ff(a)
+        return FF(*_math_f64_jit(op, af.hi, af.lo))
+    return impl
+
+
+_MATH_FAST_FNS = {
+    "exp": jnp.exp, "expm1": jnp.expm1, "log": jnp.log, "log1p": jnp.log1p,
+    "tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid,
+    "erf": jax.lax.erf, "gelu": lambda x: jax.nn.gelu(x, approximate=False),
+    "silu": jax.nn.silu,
+}
+
+
+def _math_fast(op: str):
+    fn = _MATH_FAST_FNS[op]
+
+    def impl(a, **_kw) -> FF:
+        af = _as_ff(a)
+        return FF.from_f32(fn(af.hi + af.lo))
+    return impl
+
+
+for _op in MATH_UNARY_OPS:
+    register(_op, "jnp", _math_jnp(_op), default_for=("*",))
+    register(_op, "pallas", _math_pallas(_op))
+    register(_op, "f64", _math_f64(_op), default_for=("cpu",))
+    register(_op, "fast", _math_fast(_op))
+
+
+def _pow_jnp(a, b, **_kw) -> FF:
+    af, bf = _as_ff(a), _as_ff(b)
+    return FF(*ffmath.pow22(af.hi, af.lo, bf.hi, bf.lo, ffmath.CORE))
+
+
+def _pow_pallas(a, b, *, block=None, interpret: Optional[bool] = None,
+                **_kw) -> FF:
+    from repro.kernels import ff_math
+    af, bf = _as_ff(a), _as_ff(b)
+    rh, rl = ff_math.math_elementwise(
+        "pow", af.hi, af.lo, bf.hi, bf.lo,
+        block=tuple(block) if block else ff_math.DEFAULT_BLOCK,
+        interpret=_interpret(interpret))
+    return FF(rh, rl)
+
+
+@jax.jit
+def _pow_f64_jit(ah, al, bh, bl) -> Tuple[Array, Array]:
+    import jax.experimental
+    from jax import lax
+
+    # domain test on the f32 limb (a < 0 iff hi < 0 for normalized FF):
+    # literal promotion inside the scoped-x64 region mixes f32/f64 operands.
+    # b == 0 is excluded: pow22's rule is b == 0 -> 1 LAST (0**0 == 1,
+    # (-2)**0 == 1), and the mask must not flip that between impl tiers
+    neg = (ah < jnp.float32(0)) & (bh != jnp.float32(0))
+    with jax.experimental.enable_x64():
+        a = (lax.convert_element_type(ah, jnp.float64)
+             + lax.convert_element_type(al, jnp.float64))
+        b = (lax.convert_element_type(bh, jnp.float64)
+             + lax.convert_element_type(bl, jnp.float64))
+        # match the FF kernel's domain rules (a < 0 -> nan, no integer-b
+        # special case) so impl choice never flips domain semantics.  The
+        # nan is derived from `a` (0/0) — a literal constant would be
+        # canonicalized back to f32 under the trace-scoped x64 config
+        nan64 = (a - a) / (a - a)         # 0/0; stays f64 under the
+        r = jnp.where(neg, nan64, jnp.power(a, b))    # scoped-x64 trace
+        hi = lax.convert_element_type(r, jnp.float32)
+        lo = lax.convert_element_type(
+            r - lax.convert_element_type(hi, jnp.float64), jnp.float32)
+    return hi, lo
+
+
+def _pow_f64(a, b, **_kw) -> FF:
+    if backend() == "tpu":
+        return _pow_jnp(a, b)
+    af, bf = _as_ff(a), _as_ff(b)
+    return FF(*_pow_f64_jit(af.hi, af.lo, bf.hi, bf.lo))
+
+
+def _pow_fast(a, b, **_kw) -> FF:
+    af, bf = _as_ff(a), _as_ff(b)
+    a32, b32 = af.hi + af.lo, bf.hi + bf.lo
+    return FF.from_f32(jnp.where((a32 < 0) & (b32 != 0),
+                                 jnp.float32(jnp.nan),
+                                 jnp.power(a32, b32)))
+
+
+register("pow", "jnp", _pow_jnp, default_for=("*",))
+register("pow", "pallas", _pow_pallas)
+register("pow", "f64", _pow_f64, default_for=("cpu",))
+register("pow", "fast", _pow_fast)
+
+
+# -- accurate-class softmax / logsumexp (ff.math-powered) --------------------
+#
+# The existing impls compute their exponentials with the f32 builtin, so
+# every term carries ~2^-24 relative error no matter how well the SUM is
+# compensated — the Daumas–Da Graça–Defour gap in miniature.  The "ff"
+# impls run exp in FF on an exact TwoSum-reduced argument and carry both
+# limb planes through the compensated sum, making the f32 output
+# correctly-rounded-class.  On TPU the whole chain is still ONE fused
+# Pallas kernel (ff_softmax(accurate=True)); elsewhere it is the jnp
+# formulation below.  Selected via impl="ff", ff.use, or tuned_accurate.
+
+def _ff_exp_terms(x: Array, axis: int):
+    """exp(x - max) in FF with the reduction held exact (TwoSum)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    dh, dl = T.two_sum(x, jnp.broadcast_to(-m, x.shape))
+    eh, el = ffmath.exp22(dh, dl, ffmath.CORE)
+    return m, FF(eh, el)
+
+
+def _ff_expsum(e: FF, axis: int, block: int) -> FF:
+    hi = compensated.ff_sum_blocked(e.hi, axis=axis, block=block)
+    lo = compensated.ff_sum_blocked(e.lo, axis=axis, block=block)
+    return core_ff.add22_accurate(hi, lo)
+
+
+def _softmax_ff(x: Array, axis: int = -1, *, block: int = 256,
+                br: int = 256, interpret: Optional[bool] = None, **_kw):
+    """Accurate-class softmax: FF exponentials + FF division per element."""
+    x = jnp.asarray(x, jnp.float32)
+    if backend() == "tpu" and interpret is not True \
+            and _last_axis_fusable(x, axis):
+        from repro.kernels import ff_fused
+        return ff_fused.ff_softmax(x, mode="softmax", br=br, accurate=True,
+                                   interpret=False)
+    _m, e = _ff_exp_terms(x, axis)
+    s = _ff_expsum(e, axis, block)
+    sb = FF(jnp.expand_dims(s.hi, axis % x.ndim),
+            jnp.expand_dims(s.lo, axis % x.ndim))
+    return core_ff.div22(e, FF(jnp.broadcast_to(sb.hi, x.shape),
+                               jnp.broadcast_to(sb.lo, x.shape))).hi
+
+
+def _logsumexp_ff(x: Array, axis: int = -1, *, block: int = 256,
+                  br: int = 256, interpret: Optional[bool] = None, **_kw):
+    """Accurate-class LSE: FF exponentials, FF log of the FF exp-sum."""
+    x = jnp.asarray(x, jnp.float32)
+    if backend() == "tpu" and interpret is not True \
+            and _last_axis_fusable(x, axis):
+        from repro.kernels import ff_fused
+        return ff_fused.ff_softmax(x, mode="logsumexp", br=br, accurate=True,
+                                   interpret=False)
+    m, e = _ff_exp_terms(x, axis)
+    s = _ff_expsum(e, axis, block)
+    logs = FF(*ffmath.log22(s.hi, s.lo, ffmath.CORE))
+    return core_ff.add212(logs, jnp.squeeze(m, axis=axis)).hi
+
+
+register("softmax", "ff", _softmax_ff)
+register("logsumexp", "ff", _logsumexp_ff)

@@ -48,7 +48,10 @@ def _summary(op: str) -> str:
             text = text.split(stop, 1)[0]
             break
     text = text.rstrip(".:")
-    return text if len(text) <= 90 else text[:87].rstrip() + "..."
+    text = text if len(text) <= 90 else text[:87].rstrip() + "..."
+    # a raw '|' (e.g. "|x| <= 1" in the erf docstring) would split the
+    # markdown table cell and break every column after it
+    return text.replace("|", "\\|")
 
 
 def render_api_table() -> str:

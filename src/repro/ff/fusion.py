@@ -31,11 +31,13 @@ executor:
     algorithms, same order, same barrier-carrying EFTs) — so tests can
     assert exact equivalence, and non-TPU backends lose nothing.
 
-Supported ops: ``+ - * /``, ``sqrt``, ``neg``, ``fma``, ``scale``, ``exp``/
-``log`` (f32-valued nodes only), FF limb access (``.hi``/``.lo``), ``pack``
-(build an FF from two f32 nodes), plus ONE optional *trailing* row
-reduction per output (``rowsum`` — compensated Neumaier cascade over the
-last axis, f32-valued nodes only).  Mixed FF/f32 promotion follows the
+Supported ops: ``+ - * /``, ``sqrt``, ``neg``, ``fma``, ``scale``,
+``exp``/``log`` (FF nodes run the FF-accurate ``ff.math`` kernels and
+stay FF; f32 nodes keep the hardware builtins bitwise), ``tanh``/
+``sigmoid`` (FF-accurate; f32 nodes are lifted), FF limb access
+(``.hi``/``.lo``), ``pack`` (build an FF from two f32 nodes), plus ONE
+optional *trailing* row reduction per output (``rowsum`` — compensated
+Neumaier cascade over the last axis, f32-valued nodes only).  Mixed FF/f32 promotion follows the
 dispatch registry exactly: ``ff+f32 -> Add212``, ``ff*f32 -> Mul212``,
 ``div`` lifts the f32 side, plain-f32 nodes stay plain f32 (so optimizer
 moment math, for example, is *not* silently promoted to FF).
@@ -58,7 +60,7 @@ from typing import Any, Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core import compensated
+from repro.core import compensated, ffmath
 from repro.core import ff as core_ff
 from repro.core.ff import FF
 
@@ -66,6 +68,12 @@ Array = jnp.ndarray
 
 # result planes per value dtype (the VMEM budget unit)
 _PLANES = {"ff": 2, "f32": 1}
+
+# FF transcendentals (repro.core.ffmath): argument reduction + compensated
+# polynomial bodies hold far more live temporaries than one arithmetic EFT
+# — surcharge their VMEM accounting so the Pallas executor shrinks tiles
+_DEEP_OPS = {"exp22", "log22", "tanh22", "sigmoid22"}
+_DEEP_OP_PLANES = 8
 
 
 class Instr(NamedTuple):
@@ -103,6 +111,8 @@ class Program(NamedTuple):
                     and self.leaf_kinds[int(ins.imm)] == "scalar":
                 continue
             n += 1 if op == "lift" else _PLANES[ins.dtype]
+            if op in _DEEP_OPS:
+                n += _DEEP_OP_PLANES
         return max(n, 1)
 
 
@@ -230,15 +240,33 @@ def sqrt(x: FFExpr) -> FFExpr:
 
 
 def exp(x: FFExpr) -> FFExpr:
+    """exp of a tracer node.  FF nodes run the FF-accurate ``ff.math``
+    kernel (``repro.core.ffmath.exp22``, ~2^-43) and stay FF; f32 nodes
+    keep the hardware ``jnp.exp`` (bitwise-stable for existing chains) —
+    lift with :func:`pack`/arithmetic first if you need the accurate one."""
     if x.dtype == "ff":
-        raise TypeError("exp is f32-valued only")
+        return x._tr.emit("exp22", (x._id,), dtype="ff")
     return x._tr.emit("fexp", (x._id,))
 
 
 def log(x: FFExpr) -> FFExpr:
+    """log of a tracer node: FF nodes -> FF-accurate ``log22``; f32 nodes
+    keep the hardware ``jnp.log`` (see :func:`exp`)."""
     if x.dtype == "ff":
-        raise TypeError("log is f32-valued only")
+        return x._tr.emit("log22", (x._id,), dtype="ff")
     return x._tr.emit("flog", (x._id,))
+
+
+def tanh(x: FFExpr) -> FFExpr:
+    """FF-accurate tanh (``ff.math`` kernel).  f32 nodes are lifted to FF
+    first — there is deliberately no f32-builtin form (the accuracy gap is
+    the reason this op exists)."""
+    return x._tr.emit("tanh22", (x._lift()._id,), dtype="ff")
+
+
+def sigmoid(x: FFExpr) -> FFExpr:
+    """FF-accurate logistic sigmoid; f32 nodes are lifted to FF first."""
+    return x._tr.emit("sigmoid22", (x._lift()._id,), dtype="ff")
 
 
 def fma(a: FFExpr, b: FFExpr, c: FFExpr) -> FFExpr:
@@ -373,6 +401,9 @@ def run_jnp(prog: Program, operands: Sequence[Any]) -> List[Any]:
             v = core_ff.fma22(env[args[0]], env[args[1]], env[args[2]])
         elif op == "neg22":
             v = -env[args[0]]
+        elif op in _DEEP_OPS:
+            x = env[args[0]]
+            v = FF(*getattr(ffmath, op)(x.hi, x.lo, ffmath.CORE))
         elif op == "lift":
             x = env[args[0]]
             v = FF(x, jnp.zeros_like(x))

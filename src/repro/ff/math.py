@@ -1,0 +1,124 @@
+"""``repro.ff.math`` — differentiable, dispatched FF elementary functions.
+
+The float-float *arithmetic* operators cap a pipeline's accuracy only
+until the first ``exp``/``log``/``tanh`` call — the hardware builtins are
+~2^-24-accurate, three orders of magnitude off the 2^-44 contract (the
+gap the paper's companion study measured on 2006 GPUs, alive and well in
+every f32 XLA backend).  This namespace closes it: classic argument
+reduction + compensated FF polynomial kernels (``repro.core.ffmath``)
+behind the standard ``repro.ff`` machinery —
+
+  * registry dispatch per function (``jnp`` compensated reference /
+    ``pallas`` kernel / native-``f64`` CPU tier / documented ``fast`` f32
+    class), shape-aware and ``ff.tune``-aware like every other op;
+  * ``jax.custom_vjp`` rules computing derivatives IN FF
+    (``repro.ff.autodiff``), so ``exp``/``gelu``/... gradients hold
+    ~2^-43 like the arithmetic ops;
+  * fusion-tracer integration: ``fusion.exp``/``log``/``tanh``/
+    ``sigmoid`` on FF nodes compile into fused one-kernel chains, and the
+    accurate-class ``softmax``/``logsumexp`` impls ride these kernels.
+
+Usage::
+
+    import repro.ff as ff
+
+    y = ff.exp(x)                    # FF in/out, ~2^-43 on reduced domain
+    y = ff.tanh(x, impl="pallas")    # explicit kernel selection
+    g = jax.grad(lambda t: ff.silu(t).to_f32().sum())(x)   # FF-grade grad
+
+Error contracts per function are doctested in ``docs/NUMERICS.md``;
+reduction schemes and budgets in ``docs/DESIGN_math.md``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax.numpy as jnp
+
+from repro.core.ff import FF
+from repro.ff import dispatch
+from repro.ff.autodiff import (
+    Operand, _broadcast2, _bucket2d, _kind, _math1_p, _merge_tuned,
+    _operand, _opts_tuple, _pow_p, _shape_of,
+)
+
+Array = jnp.ndarray
+
+
+def _unary_call(op: str, a: Operand, impl: Optional[str], opts: dict) -> FF:
+    a = _operand(a)
+    shape = _bucket2d(_shape_of(a))
+    name = dispatch.resolve_name(op, impl, shape=shape)
+    return _math1_p((op, name, _kind(a),
+                     _opts_tuple(_merge_tuned(op, name, shape, opts))), a)
+
+
+def exp(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF exponential (argument reduction + compensated polynomial).
+    <= 2 ulp_FF (~2^-43) on the reduced domain; saturates at the f32
+    range edges.  FF or f32 operand -> FF."""
+    return _unary_call("exp", a, impl, opts)
+
+
+def expm1(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF exp(x) - 1 with full relative accuracy near 0 (the k = 0
+    reduction branch is the exp kernel without its +1)."""
+    return _unary_call("expm1", a, impl, opts)
+
+
+def log(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF natural logarithm (frexp-style decomposition + atanh series).
+    nan for x < 0, -inf at 0."""
+    return _unary_call("log", a, impl, opts)
+
+
+def log1p(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF log(1 + x), fully accurate for tiny x (never forms 1 + x in
+    the near branch)."""
+    return _unary_call("log1p", a, impl, opts)
+
+
+def tanh(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF hyperbolic tangent (Maclaurin kernel small, bounded rational
+    expm1 form large, exact +-1 saturation)."""
+    return _unary_call("tanh", a, impl, opts)
+
+
+def sigmoid(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF logistic sigmoid via the cancellation-free two-sided form."""
+    return _unary_call("sigmoid", a, impl, opts)
+
+
+def erf(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF error function (alternating series |x|<=1, positive Kummer
+    series to 4, asymptotic erfc beyond; exact +-1 saturation)."""
+    return _unary_call("erf", a, impl, opts)
+
+
+def gelu(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF exact-form GELU: 0.5 x (1 + erf(x/sqrt2)) — the transcendental
+    the logit path actually wants (no tanh approximation)."""
+    return _unary_call("gelu", a, impl, opts)
+
+
+def silu(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
+    """FF SiLU / swish: x * sigmoid(x), cancellation-free everywhere."""
+    return _unary_call("silu", a, impl, opts)
+
+
+def pow(a: Operand, b: Operand, *, impl: Optional[str] = None,  # noqa: A001
+        **opts) -> FF:
+    """FF power a**b = exp(b log a) for a > 0 (error grows with
+    |b ln a| — see NUMERICS).  IEEE edge rules for a in {0, inf}, b = 0."""
+    a, b = _broadcast2(_operand(a), _operand(b))
+    shape = _bucket2d(jnp.broadcast_shapes(_shape_of(a), _shape_of(b)))
+    name = dispatch.resolve_name("pow", impl, shape=shape)
+    return _pow_p((name, _kind(a), _kind(b),
+                   _opts_tuple(_merge_tuned("pow", name, shape, opts))),
+                  a, b)
+
+
+UNARY = ("exp", "expm1", "log", "log1p", "tanh", "sigmoid", "erf", "gelu",
+         "silu")
+__all__ = list(UNARY) + ["pow"]

@@ -69,9 +69,22 @@ ACCURACY_CLASS: Dict[str, str] = {
 # paper-quality (the equivalence tests pin them to the op-by-op reference),
 # with one exception: sloppy Add22 has an unbounded relative bound under
 # cancellation, so only the "accurate" variant is in the accurate tier.
+# The ff.math family: jnp/pallas/f64 all meet the FF contract; "fast" is
+# the documented f32-builtin escape (~2^-24).  softmax/logsumexp gained a
+# genuinely FF-accurate "ff" impl in the math PR — the f32-builtin-exp
+# impls are the fast class (every term carries ~2^-24 regardless of the
+# compensated sum), "ff" is the accurate tier.
+_MATH_TIER = {"jnp": "accurate", "pallas": "accurate", "f64": "accurate",
+              "fast": "fast"}
 _OP_ACCURACY: Dict[str, Dict[str, str]] = {
     "matmul": ACCURACY_CLASS,
     "add": {"jnp": "fast", "pallas": "fast", "accurate": "accurate"},
+    "softmax": {"jnp": "fast", "pallas": "fast", "f64": "fast",
+                "ff": "accurate"},
+    "logsumexp": {"jnp": "fast", "pallas": "fast", "f64": "fast",
+                  "ff": "accurate"},
+    **{op: _MATH_TIER for op in ("exp", "expm1", "log", "log1p", "tanh",
+                                 "sigmoid", "erf", "gelu", "silu", "pow")},
 }
 
 
@@ -111,6 +124,13 @@ SWEEP_CONFIGS: Dict[str, List[dict]] = {
 _FAST_ELIGIBLE: Dict[str, Tuple[str, ...]] = {
     "sum": ("blocked", "pallas_rowsum"),
     "add": ("jnp", "pallas"),
+    # the f32-class "fast" escape and the bit-different accurate "ff"
+    # composites must never be crowned the silent default
+    "softmax": ("jnp", "pallas", "f64"),
+    "logsumexp": ("jnp", "pallas", "f64"),
+    **{op: ("jnp", "pallas", "f64") for op in
+       ("exp", "expm1", "log", "log1p", "tanh", "sigmoid", "erf", "gelu",
+        "silu", "pow")},
 }
 
 # elementwise/reduction family: block-shape sweeps per (op, impl).  Sweeps
@@ -120,6 +140,9 @@ _FAST_ELIGIBLE: Dict[str, Tuple[str, ...]] = {
 _EW_BLOCKS = [{"block": (128, 512)}, {"block": (256, 512)},
               {"block": (512, 512)}]
 _ROW_BLOCKS = [{"br": 128}, {"br": 256}]
+# transcendental kernels carry deep live sets: sweep smaller tiles
+_MATH_BLOCKS = [{"block": (64, 512)}, {"block": (128, 512)},
+                {"block": (256, 512)}]
 SWEEP_CONFIGS_BY_OP: Dict[str, Dict[str, List[dict]]] = {
     "matmul": SWEEP_CONFIGS,
     "add": {"pallas": _EW_BLOCKS},
@@ -128,9 +151,12 @@ SWEEP_CONFIGS_BY_OP: Dict[str, Dict[str, List[dict]]] = {
     "sqrt": {"pallas": _EW_BLOCKS},
     "sum": {"pallas_rowsum": [{"br": 256, "bc": 512},
                               {"br": 512, "bc": 512}]},
-    "logsumexp": {"pallas": _ROW_BLOCKS},
-    "softmax": {"pallas": _ROW_BLOCKS},
+    "logsumexp": {"pallas": _ROW_BLOCKS, "ff": _ROW_BLOCKS},
+    "softmax": {"pallas": _ROW_BLOCKS, "ff": _ROW_BLOCKS},
     "norm_stats": {"pallas": _ROW_BLOCKS},
+    **{op: {"pallas": _MATH_BLOCKS} for op in
+       ("exp", "expm1", "log", "log1p", "tanh", "sigmoid", "erf", "gelu",
+        "silu", "pow")},
 }
 
 
@@ -194,6 +220,11 @@ def _args_adamw(rng, dims):
     return args, {"eps": 1e-8, "wd": 0.1}
 
 
+def _args_pow(rng, dims):
+    return (_ff_pair(rng, tuple(dims), positive=True),
+            _ff_pair(rng, tuple(dims))), {}
+
+
 _TUNE_ARGS = {
     "matmul": _args_matmul,
     "add": _args_ew2(),
@@ -206,6 +237,11 @@ _TUNE_ARGS = {
     "mean_sq": _args_stats,
     "norm_stats": _args_stats,
     "adamw_update": _args_adamw,
+    # ff.math family: positive FF operands sit inside every function's
+    # domain (log/log1p/pow included), so one builder serves them all
+    **{op: _args_ew1 for op in ("exp", "expm1", "log", "log1p", "tanh",
+                                "sigmoid", "erf", "gelu", "silu")},
+    "pow": _args_pow,
 }
 
 _TABLE: Dict[str, dict] = {}     # op -> bucket -> record
@@ -439,7 +475,11 @@ def tune(op: str = "matmul",
       * ``matmul`` — 3-dim ``(M, K, N)`` shapes (PR 2);
       * elementwise — ``add``/``mul``/``div``/``sqrt``, 2-dim ``(R, C)``;
       * reductions & fused composites — ``sum``/``logsumexp``/``softmax``/
-        ``mean_sq``/``norm_stats``/``adamw_update``, 2-dim ``(R, C)``.
+        ``mean_sq``/``norm_stats``/``adamw_update``, 2-dim ``(R, C)``;
+      * ``ff.math`` — ``exp``/``expm1``/``log``/``log1p``/``tanh``/
+        ``sigmoid``/``erf``/``gelu``/``silu``/``pow``, 2-dim ``(R, C)``
+        (per-op accuracy classes: jnp/pallas/f64 are FF-contract tier,
+        the f32-builtin ``fast`` class is never crowned a default).
 
     Sweeps only cover tile-shape knobs that cannot change result bits
     (see SWEEP_CONFIGS_BY_OP) — a tuned table can shift where time is

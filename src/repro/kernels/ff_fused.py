@@ -39,11 +39,18 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import ffmath
 from repro.core.ff import FF
 from repro.kernels import eft
 from repro.kernels.ff_elementwise import (
     LANE, SUBLANE, _pad_to, _round_up, _spec_for, _to_2d, broadcast_planes,
 )
+
+# FF transcendentals usable inside fused chains (tracer ops -> the generic
+# repro.core.ffmath bodies, instantiated with THIS module's barrier-free
+# EFTs — the same arithmetic the jnp executor replays with the barrier-
+# carrying core primitives, so the two stay bitwise-aligned)
+_DEEP_OPS = ("exp22", "log22", "tanh22", "sigmoid22")
 
 Array = jnp.ndarray
 
@@ -114,6 +121,9 @@ def _eval_instrs(prog, leaf_blocks):
         elif op == "neg22":
             h, l = env[args[0]]
             v = (-h, -l)
+        elif op in _DEEP_OPS:
+            h, l = env[args[0]]
+            v = getattr(ffmath, op)(h, l, eft)
         elif op == "lift":
             x = env[args[0]]
             v = (x, jnp.zeros_like(x))
@@ -359,13 +369,31 @@ def _row_block(R: int, C: int, planes: int, br: int) -> Tuple[int, int]:
     return br, Cp
 
 
-def _softmax_kernel(x_ref, out_ref, *, C: int, mode: str):
+def _softmax_kernel(x_ref, out_ref, *, C: int, mode: str, accurate: bool):
     x = x_ref[...]                                     # (br, Cp)
     mask = lax.broadcasted_iota(jnp.int32, x.shape, 1) < C
     xm = jnp.where(mask, x, jnp.float32(-jnp.inf))
     m = jnp.max(xm, axis=1, keepdims=True)             # (br, 1)
-    e = jnp.where(mask, jnp.exp(x - m), jnp.float32(0))
     z = jnp.zeros((x.shape[0], LANE), jnp.float32)
+    if accurate:
+        # FF exponentials: x - m held exact (TwoSum), exp via the ff.math
+        # kernel, BOTH limb planes through the lane cascade -> FF sum
+        dh, dl = eft.two_sum(x, -m)
+        eh, el = ffmath.exp22(dh, dl, eft)
+        eh = jnp.where(mask, eh, jnp.float32(0))
+        el = jnp.where(mask, el, jnp.float32(0))
+        s, c, cc = _lane_cascade(eh, z, z, z, LANE)
+        s, c, cc = _lane_cascade(el, s, c, cc, LANE)
+        fh, fl = _fold_lanes(s, c, cc)                 # FF row sum
+        if mode == "softmax":
+            qh, _ql = eft.div22(eh, el, fh[:, None], fl[:, None])
+            out_ref[...] = qh
+        else:
+            lh, ll = ffmath.log22(fh[:, None], fl[:, None], eft)
+            oh, _ol = eft.add212(lh, ll, m)
+            out_ref[...] = oh
+        return
+    e = jnp.where(mask, jnp.exp(x - m), jnp.float32(0))
     s, c, cc = _lane_cascade(e, z, z, z, LANE)
     fh, _fl = _fold_lanes(s, c, cc)                    # (br,)
     if mode == "softmax":
@@ -374,15 +402,22 @@ def _softmax_kernel(x_ref, out_ref, *, C: int, mode: str):
         out_ref[...] = m + jnp.log(fh)[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "br", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "br", "accurate", "interpret"))
 def ff_softmax(x: Array, *, mode: str = "softmax", br: int = 256,
-               interpret: bool = False):
+               accurate: bool = False, interpret: bool = False):
     """One-kernel compensated softmax / logsumexp over the last axis.
 
     The whole row lives in VMEM (C <= MAX_FUSED_COLS — callers fall back
     to the jnp impl beyond); the exp-sum uses the same lane-parallel
     Neumaier cascade as the fused rowsum.  ``mode``: "softmax" returns the
     (R, C) probabilities, "logsumexp" the (R,) LSE values.
+
+    ``accurate=True`` is the ``ff.math``-powered accurate class: the
+    exponentials run the FF exp kernel on an exact TwoSum-reduced
+    argument and both limb planes feed the compensated sum, so the f32
+    result is correctly-rounded-class instead of carrying the ~2^-24
+    builtin-exp error into every term (still ONE kernel launch).
     """
     x = jnp.asarray(x, jnp.float32)
     shape = x.shape
@@ -391,7 +426,7 @@ def ff_softmax(x: Array, *, mode: str = "softmax", br: int = 256,
     if C > MAX_FUSED_COLS:
         raise ValueError(f"row length {C} exceeds MAX_FUSED_COLS "
                          f"({MAX_FUSED_COLS}); use the jnp impl")
-    br, Cp = _row_block(R, C, planes=3, br=br)
+    br, Cp = _row_block(R, C, planes=9 if accurate else 3, br=br)
     x2 = _pad_to(x2, br, Cp)
     Rp = x2.shape[0]
     row_spec = pl.BlockSpec((br, Cp), lambda i: (i, 0))
@@ -402,7 +437,8 @@ def ff_softmax(x: Array, *, mode: str = "softmax", br: int = 256,
         out_shape = jax.ShapeDtypeStruct((Rp, 1), jnp.float32)
         out_spec = pl.BlockSpec((br, 1), lambda i: (i, 0))
     out = pl.pallas_call(
-        functools.partial(_softmax_kernel, C=C, mode=mode),
+        functools.partial(_softmax_kernel, C=C, mode=mode,
+                          accurate=accurate),
         out_shape=out_shape,
         grid=(Rp // br,),
         in_specs=[row_spec],

@@ -1,0 +1,98 @@
+"""Pallas TPU kernels for the FF elementary functions (``ff.math``).
+
+Each kernel streams (8,128)-aligned VMEM tiles through the VPU and runs
+the SAME generic argument-reduction + compensated-polynomial algorithm as
+the jnp implementations (``repro.core.ffmath``), instantiated with the
+barrier-free ``repro.kernels.eft`` primitives — so the compiled kernel,
+the interpret-mode kernel and the jnp reference are the identical
+arithmetic (bitwise under the EFT-safe ISA contract, like the fused
+elementwise chains).
+
+Transcendental bodies are much deeper than the arithmetic kernels
+(Horner chains, the erf series loops carry four live FF accumulators per
+tile), so the default block is smaller than ``ff_elementwise``'s — the
+grid grows, HBM traffic does not.  Broadcasting, padding and tiling all
+reuse the ``ff_elementwise`` helpers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import ffmath
+from repro.kernels import eft
+from repro.kernels.ff_elementwise import (
+    _pad_to, _round_up, _spec_for, broadcast_planes, pick_block,
+)
+
+Array = jnp.ndarray
+
+# deeper bodies -> smaller tiles: 128*512*4B = 256 KiB/plane, 6 io planes
+# + the deepest live set (erf's series carries) stays well under ~4 MiB
+DEFAULT_BLOCK = (128, 512)
+
+
+def _unary_kernel(op):
+    fn = ffmath.UNARY22[op]
+
+    def kernel(ah_ref, al_ref, rh_ref, rl_ref):
+        rh, rl = fn(ah_ref[...], al_ref[...], eft)
+        rh_ref[...] = rh
+        rl_ref[...] = rl
+
+    return kernel
+
+
+def _pow_kernel(ah_ref, al_ref, bh_ref, bl_ref, rh_ref, rl_ref):
+    rh, rl = ffmath.pow22(ah_ref[...], al_ref[...],
+                          bh_ref[...], bl_ref[...], eft)
+    rh_ref[...] = rh
+    rl_ref[...] = rl
+
+
+_KERNELS = {op: (_unary_kernel(op), 2) for op in ffmath.UNARY22}
+_KERNELS["pow"] = (_pow_kernel, 4)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block", "interpret"))
+def math_elementwise(op: str, *arrays: Array,
+                     block: Tuple[int, int] = DEFAULT_BLOCK,
+                     interpret: bool = False) -> Tuple[Array, Array]:
+    """Run an FF math kernel over broadcastable hi/lo limb planes.
+
+    Same contract as ``ff_elementwise.elementwise``: operands flatten to
+    2-D against the broadcast shape, scalar/row/column operands stay
+    un-materialized via their BlockSpec, outputs un-pad back.  ``op`` is
+    one of ``ffmath.UNARY22`` (two planes in) or ``"pow"`` (four).
+    """
+    kernel, n_in = _KERNELS[op]
+    assert len(arrays) == n_in, (op, len(arrays))
+    arrays = tuple(jnp.asarray(a, jnp.float32) for a in arrays)
+    planes, orig_shape = broadcast_planes(arrays)
+    R = max(p.shape[0] for p in planes)
+    C = max(p.shape[1] for p in planes)
+    br, bc = pick_block(R, C, block)
+    padded = [_pad_to(p, br if (p.shape[0] == R or R == 1) else 1,
+                      bc if (p.shape[1] == C or C == 1) else 1)
+              for p in planes]
+    Rp, Cp = _round_up(R, br), _round_up(C, bc)
+    grid = (Rp // br, Cp // bc)
+    in_specs = [_spec_for(p.shape, (Rp, Cp), br, bc) for p in padded]
+    out_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    out_shape = jax.ShapeDtypeStruct((Rp, Cp), jnp.float32)
+    rh, rl = pl.pallas_call(
+        kernel,
+        out_shape=(out_shape, out_shape),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(out_spec, out_spec),
+        interpret=interpret,
+    )(*padded)
+    rh = rh[:R, :C].reshape(orig_shape)
+    rl = rl[:R, :C].reshape(orig_shape)
+    return rh, rl

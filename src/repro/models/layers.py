@@ -298,9 +298,17 @@ def mlp_params(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
     }
 
 
-def mlp_apply(p: Params, x: Array) -> Array:
+def mlp_apply(p: Params, x: Array, ff_math: bool = False) -> Array:
+    """SwiGLU MLP.  ``ff_math=True`` (policy ``ff_math`` switch) computes
+    the silu gate with the FF elementary function (``ff.silu``, ~2^-43)
+    instead of the ~2^-24 f32 builtin; the default is bitwise-identical
+    to the pre-``ff.math`` library."""
     dt = x.dtype
-    g = jax.nn.silu(x @ p["w_gate"].astype(dt))
+    pre = x @ p["w_gate"].astype(dt)
+    if ff_math:
+        g = ff.to_f32(ff.silu(pre.astype(jnp.float32))).astype(dt)
+    else:
+        g = jax.nn.silu(pre)
     u = x @ p["w_up"].astype(dt)
     return (g * u) @ p["w_down"].astype(dt)
 
@@ -321,11 +329,20 @@ def embed_apply(p: Params, tokens: Array, dtype) -> Array:
     return p["tok"].astype(dtype)[tokens]
 
 
-def unembed_apply(p: Params, x: Array, cfg: ModelConfig) -> Array:
+def unembed_apply(p: Params, x: Array, cfg: ModelConfig,
+                  ff_math: bool = False) -> Array:
+    """Unembedding (+ optional logit soft-cap).  ``ff_math=True`` runs
+    the soft-cap tanh through ``ff.tanh`` — the cap is the LAST op before
+    the loss/logprob reductions, so the builtin's ~2^-24 error otherwise
+    floors everything the FF loss machinery measures downstream."""
     dt = x.dtype
     w = p["unembed"].astype(dt) if "unembed" in p else p["tok"].astype(dt).T
     logits = x @ w
     if cfg.logit_softcap:
         c = cfg.logit_softcap
-        logits = c * jnp.tanh(logits / c)
+        if ff_math:
+            t = ff.tanh(logits.astype(jnp.float32) / jnp.float32(c))
+            logits = (jnp.float32(c) * ff.to_f32(t)).astype(dt)
+        else:
+            logits = c * jnp.tanh(logits / c)
     return logits

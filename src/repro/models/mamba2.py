@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+import repro.ff as ff
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, rms_norm
 
@@ -25,6 +26,26 @@ Array = jnp.ndarray
 Params = Dict[str, Any]
 
 CHUNK = 256
+
+
+def _exp(x: Array, ff_math: bool) -> Array:
+    """exp for the SSD decay chains: the f32 builtin (bitwise-default),
+    or the FF elementary function rounded back to f32 (policy
+    ``ff_math`` switch) — the decay products ``exp(a_i)...exp(a_j)``
+    compound the builtin's ~2^-24 per-factor error across a whole chunk,
+    which is exactly the error class the FF exp removes."""
+    if ff_math:
+        return ff.to_f32(ff.exp(x))
+    return jnp.exp(x)
+
+
+def _softplus(x: Array, ff_math: bool) -> Array:
+    """dt = softplus(raw): builtin, or the stable FF form
+    ``max(x, 0) + log1p(exp(-|x|))`` riding ``ff.exp``/``ff.log1p``."""
+    if ff_math:
+        t = ff.log1p(ff.exp(-jnp.abs(x)))
+        return jnp.maximum(x, jnp.float32(0.0)) + ff.to_f32(t)
+    return jax.nn.softplus(x)
 
 
 def ssd_params(key, cfg: ModelConfig) -> Params:
@@ -76,13 +97,17 @@ def _segsum(a: Array) -> Array:
 
 
 def ssd_scan(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
-             state: Array | None = None) -> Tuple[Array, Array]:
+             state: Array | None = None,
+             ff_math: bool = False) -> Tuple[Array, Array]:
     """Chunked SSD.
 
     x: (B, S, H, P); dt: (B, S, H) (post-softplus); A: (H,) negative;
     Bm, Cm: (B, S, N)  (single SSM group, broadcast over heads);
     state: optional initial (B, H, P, N).
     Returns (y (B,S,H,P), final_state).
+
+    ``ff_math=True`` routes every decay exponential through ``ff.exp``
+    (policy switch; default bitwise-identical to the builtin path).
     """
     Bsz, S, H, P = x.shape
     N = Bm.shape[-1]
@@ -105,7 +130,7 @@ def ssd_scan(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
     a = dtc * A[None, None, None, :]                    # (B,nc,Q,H) negative
     a_t = a.transpose(0, 1, 3, 2)                       # (B,nc,H,Q)
     a_cum = jnp.cumsum(a_t, axis=-1)                    # within-chunk
-    L = jnp.exp(_segsum(a_t))                           # (B,nc,H,Q,Q)
+    L = _exp(_segsum(a_t), ff_math)                     # (B,nc,H,Q,Q)
 
     # weighted inputs
     xdt = xc * dtc[..., None]                           # (B,nc,Q,H,P)
@@ -117,12 +142,12 @@ def ssd_scan(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
     # note: einsum above needs xdt as (B,nc,K,H,P): same layout ✓
 
     # 2) chunk-final states: decay from position k to end of chunk
-    decay_end = jnp.exp(a_cum[..., -1:] - a_cum)        # (B,nc,H,Q)
+    decay_end = _exp(a_cum[..., -1:] - a_cum, ff_math)  # (B,nc,H,Q)
     states = jnp.einsum("bckn,bchk,bckhp->bchpn",
                         Bc, decay_end, xdt)             # (B,nc,H,P,N)
 
     # 3) inter-chunk recurrence
-    chunk_decay = jnp.exp(a_cum[..., -1])               # (B,nc,H)
+    chunk_decay = _exp(a_cum[..., -1], ff_math)         # (B,nc,H)
 
     def step(carry, inp):
         st = carry                                      # (B,H,P,N)
@@ -138,7 +163,7 @@ def ssd_scan(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
     prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
 
     # 4) inter-chunk output: decay from chunk start to position q
-    decay_in = jnp.exp(a_cum)                           # (B,nc,H,Q)
+    decay_in = _exp(a_cum, ff_math)                     # (B,nc,H,Q)
     y_off = jnp.einsum("bcqn,bchq,bchpn->bcqhp",
                        Cc, decay_in, prev_states)
 
@@ -148,7 +173,8 @@ def ssd_scan(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
 
 def ssd_block_apply(p: Params, x: Array, cfg: ModelConfig,
                     state: Params | None = None,
-                    return_state: bool = False):
+                    return_state: bool = False,
+                    ff_math: bool = False):
     """Full mamba2 mixer: in_proj -> conv -> SSD -> gated norm -> out_proj."""
     B, S, d = x.shape
     di = cfg.ssm_d_inner
@@ -168,13 +194,14 @@ def ssd_block_apply(p: Params, x: Array, cfg: ModelConfig,
     Bm = conv_out[..., di:di + N]
     Cm = conv_out[..., di + N:]
 
-    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
-                         + p["dt_bias"][None, None, :])
-    A = -jnp.exp(p["A_log"])                            # (H,) negative
+    dt = _softplus(dt_raw.astype(jnp.float32)
+                   + p["dt_bias"][None, None, :], ff_math)
+    A = -_exp(p["A_log"], ff_math)                      # (H,) negative
     xh = xin.reshape(B, S, H, P)
     y, final = ssd_scan(xh.astype(jnp.float32), dt, A,
                         Bm.astype(jnp.float32), Cm.astype(jnp.float32),
-                        None if state is None else state["ssm"])
+                        None if state is None else state["ssm"],
+                        ff_math=ff_math)
     y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(B, S, di).astype(dt_x)
     y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
@@ -196,7 +223,8 @@ def ssd_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
 
 
 def ssd_decode_step(p: Params, x: Array, cfg: ModelConfig,
-                    state: Params) -> Tuple[Array, Params]:
+                    state: Params,
+                    ff_math: bool = False) -> Tuple[Array, Params]:
     """One-token recurrent update.  x: (B, 1, d)."""
     B, S, d = x.shape
     assert S == 1
@@ -220,10 +248,10 @@ def ssd_decode_step(p: Params, x: Array, cfg: ModelConfig,
     Bm = conv_out[..., di:di + N].astype(jnp.float32)
     Cm = conv_out[..., di + N:].astype(jnp.float32)
 
-    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
-                         + p["dt_bias"][None, None, :])[:, 0]     # (B,H)
-    A = -jnp.exp(p["A_log"])
-    decay = jnp.exp(dt * A[None, :])                               # (B,H)
+    dt = _softplus(dt_raw.astype(jnp.float32)
+                   + p["dt_bias"][None, None, :], ff_math)[:, 0]  # (B,H)
+    A = -_exp(p["A_log"], ff_math)
+    decay = _exp(dt * A[None, :], ff_math)                         # (B,H)
     xh = xin.reshape(B, H, P).astype(jnp.float32)
     dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm[:, 0], xh)
     st = state["ssm"].astype(jnp.float32) * decay[..., None, None] + dBx

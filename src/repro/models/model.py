@@ -161,16 +161,19 @@ def _decoder_layer(x: Array, lp: Params, cfg: ModelConfig,
     h = rms_norm(x, lp["ln2"], cfg.norm_eps, ff_stats=policy.ff_reductions)
     if "router" in lp["ffn"]:
         f, aux = moe_lib.moe_apply(lp["ffn"], h, cfg,
-                                   ff_stats=policy.ff_reductions)
+                                   ff_stats=policy.ff_reductions,
+                                   ff_math=policy.ff_math)
     else:
-        f, aux = mlp_apply(lp["ffn"], h), jnp.float32(0)
+        f, aux = (mlp_apply(lp["ffn"], h, ff_math=policy.ff_math),
+                  jnp.float32(0))
     return x + f, aux
 
 
 def _ssm_layer(x: Array, lp: Params, cfg: ModelConfig,
                policy: PrecisionPolicy) -> Array:
     h = rms_norm(x, lp["ln"], cfg.norm_eps, ff_stats=policy.ff_reductions)
-    return x + mamba2.ssd_block_apply(lp["mixer"], h, cfg)
+    return x + mamba2.ssd_block_apply(lp["mixer"], h, cfg,
+                                      ff_math=policy.ff_math)
 
 
 def _hybrid_period(x: Array, pp, cfg: ModelConfig, policy: PrecisionPolicy,
@@ -182,15 +185,17 @@ def _hybrid_period(x: Array, pp, cfg: ModelConfig, policy: PrecisionPolicy,
         if "mixer_attn" in lp:
             m = attn_apply(lp["mixer_attn"], h, cfg, positions=positions)
         else:
-            m = mamba2.ssd_block_apply(lp["mixer_ssd"], h, cfg)
+            m = mamba2.ssd_block_apply(lp["mixer_ssd"], h, cfg,
+                                       ff_math=policy.ff_math)
         x = x + m
         h = rms_norm(x, lp["ln2"], cfg.norm_eps, ff_stats=policy.ff_reductions)
         if "ffn_moe" in lp:
             f, aux = moe_lib.moe_apply(lp["ffn_moe"], h, cfg,
-                                       ff_stats=policy.ff_reductions)
+                                       ff_stats=policy.ff_reductions,
+                                       ff_math=policy.ff_math)
             aux_total = aux_total + aux
         else:
-            f = mlp_apply(lp["ffn_mlp"], h)
+            f = mlp_apply(lp["ffn_mlp"], h, ff_math=policy.ff_math)
         x = x + f
     return x, aux_total
 
@@ -234,7 +239,8 @@ def _encoder_stack(params: Params, frames: Array, cfg: ModelConfig,
         h = h + attn_apply(lp["attn"], z, cfg, positions=positions,
                            causal=False)
         z = rms_norm(h, lp["ln2"], cfg.norm_eps, ff_stats=policy.ff_reductions)
-        return h + mlp_apply(lp["ffn"], z), None
+        return h + mlp_apply(lp["ffn"], z,
+                             ff_math=policy.ff_math), None
 
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
@@ -254,7 +260,8 @@ def _encdec_decoder(params: Params, x: Array, enc: Array, cfg: ModelConfig,
         z = rms_norm(h, lp["ln2"], cfg.norm_eps, ff_stats=policy.ff_reductions)
         h = h + _cross_attn(lp["xattn"], z, enc, cfg, positions, enc_pos)
         z = rms_norm(h, lp["ln3"], cfg.norm_eps, ff_stats=policy.ff_reductions)
-        return h + mlp_apply(lp["ffn"], z), None
+        return h + mlp_apply(lp["ffn"], z,
+                             ff_math=policy.ff_math), None
 
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
@@ -292,7 +299,8 @@ def chunked_cross_entropy(x: Array, params: Params, targets: Array,
     B, S, d = x.shape
     c = cfg.loss_chunk
     if not c or S <= c:
-        logits = unembed_apply(params["embed"], x, cfg)
+        logits = unembed_apply(params["embed"], x, cfg,
+                               ff_math=policy.ff_math)
         return cross_entropy(logits, targets, policy)
     pad = (-S) % c
     mask = jnp.ones((B, S), jnp.float32)
@@ -309,7 +317,8 @@ def chunked_cross_entropy(x: Array, params: Params, targets: Array,
         tot, cnt = carry
         xi, ti, mi = args
         xi = act_shd.constrain_hidden(xi)
-        logits = unembed_apply(params["embed"], xi, cfg).astype(jnp.float32)
+        logits = unembed_apply(params["embed"], xi, cfg,
+                               ff_math=policy.ff_math).astype(jnp.float32)
         if policy.ff_reductions:
             lse = ff.logsumexp(logits, axis=-1)
         else:
@@ -469,9 +478,10 @@ def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
             z = rms_norm(h, lp["ln2"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
             if "router" in lp["ffn"]:
-                f, _ = moe_lib.moe_apply(lp["ffn"], z, cfg)
+                f, _ = moe_lib.moe_apply(lp["ffn"], z, cfg,
+                                         ff_math=policy.ff_math)
             else:
-                f = mlp_apply(lp["ffn"], z)
+                f = mlp_apply(lp["ffn"], z, ff_math=policy.ff_math)
             return h + f, lcache
 
         if cfg.remat:
@@ -486,7 +496,8 @@ def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
             z = rms_norm(h, lp["ln"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
             m, new_state = mamba2.ssd_block_apply(
-                lp["mixer"], z, cfg, state=None, return_state=True)
+                lp["mixer"], z, cfg, state=None, return_state=True,
+                ff_math=policy.ff_math)
             return h + m, new_state
 
         if cfg.remat:
@@ -510,15 +521,18 @@ def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
                     new_cache[f"attn_{i}"] = c
                 else:
                     a, st = mamba2.ssd_block_apply(
-                        lp["mixer_ssd"], z, cfg, return_state=True)
+                        lp["mixer_ssd"], z, cfg, return_state=True,
+                        ff_math=policy.ff_math)
                     new_cache[f"ssm_{i}"] = st
                 h = h + a
                 z = rms_norm(h, lp["ln2"], cfg.norm_eps,
                              ff_stats=policy.ff_reductions)
                 if "ffn_moe" in lp:
-                    f, _ = moe_lib.moe_apply(lp["ffn_moe"], z, cfg)
+                    f, _ = moe_lib.moe_apply(lp["ffn_moe"], z, cfg,
+                                             ff_math=policy.ff_math)
                 else:
-                    f = mlp_apply(lp["ffn_mlp"], z)
+                    f = mlp_apply(lp["ffn_mlp"], z,
+                                  ff_math=policy.ff_math)
                 h = h + f
             return h, new_cache
 
@@ -554,7 +568,8 @@ def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
             h = h + _cross_attn_cached(lp["xattn"], z, xkv, cfg)
             z = rms_norm(h, lp["ln3"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
-            return h + mlp_apply(lp["ffn"], z), lcache
+            return h + mlp_apply(lp["ffn"], z,
+                                 ff_math=policy.ff_math), lcache
 
         if cfg.remat:
             body = jax.checkpoint(body, prevent_cse=False)
@@ -566,7 +581,8 @@ def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
 
     x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps,
                  ff_stats=policy.ff_reductions)
-    logits = unembed_apply(params["embed"], x, cfg)
+    logits = unembed_apply(params["embed"], x, cfg,
+                           ff_math=policy.ff_math)
     return logits[:, 0], cache
 
 
@@ -608,9 +624,10 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
             z = rms_norm(h, lp["ln2"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
             if "router" in lp["ffn"]:
-                f, _ = moe_lib.moe_apply(lp["ffn"], z, cfg)
+                f, _ = moe_lib.moe_apply(lp["ffn"], z, cfg,
+                                         ff_math=policy.ff_math)
             else:
-                f = mlp_apply(lp["ffn"], z)
+                f = mlp_apply(lp["ffn"], z, ff_math=policy.ff_math)
             return h + f, lcache
 
         x, new_lcache = lax.scan(body, x, (params["layers"], cache["layers"]))
@@ -623,7 +640,8 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
             lp, st = scanned
             z = rms_norm(h, lp["ln"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
-            m, st = mamba2.ssd_decode_step(lp["mixer"], z, cfg, st)
+            m, st = mamba2.ssd_decode_step(lp["mixer"], z, cfg, st,
+                                           ff_math=policy.ff_math)
             return h + m, st
 
         x, new_lcache = lax.scan(body, x, (params["layers"], cache["layers"]))
@@ -644,15 +662,18 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
                     new_cache[f"attn_{i}"] = c
                 else:
                     a, st = mamba2.ssd_decode_step(
-                        lp["mixer_ssd"], z, cfg, pcache[f"ssm_{i}"])
+                        lp["mixer_ssd"], z, cfg, pcache[f"ssm_{i}"],
+                        ff_math=policy.ff_math)
                     new_cache[f"ssm_{i}"] = st
                 h = h + a
                 z = rms_norm(h, lp["ln2"], cfg.norm_eps,
                              ff_stats=policy.ff_reductions)
                 if "ffn_moe" in lp:
-                    f, _ = moe_lib.moe_apply(lp["ffn_moe"], z, cfg)
+                    f, _ = moe_lib.moe_apply(lp["ffn_moe"], z, cfg,
+                                             ff_math=policy.ff_math)
                 else:
-                    f = mlp_apply(lp["ffn_mlp"], z)
+                    f = mlp_apply(lp["ffn_mlp"], z,
+                                  ff_math=policy.ff_math)
                 h = h + f
             return h, new_cache
 
@@ -672,7 +693,8 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
             h = h + _cross_attn_decode(lp["xattn"], z, xkv, cfg)
             z = rms_norm(h, lp["ln3"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
-            return h + mlp_apply(lp["ffn"], z), lcache
+            return h + mlp_apply(lp["ffn"], z,
+                                 ff_math=policy.ff_math), lcache
 
         x, new_lcache = lax.scan(
             body, x, (params["layers"], cache["layers"], cache["cross"]))
@@ -683,7 +705,8 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps,
                  ff_stats=policy.ff_reductions)
-    logits = unembed_apply(params["embed"], x, cfg)
+    logits = unembed_apply(params["embed"], x, cfg,
+                           ff_math=policy.ff_math)
     return logits[:, 0], cache
 
 

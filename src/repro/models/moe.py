@@ -45,8 +45,11 @@ def moe_params(key, cfg: ModelConfig) -> Params:
 
 
 def moe_apply(p: Params, x: Array, cfg: ModelConfig,
-              ff_stats: bool = False) -> Tuple[Array, Array]:
-    """x: (B, S, d) -> (out, aux_loss)."""
+              ff_stats: bool = False,
+              ff_math: bool = False) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (out, aux_loss).  ``ff_math`` routes the expert
+    (and shared-expert) silu gates through ``ff.silu`` — the same policy
+    switch the dense MLP honors; default bitwise-identical."""
     B, S, d = x.shape
     T = B * S
     E, k = cfg.moe_num_experts, cfg.moe_top_k
@@ -82,7 +85,11 @@ def moe_apply(p: Params, x: Array, cfg: ModelConfig,
     buf = buf.at[e_idx, safe_pos].add(contrib, mode="drop")
 
     # expert FFN (batched over E)
-    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt)))
+    pre = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    if ff_math:
+        g = ff.to_f32(ff.silu(pre.astype(jnp.float32))).astype(dt)
+    else:
+        g = jax.nn.silu(pre)
     u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
     h = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"].astype(dt))
 
@@ -93,7 +100,7 @@ def moe_apply(p: Params, x: Array, cfg: ModelConfig,
 
     if cfg.moe_shared_experts:
         from repro.models.layers import mlp_apply
-        out = out + mlp_apply(p["shared"], xt)
+        out = out + mlp_apply(p["shared"], xt, ff_math=ff_math)
 
     # load-balance aux loss (Switch):  E * sum_e f_e * P_e
     if ff_stats:

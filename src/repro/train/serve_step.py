@@ -37,16 +37,23 @@ def make_decode_step(cfg: ModelConfig,
     return step
 
 
-def token_logprob(logits: Array, token: Array) -> Array:
+def token_logprob(logits: Array, token: Array,
+                  policy: Optional[PrecisionPolicy] = None) -> Array:
     """Log-probability of ``token`` under ``logits`` (B, V) -> (B,).
 
     The normalizer goes through the compensated ``ff.logsumexp`` — at
     serving scale the per-token score is a *loss reduction over the vocab
     axis*, and a naive f32 LSE over a 100k+ vocab loses the very bits the
-    confidence consumer cares about."""
+    confidence consumer cares about.  When the ambient (or explicit)
+    policy requests FF transcendentals (``ff_math=True``), the score runs
+    the accurate-class ``"ff"`` impl: FF exponentials and an ``ff.math.log``
+    of the FF exp-sum, instead of f32-builtin exp/log around the
+    compensated sum."""
     import repro.ff as ff
 
-    lse = ff.logsumexp(jnp.asarray(logits, jnp.float32), axis=-1)
+    policy = resolve_policy(policy)
+    impl = "ff" if policy.ff_math else None
+    lse = ff.logsumexp(jnp.asarray(logits, jnp.float32), axis=-1, impl=impl)
     chosen = jnp.take_along_axis(
         jnp.asarray(logits, jnp.float32), token[:, None], axis=-1)[:, 0]
     return chosen - lse
@@ -69,7 +76,8 @@ def greedy_generate(params, cfg: ModelConfig, prompt: Array, max_new: int,
         batch.update(extra_inputs)
     pf = jax.jit(make_prefill_step(cfg, policy))
     dc = jax.jit(make_decode_step(cfg, policy))
-    score = jax.jit(token_logprob)
+    pol = resolve_policy(policy)
+    score = jax.jit(lambda lg, tk: token_logprob(lg, tk, pol))
     logits, cache = pf(params, batch, cache)
     toks = [jnp.argmax(logits, -1).astype(jnp.int32)]
     lps = [score(logits, toks[-1])] if return_logprobs else None

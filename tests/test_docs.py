@@ -60,6 +60,7 @@ def test_readme_links_docs_tier():
     with open(os.path.join(ROOT, "README.md")) as f:
         readme = f.read()
     for doc in ("docs/API.md", "docs/NUMERICS.md", "docs/DESIGN_ozaki.md",
-                "docs/DESIGN_fusion.md", "docs/DESIGN_sharded.md"):
+                "docs/DESIGN_fusion.md", "docs/DESIGN_sharded.md",
+                "docs/DESIGN_math.md"):
         assert doc in readme, f"README does not link {doc}"
         assert os.path.exists(os.path.join(ROOT, doc)), doc
