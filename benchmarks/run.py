@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV per table:
     emits ``BENCH_math.json``.
   * optimizer (beyond paper): FF master-weight AdamW cost + the
     f32-stagnation experiment.
+  * serving (beyond paper): continuous-batching ServeEngine vs the
+    sequential greedy baseline + FF token-logprob accuracy gate; emits
+    ``BENCH_serving.json``.
 
 Roofline/dry-run/mesh tables are separate (they need simulated devices):
   PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
@@ -37,7 +40,7 @@ def main() -> None:
 
     from benchmarks import (table_accuracy, table_elementwise,
                             table_ffmatmul, table_math, table_optimizer,
-                            table_timing)
+                            table_serving, table_timing)
     print("# paper Table 3/4 analogue — operator timings")
     table_timing.main()
     print("\n# paper Table 5 analogue — operator accuracy")
@@ -50,6 +53,8 @@ def main() -> None:
     table_math.main()
     print("\n# beyond paper — FF master-weight optimizer")
     table_optimizer.main()
+    print("\n# beyond paper — continuous-batching serving (paged FF KV)")
+    table_serving.main(["--quick"])
 
 
 if __name__ == "__main__":

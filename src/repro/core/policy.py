@@ -37,6 +37,13 @@ class PrecisionPolicy:
     # pre-ff.math library — and opted in per scope:
     # ``ff.policy("ff_full", ff_math=True)``.
     ff_math: bool = False
+    # Which ``ff.attention`` implementation the model attention layers
+    # request ("fast" = the f32 online softmax, "ff"/"pallas" = the
+    # compensated FF recurrence, "f64" = oracle tier).  Derived "fast" at
+    # EVERY level — default policies stay bitwise-identical to the
+    # pre-registry attention hot path — and opted in per scope:
+    # ``ff.policy(attention="ff")``.
+    attention: str = "fast"
     # activation compute dtype for the bulk matmuls
     compute_dtype: str = "bfloat16"
     # Block size for blocked-K compensated matmuls.  MUST match the

@@ -50,7 +50,7 @@ from repro.ff.tuning import tune  # noqa: F401
 from repro.ff import tuning  # noqa: F401
 from repro.ff.autodiff import (  # noqa: F401
     add, sub, mul, div, sqrt, matmul, sum, mean, dot, logsumexp,
-    softmax, mean_sq, norm_stats, adamw_update,
+    softmax, attention, mean_sq, norm_stats, adamw_update,
     two_sum, two_prod,
 )
 from repro.ff import math  # noqa: F401  (the FF elementary-function tier)

@@ -557,6 +557,103 @@ def softmax(x: Array, axis: int = -1, *, impl: Optional[str] = None,
                                                 opts))), x)
 
 
+# ---------------------------------------------------------------------------
+# attention (fused FF flash attention; see kernels/ff_attention.py)
+# ---------------------------------------------------------------------------
+
+_ATTN_FAST_KEYS = ("causal", "block_q", "block_kv", "q_offset", "scale")
+
+
+def _attn_fast_vjp(opts, g, q, k, v, kv_len=None):
+    """Accurate-tier gradients route through ``jax.vjp`` over the FAST
+    recurrence: the FF value is 2^-44-class, the gradients stay at
+    flash-attention training precision (documented — same contract as
+    every fused op whose bwd re-derives from the f32 formulation)."""
+    fopts = {k_: v_ for k_, v_ in dict(opts).items() if k_ in _ATTN_FAST_KEYS}
+    fn = dispatch.lookup("attention", "fast")
+    _y, vjp = jax.vjp(
+        lambda q_, k_, v_: fn(q_, k_, v_, kv_len=kv_len, **fopts), q, k, v)
+    return vjp(g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _attention_p(meta, q, k, v):
+    impl, opts = meta
+    return dispatch.lookup("attention", impl)(q, k, v, **dict(opts))
+
+
+def _attention_fwd(meta, q, k, v):
+    return _attention_p(meta, q, k, v), (q, k, v)
+
+
+def _attention_bwd(meta, res, g):
+    _impl, opts = meta
+    return _attn_fast_vjp(opts, g, *res)
+
+
+_attention_p.defvjp(_attention_fwd, _attention_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _attention_kv_p(meta, q, k, v, kv_len_f):
+    impl, opts = meta
+    return dispatch.lookup("attention", impl)(
+        q, k, v, kv_len=kv_len_f.astype(jnp.int32), **dict(opts))
+
+
+def _attention_kv_fwd(meta, q, k, v, kv_len_f):
+    return _attention_kv_p(meta, q, k, v, kv_len_f), (q, k, v, kv_len_f)
+
+
+def _attention_kv_bwd(meta, res, g):
+    _impl, opts = meta
+    q, k, v, kv_len_f = res
+    dq, dk, dv = _attn_fast_vjp(opts, g, q, k, v,
+                                kv_len=kv_len_f.astype(jnp.int32))
+    # the per-row length is integer-semantics: it rides as f32 only
+    # because custom_vjp must emit a cotangent for every operand
+    return dq, dk, dv, jnp.zeros_like(kv_len_f)
+
+
+_attention_kv_p.defvjp(_attention_kv_fwd, _attention_kv_bwd)
+
+
+def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+              q_offset: int = 0, kv_len: Optional[Array] = None,
+              scale: Optional[float] = None, impl: Optional[str] = None,
+              return_ff: bool = False, **opts):
+    """Blockwise (flash) attention with registry-selected softmax class.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) with H = KV * G (GQA).
+    ``impl="fast"`` (the default everywhere) is bitwise the pre-registry
+    f32 online softmax — including its gradients, which take the plain-AD
+    path.  The accurate tiers ("ff"/"pallas"/"f64") compute 2^-44-class
+    attention weights (FF scores + ``ff.math.exp`` + TwoSum-carried
+    accumulators; <= 2^-40 vs f64 on long-K rows, see docs/NUMERICS.md)
+    and back-propagate through the fast recurrence.  ``kv_len``: optional
+    (B,) per-row valid-key counts for ragged serving batches.
+    ``return_ff=True`` returns the FF limb pair (scoring/validation path,
+    outside the custom_vjp).  ``q_offset`` must be a concrete int (the
+    accurate tiers' masks are staged per offset); decode loops use
+    ``causal=False`` + ``kv_len`` instead.
+    """
+    bshape = _bucket2d((q.shape[1], k.shape[1]))
+    name = dispatch.resolve_name("attention", impl, shape=bshape)
+    merged = _merge_tuned("attention", name, bshape, opts)
+    call = dict(causal=bool(causal), q_offset=int(q_offset),
+                scale=None if scale is None else float(scale), **merged)
+    fn = dispatch.lookup("attention", name)
+    if return_ff:
+        return fn(q, k, v, kv_len=kv_len, return_ff=True, **call)
+    if name == "fast":
+        return fn(q, k, v, kv_len=kv_len, **call)
+    meta = (name, _opts_tuple(call))
+    if kv_len is None:
+        return _attention_p(meta, q, k, v)
+    return _attention_kv_p(meta, q, k, v,
+                           jnp.asarray(kv_len).astype(jnp.float32))
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _mean_sq_p(meta, x):
     impl, _shape, opts = meta

@@ -52,6 +52,10 @@ _ACCURATE_FALLBACK: Dict[str, Tuple[str, ...]] = {
     # the accurate tier is the ff.math-powered impl
     "softmax": ("ff",),
     "logsumexp": ("ff",),
+    # attention: native-f64 materialized scores where the hardware has
+    # them (size-guarded; degrades to the FF recurrence on TPU / at
+    # training shapes), else the compensated jnp recurrence
+    "attention": ("f64", "ff"),
     # ff.math family: native f64 where the hardware has it (degrades to the
     # compensated jnp formulation on TPU), else the FF kernel itself
     **{op: ("f64", "jnp") for op in tuple(ffmath.UNARY22) + ("pow",)},
@@ -920,3 +924,66 @@ def _logsumexp_ff(x: Array, axis: int = -1, *, block: int = 256,
 
 register("softmax", "ff", _softmax_ff)
 register("logsumexp", "ff", _logsumexp_ff)
+
+
+# -- attention (fused FF flash attention; kernels/ff_attention.py) ----------
+#
+# Impl classes:
+#   * ``fast``   — the f32 online softmax that previously lived inline in
+#                  ``models.layers.flash_attention``; bitwise the
+#                  pre-registry model hot path, and the default on EVERY
+#                  backend (the accurate tiers change result bits, so
+#                  unlike softmax/logsumexp there is no silent TPU kernel
+#                  default — models opt in via ``ff.policy(attention=...)``).
+#   * ``ff``     — compensated online softmax: FF scores (TwoProd dot),
+#                  ``ff.math.exp`` FF weights, TwoSum-carried FF
+#                  numerator/denominator, Div22 normalize (pure jnp).
+#   * ``pallas`` — the same recurrence as one fused kernel per
+#                  (batch*head, q-block) stripe with the FF accumulators
+#                  in VMEM scratch; static masks only, so per-row
+#                  ``kv_len`` (ragged serving batches) falls back to ff.
+#   * ``f64``    — materialized-score native-f64 oracle (CPU accurate
+#                  tier; size-guarded, degrades to ff on TPU).
+
+def _attention_fast(q, k, v, *, interpret=None, **kw):
+    from repro.kernels import ff_attention
+    return ff_attention.flash_attention_fast(q, k, v, **kw)
+
+
+def _attention_ff(q, k, v, *, interpret=None, **kw):
+    from repro.kernels import ff_attention
+    return ff_attention.flash_attention_ff(q, k, v, **kw)
+
+
+def _attention_pallas(q, k, v, *, interpret=None, block=128, **kw):
+    from repro.kernels import ff_attention
+    if kw.get("kv_len") is not None:
+        _fallback_warn("pallas", "attention",
+                       "per-row kv_len (ragged batch) needs dynamic masks "
+                       "the kernel's static grid cannot express")
+        return ff_attention.flash_attention_ff(q, k, v, block=block, **kw)
+    kw.pop("kv_len", None)
+    return ff_attention.flash_attention_pallas(
+        q, k, v, interpret=_interpret(interpret), **kw)
+
+
+def _attention_f64(q, k, v, *, causal=True, q_offset=0, kv_len=None,
+                   scale=None, return_ff=False, **kw):
+    from repro.kernels import ff_attention
+    if backend() != "tpu":
+        B, Sq, H = q.shape[0], q.shape[1], q.shape[2]
+        if B * H * Sq * k.shape[1] <= (1 << 24):
+            return ff_attention.attention_f64(
+                q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+                scale=scale, return_ff=return_ff)
+        _fallback_warn("f64", "attention",
+                       "materialized f64 score plane exceeds the size guard")
+    return ff_attention.flash_attention_ff(
+        q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+        scale=scale, return_ff=return_ff)
+
+
+register("attention", "fast", _attention_fast, default_for=("*",))
+register("attention", "ff", _attention_ff)
+register("attention", "pallas", _attention_pallas)
+register("attention", "f64", _attention_f64)

@@ -83,6 +83,8 @@ _OP_ACCURACY: Dict[str, Dict[str, str]] = {
                 "ff": "accurate"},
     "logsumexp": {"jnp": "fast", "pallas": "fast", "f64": "fast",
                   "ff": "accurate"},
+    "attention": {"fast": "fast", "ff": "accurate", "pallas": "accurate",
+                  "f64": "accurate"},
     **{op: _MATH_TIER for op in ("exp", "expm1", "log", "log1p", "tanh",
                                  "sigmoid", "erf", "gelu", "silu", "pow")},
 }
@@ -128,6 +130,10 @@ _FAST_ELIGIBLE: Dict[str, Tuple[str, ...]] = {
     # composites must never be crowned the silent default
     "softmax": ("jnp", "pallas", "f64"),
     "logsumexp": ("jnp", "pallas", "f64"),
+    # attention's accurate tiers all change result bits vs the fast f32
+    # recurrence (and block sizes change the online-softmax association),
+    # so only "fast" may ever be crowned — and it gets no block sweeps
+    "attention": ("fast",),
     **{op: ("jnp", "pallas", "f64") for op in
        ("exp", "expm1", "log", "log1p", "tanh", "sigmoid", "erf", "gelu",
         "silu", "pow")},
@@ -207,6 +213,16 @@ def _args_stats(rng, dims):
     return (_f32(rng, tuple(dims)),), {}
 
 
+def _args_attention(rng, dims):
+    """(R, C) bucket -> q (1, R, 4, 64), k/v (1, C, 2, 64) — a GQA layout
+    whose (Sq, Skv) matches how ``ff.attention`` buckets its call shape."""
+    r, c = int(dims[0]), int(dims[1])
+    q = _f32(rng, (1, r, 4, 64))
+    k = _f32(rng, (1, c, 2, 64))
+    v = _f32(rng, (1, c, 2, 64))
+    return (q, k, v), {"causal": True}
+
+
 def _args_adamw(rng, dims):
     import jax.numpy as jnp
     shape = tuple(dims)
@@ -236,6 +252,7 @@ _TUNE_ARGS = {
     "softmax": _args_row,
     "mean_sq": _args_stats,
     "norm_stats": _args_stats,
+    "attention": _args_attention,
     "adamw_update": _args_adamw,
     # ff.math family: positive FF operands sit inside every function's
     # domain (log/log1p/pow included), so one builder serves them all

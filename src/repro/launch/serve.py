@@ -3,6 +3,11 @@
 Demo:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --reduced \
       --batch 4 --prompt-len 32 --max-new 16
+
+``--engine`` routes dense archs through the continuous-batching
+:class:`repro.serve.ServeEngine` (paged FF KV cache, per-request
+mixed-length prompts, FF token-logprob scoring) instead of the one-shot
+padded-batch greedy loop.
 """
 
 import argparse
@@ -24,6 +29,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--engine", action="store_true",
+                    help="serve through the continuous-batching ServeEngine "
+                         "(paged KV cache; dense non-MLA archs)")
+    ap.add_argument("--kv-mode", type=str, default="bf16",
+                    choices=("bf16", "f32", "ff_bf16"),
+                    help="--engine page storage: bf16 (baseline parity), "
+                         "f32, or ff_bf16 (double-bf16 limb planes)")
     ap.add_argument("--mesh", action="store_true",
                     help="shard params over the local device mesh and route "
                          "the scoring reductions through the mesh-aware FF "
@@ -51,6 +63,32 @@ def main():
         mesh_scope = ff.on_mesh(mesh, axis="data")
         print(f"[serve] mesh: {dict(mesh.shape)} — params sharded, FF "
               f"scoring reductions mesh-routed")
+    if args.engine:
+        import numpy as np
+        from repro.serve import Request, ServeEngine
+        rng = np.random.default_rng(1)
+        lo = max(4, args.prompt_len // 2)
+        lens = rng.integers(lo, args.prompt_len + 1, size=args.batch)
+        eng = ServeEngine(params, cfg, max_batch=args.batch,
+                          max_ctx=args.prompt_len + args.max_new + 8,
+                          kv_mode=args.kv_mode)
+        for i, l in enumerate(lens):
+            eng.submit(Request(
+                uid=i,
+                prompt=rng.integers(1, cfg.vocab_size,
+                                    size=int(l)).astype(np.int32),
+                max_new=args.max_new))
+        t0 = time.perf_counter()
+        results = eng.run()
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(r.tokens) for r in results.values())
+        all_lps = np.concatenate([r.logprobs for r in results.values()])
+        print(f"[serve] {cfg.name} engine({args.kv_mode}): {len(results)} "
+              f"requests (prompts {lens.min()}..{lens.max()}), {n_tok} "
+              f"tokens in {dt:.1f}s ({n_tok / dt:.1f} tok/s), mean token "
+              f"logprob {all_lps.mean():.4f}")
+        print(results[0].tokens)
+        return
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len),
                                 0, cfg.vocab_size)

@@ -108,91 +108,59 @@ NEG_INF = -1e30
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool,
-                    block_q: int, block_kv: int, q_offset=0) -> Array:
-    """Online-softmax blockwise attention.
+                    block_q: int, block_kv: int, q_offset=0,
+                    impl: str = "fast") -> Array:
+    """Online-softmax blockwise attention, via the ``ff.attention`` registry.
 
     q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd); H = KV * G (GQA).
     Never materializes (Sq, Skv); peak extra memory is
     (B, KV, G, block_q, block_kv).  q_offset: absolute position of q[0]
     (for cached decode/prefill continuation).
+
+    ``impl="fast"`` (the default) is bitwise the historical in-module
+    recurrence — the math now lives in ``repro.kernels.ff_attention`` as
+    the registry's fast tier.  Passing ``impl="ff"``/``"pallas"``/``"f64"``
+    (normally via ``ff.policy(attention=...)`` threaded through the model
+    code) swaps in the compensated FF softmax class.
     """
-    B, Sq, H, hd = q.shape
-    _, Skv, KV, _ = k.shape
-    G = H // KV
-    bq = min(block_q, Sq)
-    bkv = min(block_kv, Skv)
-    pq, pkv = (-Sq) % bq, (-Skv) % bkv
-    if pq:
-        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
-    if pkv:
-        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
-    nq, nkv = q.shape[1] // bq, k.shape[1] // bkv
-    scale = 1.0 / math.sqrt(hd)
-
-    # (nq, B, KV, G, bq, hd)
-    qb = q.reshape(B, nq, bq, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
-    kb = k.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 3, 2, 4)  # (nkv,B,KV,bkv,hd)
-    vb = v.reshape(B, nkv, bkv, KV, hd).transpose(1, 0, 3, 2, 4)
-
-    q_pos_base = jnp.asarray(q_offset, jnp.int32)
-
-    def one_q_block(iq, qi):
-        # qi: (B, KV, G, bq, hd)
-        qi32 = qi.astype(jnp.float32) * scale
-        q_pos = q_pos_base + iq * bq + jnp.arange(bq, dtype=jnp.int32)
-
-        def kv_step(carry, jk):
-            m, l, acc = carry
-            kj = kb[jk].astype(jnp.float32)   # (B,KV,bkv,hd)
-            vj = vb[jk].astype(jnp.float32)
-            s = jnp.einsum("bkgqd,bksd->bkgqs", qi32, kj)   # (B,KV,G,bq,bkv)
-            kv_pos = jk * bkv + jnp.arange(bkv, dtype=jnp.int32)
-            mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
-                jnp.ones((bq, bkv), bool)
-            # mask out kv padding
-            mask = jnp.logical_and(mask, (kv_pos < Skv)[None, :])
-            s = jnp.where(mask[None, None, None], s, NEG_INF)
-            m_new = jnp.maximum(m, s.max(axis=-1))
-            p = jnp.exp(s - m_new[..., None])
-            alpha = jnp.exp(m - m_new)
-            l_new = l * alpha + p.sum(axis=-1)
-            acc_new = acc * alpha[..., None] + jnp.einsum(
-                "bkgqs,bksd->bkgqd", p, vj)
-            return (m_new, l_new, acc_new), None
-
-        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
-        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
-        a0 = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
-        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
-                                  jnp.arange(nkv, dtype=jnp.int32))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
-        return out  # (B,KV,G,bq,hd)
-
-    outs = lax.map(lambda args: one_q_block(*args),
-                   (jnp.arange(nq, dtype=jnp.int32), qb))
-    # (nq,B,KV,G,bq,hd) -> (B, Sq, H, hd)
-    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * bq, H, hd)
-    return out[:, :Sq].astype(q.dtype)
+    return ff.attention(q, k, v, causal=causal, q_offset=q_offset,
+                        block_q=block_q, block_kv=block_kv, impl=impl)
 
 
 def decode_attention(q: Array, k_cache: Array, v_cache: Array,
-                     cache_len: Array) -> Array:
+                     cache_len: Array, *, impl: str = "fast") -> Array:
     """Single-position attention against a (possibly partially filled) cache.
 
     q: (B, 1, H, hd); caches: (B, Smax, KV, hd); cache_len: () int32 —
     number of valid cache positions (the new token's K/V must already be
-    written at cache_len-1).
+    written at cache_len-1) — or (B,) int32 for ragged serving batches
+    where every row has its own filled length.
+
+    The ``impl="fast"`` path below is bitwise the historical dense-softmax
+    implementation for scalar ``cache_len``; the per-row form only changes
+    the mask broadcast, so each row is bitwise what the scalar call would
+    produce for that row's length (masked tails contribute exact zeros) —
+    the property the paged serving engine's parity contract rests on.
+    Accurate impls route through ``ff.attention(causal=False, kv_len=...)``.
     """
     B, _, H, hd = q.shape
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if impl != "fast":
+        kv_len = jnp.broadcast_to(cache_len, (B,))
+        return ff.attention(q, k_cache, v_cache, causal=False,
+                            kv_len=kv_len, impl=impl)
     _, Smax, KV, _ = k_cache.shape
     G = H // KV
     scale = 1.0 / math.sqrt(hd)
     q4 = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
     kf = k_cache.astype(jnp.float32)
     s = jnp.einsum("bkgd,bskd->bkgs", q4, kf)            # (B,KV,G,Smax)
-    valid = jnp.arange(Smax, dtype=jnp.int32) < cache_len
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    pos = jnp.arange(Smax, dtype=jnp.int32)
+    if cache_len.ndim:
+        valid = (pos[None] < cache_len[:, None])[:, None, None]  # (B,1,1,S)
+    else:
+        valid = (pos < cache_len)[None, None, None]
+    s = jnp.where(valid, s, NEG_INF)
     m = s.max(axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     l = p.sum(axis=-1, keepdims=True)
@@ -217,7 +185,8 @@ def attn_params(key, cfg: ModelConfig) -> Params:
 
 
 def attn_apply(p: Params, x: Array, cfg: ModelConfig, *,
-               positions: Array, causal: bool = True) -> Array:
+               positions: Array, causal: bool = True,
+               attn_impl: str = "fast") -> Array:
     """Full-sequence attention (training / prefill)."""
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -227,13 +196,13 @@ def attn_apply(p: Params, x: Array, cfg: ModelConfig, *,
     v = (x @ p["wv"].astype(dt)).reshape(B, S, cfg.num_kv_heads, hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    o = flash_attention(q, k, v, causal=causal,
-                        block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+    o = flash_attention(q, k, v, causal=causal, block_q=cfg.attn_block_q,
+                        block_kv=cfg.attn_block_kv, impl=attn_impl)
     return o.reshape(B, S, cfg.num_heads * hd) @ p["wo"].astype(dt)
 
 
 def attn_prefill(p: Params, x: Array, cfg: ModelConfig, *, positions: Array,
-                 cache: Params) -> Tuple[Array, Params]:
+                 cache: Params, attn_impl: str = "fast") -> Tuple[Array, Params]:
     """Prefill: same as train but also writes the KV cache."""
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -243,8 +212,8 @@ def attn_prefill(p: Params, x: Array, cfg: ModelConfig, *, positions: Array,
     v = (x @ p["wv"].astype(dt)).reshape(B, S, cfg.num_kv_heads, hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    o = flash_attention(q, k, v, causal=True,
-                        block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+    o = flash_attention(q, k, v, causal=True, block_q=cfg.attn_block_q,
+                        block_kv=cfg.attn_block_kv, impl=attn_impl)
     cache = dict(cache)
     cache["k"] = lax.dynamic_update_slice_in_dim(
         cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
@@ -254,7 +223,8 @@ def attn_prefill(p: Params, x: Array, cfg: ModelConfig, *, positions: Array,
 
 
 def attn_decode(p: Params, x: Array, cfg: ModelConfig, *,
-                pos: Array, cache: Params) -> Tuple[Array, Params]:
+                pos: Array, cache: Params,
+                attn_impl: str = "fast") -> Tuple[Array, Params]:
     """One-token decode: update cache at ``pos``, attend to cache[:pos+1]."""
     B, S, _ = x.shape
     assert S == 1
@@ -271,7 +241,7 @@ def attn_decode(p: Params, x: Array, cfg: ModelConfig, *,
         cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
     cache["v"] = lax.dynamic_update_slice(
         cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
-    o = decode_attention(q, cache["k"], cache["v"], pos + 1)
+    o = decode_attention(q, cache["k"], cache["v"], pos + 1, impl=attn_impl)
     return o.reshape(B, 1, cfg.num_heads * hd) @ p["wo"].astype(dt), cache
 
 

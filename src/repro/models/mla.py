@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+import repro.ff as ff
 from repro.models.config import ModelConfig
 from repro.models.layers import (NEG_INF, apply_rope, dense_init,
                                  flash_attention, rms_norm)
@@ -64,7 +65,7 @@ def _project_latent(p: Params, x: Array, cfg: ModelConfig, positions: Array):
 
 
 def mla_apply(p: Params, x: Array, cfg: ModelConfig, *,
-              positions: Array) -> Array:
+              positions: Array, attn_impl: str = "fast") -> Array:
     """Training / prefill path: up-project latent to per-head K/V and run
     blockwise attention (memory-feasible: latent is recomputed per block by
     XLA remat rather than cached)."""
@@ -85,7 +86,7 @@ def mla_apply(p: Params, x: Array, cfg: ModelConfig, *,
     if cfg.v_head_dim < dq:
         v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dq - cfg.v_head_dim)))
     o = flash_attention(q, k, v, causal=True, block_q=cfg.attn_block_q,
-                        block_kv=cfg.attn_block_kv)
+                        block_kv=cfg.attn_block_kv, impl=attn_impl)
     o = o[..., :cfg.v_head_dim].reshape(B, S, H * cfg.v_head_dim)
     return o @ p["wo"].astype(dt)
 
@@ -99,7 +100,7 @@ def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def mla_prefill(p: Params, x: Array, cfg: ModelConfig, *, positions: Array,
-                cache: Params) -> Tuple[Array, Params]:
+                cache: Params, attn_impl: str = "fast") -> Tuple[Array, Params]:
     B, S, _ = x.shape
     c_kv, k_rope = _project_latent(p, x, cfg, positions)
     cache = dict(cache)
@@ -107,13 +108,20 @@ def mla_prefill(p: Params, x: Array, cfg: ModelConfig, *, positions: Array,
         cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1)
     cache["k_rope"] = lax.dynamic_update_slice_in_dim(
         cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0, axis=1)
-    return mla_apply(p, x, cfg, positions=positions), cache
+    return mla_apply(p, x, cfg, positions=positions, attn_impl=attn_impl), cache
 
 
 def mla_decode(p: Params, x: Array, cfg: ModelConfig, *, pos: Array,
-               cache: Params) -> Tuple[Array, Params]:
+               cache: Params, attn_impl: str = "fast") -> Tuple[Array, Params]:
     """Absorbed decode: score = q_nope·Wk_b·c_kv + q_rope·k_rope over the
-    latent cache; output = (softmax @ c_kv) absorbed through Wv_b."""
+    latent cache; output = (softmax @ c_kv) absorbed through Wv_b.
+
+    ``attn_impl="fast"`` keeps the historical dense-softmax path verbatim
+    (bitwise).  Any other impl re-expresses the absorbed score as a single
+    GQA attention call — q = [q_eff ‖ q_rope], k = [c_kv ‖ k_rope] with one
+    shared KV head, v = c_kv zero-padded to match — and routes it through
+    ``ff.attention``'s compensated softmax class.
+    """
     B, S, _ = x.shape
     assert S == 1
     H = cfg.num_heads
@@ -135,13 +143,24 @@ def mla_decode(p: Params, x: Array, cfg: ModelConfig, *, pos: Array,
     # absorb: q_eff (B,H,r) = q_nope . wk_b^T
     q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32), wk_b)
     scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
-    s = (jnp.einsum("bhr,bsr->bhs", q_eff, c_kv)
-         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32), k_rope))
-    s = s * scale
-    valid = jnp.arange(Smax, dtype=jnp.int32) <= pos
-    s = jnp.where(valid[None, None], s, NEG_INF)
-    pr = jax.nn.softmax(s, axis=-1)
-    lat = jnp.einsum("bhs,bsr->bhr", pr, c_kv)            # (B,H,r)
+    if attn_impl != "fast":
+        r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+        q_cat = jnp.concatenate(
+            [q_eff, q_rope[:, 0].astype(jnp.float32)], axis=-1)[:, None]
+        k_cat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None]
+        v_lat = jnp.pad(c_kv, ((0, 0), (0, 0), (0, dr)))[:, :, None]
+        lat = ff.attention(q_cat, k_cat, v_lat, causal=False,
+                           kv_len=jnp.full((B,), pos + 1, jnp.int32),
+                           scale=scale, impl=attn_impl)[:, 0, :, :r]
+    else:
+        s = (jnp.einsum("bhr,bsr->bhs", q_eff, c_kv)
+             + jnp.einsum("bhd,bsd->bhs",
+                          q_rope[:, 0].astype(jnp.float32), k_rope))
+        s = s * scale
+        valid = jnp.arange(Smax, dtype=jnp.int32) <= pos
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        lat = jnp.einsum("bhs,bsr->bhr", pr, c_kv)        # (B,H,r)
     wv_b = p["wv_b"].astype(jnp.float32).reshape(
         cfg.kv_lora_rank, H, cfg.v_head_dim)
     o = jnp.einsum("bhr,rhd->bhd", lat, wv_b).reshape(B, 1, H * cfg.v_head_dim)

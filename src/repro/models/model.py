@@ -154,9 +154,11 @@ def _decoder_layer(x: Array, lp: Params, cfg: ModelConfig,
                    policy: PrecisionPolicy, positions: Array) -> Tuple[Array, Array]:
     h = rms_norm(x, lp["ln1"], cfg.norm_eps, ff_stats=policy.ff_reductions)
     if cfg.use_mla:
-        a = mla.mla_apply(lp["attn"], h, cfg, positions=positions)
+        a = mla.mla_apply(lp["attn"], h, cfg, positions=positions,
+                          attn_impl=policy.attention)
     else:
-        a = attn_apply(lp["attn"], h, cfg, positions=positions)
+        a = attn_apply(lp["attn"], h, cfg, positions=positions,
+                       attn_impl=policy.attention)
     x = x + a
     h = rms_norm(x, lp["ln2"], cfg.norm_eps, ff_stats=policy.ff_reductions)
     if "router" in lp["ffn"]:
@@ -183,7 +185,8 @@ def _hybrid_period(x: Array, pp, cfg: ModelConfig, policy: PrecisionPolicy,
         lp = jax.tree_util.tree_map(lambda t: t, pp[i])  # slice view
         h = rms_norm(x, lp["ln1"], cfg.norm_eps, ff_stats=policy.ff_reductions)
         if "mixer_attn" in lp:
-            m = attn_apply(lp["mixer_attn"], h, cfg, positions=positions)
+            m = attn_apply(lp["mixer_attn"], h, cfg, positions=positions,
+                           attn_impl=policy.attention)
         else:
             m = mamba2.ssd_block_apply(lp["mixer_ssd"], h, cfg,
                                        ff_math=policy.ff_math)
@@ -237,7 +240,7 @@ def _encoder_stack(params: Params, frames: Array, cfg: ModelConfig,
     def body(h, lp):
         z = rms_norm(h, lp["ln1"], cfg.norm_eps, ff_stats=policy.ff_reductions)
         h = h + attn_apply(lp["attn"], z, cfg, positions=positions,
-                           causal=False)
+                           causal=False, attn_impl=policy.attention)
         z = rms_norm(h, lp["ln2"], cfg.norm_eps, ff_stats=policy.ff_reductions)
         return h + mlp_apply(lp["ffn"], z,
                              ff_math=policy.ff_math), None
@@ -256,9 +259,11 @@ def _encdec_decoder(params: Params, x: Array, enc: Array, cfg: ModelConfig,
     def body(carry, lp):
         h = carry
         z = rms_norm(h, lp["ln1"], cfg.norm_eps, ff_stats=policy.ff_reductions)
-        h = h + attn_apply(lp["attn"], z, cfg, positions=positions)
+        h = h + attn_apply(lp["attn"], z, cfg, positions=positions,
+                           attn_impl=policy.attention)
         z = rms_norm(h, lp["ln2"], cfg.norm_eps, ff_stats=policy.ff_reductions)
-        h = h + _cross_attn(lp["xattn"], z, enc, cfg, positions, enc_pos)
+        h = h + _cross_attn(lp["xattn"], z, enc, cfg, positions, enc_pos,
+                            attn_impl=policy.attention)
         z = rms_norm(h, lp["ln3"], cfg.norm_eps, ff_stats=policy.ff_reductions)
         return h + mlp_apply(lp["ffn"], z,
                              ff_math=policy.ff_math), None
@@ -270,7 +275,8 @@ def _encdec_decoder(params: Params, x: Array, enc: Array, cfg: ModelConfig,
 
 
 def _cross_attn(p: Params, x: Array, enc: Array, cfg: ModelConfig,
-                positions: Array, enc_pos: Array) -> Array:
+                positions: Array, enc_pos: Array,
+                attn_impl: str = "fast") -> Array:
     from repro.models.layers import apply_rope, flash_attention
     B, S, _ = x.shape
     Se = enc.shape[1]
@@ -280,7 +286,7 @@ def _cross_attn(p: Params, x: Array, enc: Array, cfg: ModelConfig,
     k = (enc @ p["wk"].astype(dt)).reshape(B, Se, cfg.num_kv_heads, hd)
     v = (enc @ p["wv"].astype(dt)).reshape(B, Se, cfg.num_kv_heads, hd)
     o = flash_attention(q, k, v, causal=False, block_q=cfg.attn_block_q,
-                        block_kv=cfg.attn_block_kv)
+                        block_kv=cfg.attn_block_kv, impl=attn_impl)
     return o.reshape(B, S, cfg.num_heads * hd) @ p["wo"].astype(dt)
 
 
@@ -470,10 +476,12 @@ def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
                          ff_stats=policy.ff_reductions)
             if cfg.use_mla:
                 a, lcache = mla.mla_prefill(lp["attn"], z, cfg,
-                                            positions=positions, cache=lcache)
+                                            positions=positions, cache=lcache,
+                                            attn_impl=policy.attention)
             else:
                 a, lcache = attn_prefill(lp["attn"], z, cfg,
-                                         positions=positions, cache=lcache)
+                                         positions=positions, cache=lcache,
+                                         attn_impl=policy.attention)
             h = h + a
             z = rms_norm(h, lp["ln2"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
@@ -517,7 +525,8 @@ def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
                 if "mixer_attn" in lp:
                     a, c = attn_prefill(lp["mixer_attn"], z, cfg,
                                         positions=positions,
-                                        cache=pcache[f"attn_{i}"])
+                                        cache=pcache[f"attn_{i}"],
+                                        attn_impl=policy.attention)
                     new_cache[f"attn_{i}"] = c
                 else:
                     a, st = mamba2.ssd_block_apply(
@@ -561,11 +570,13 @@ def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
             z = rms_norm(h, lp["ln1"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
             a, lcache = attn_prefill(lp["attn"], z, cfg,
-                                     positions=positions, cache=lcache)
+                                     positions=positions, cache=lcache,
+                                     attn_impl=policy.attention)
             h = h + a
             z = rms_norm(h, lp["ln2"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
-            h = h + _cross_attn_cached(lp["xattn"], z, xkv, cfg)
+            h = h + _cross_attn_cached(lp["xattn"], z, xkv, cfg,
+                                       attn_impl=policy.attention)
             z = rms_norm(h, lp["ln3"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
             return h + mlp_apply(lp["ffn"], z,
@@ -587,7 +598,7 @@ def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
 
 
 def _cross_attn_cached(p: Params, x: Array, xkv: Params,
-                       cfg: ModelConfig) -> Array:
+                       cfg: ModelConfig, attn_impl: str = "fast") -> Array:
     from repro.models.layers import flash_attention
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -595,7 +606,7 @@ def _cross_attn_cached(p: Params, x: Array, xkv: Params,
     q = (x @ p["wq"].astype(dt)).reshape(B, S, cfg.num_heads, hd)
     o = flash_attention(q, xkv["k"].astype(dt), xkv["v"].astype(dt),
                         causal=False, block_q=cfg.attn_block_q,
-                        block_kv=cfg.attn_block_kv)
+                        block_kv=cfg.attn_block_kv, impl=attn_impl)
     return o.reshape(B, S, cfg.num_heads * hd) @ p["wo"].astype(dt)
 
 
@@ -616,10 +627,12 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
                          ff_stats=policy.ff_reductions)
             if cfg.use_mla:
                 a, lcache = mla.mla_decode(lp["attn"], z, cfg, pos=pos,
-                                           cache=lcache)
+                                           cache=lcache,
+                                           attn_impl=policy.attention)
             else:
                 a, lcache = attn_decode(lp["attn"], z, cfg, pos=pos,
-                                        cache=lcache)
+                                        cache=lcache,
+                                        attn_impl=policy.attention)
             h = h + a
             z = rms_norm(h, lp["ln2"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
@@ -658,7 +671,8 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
                              ff_stats=policy.ff_reductions)
                 if "mixer_attn" in lp:
                     a, c = attn_decode(lp["mixer_attn"], z, cfg, pos=pos,
-                                       cache=pcache[f"attn_{i}"])
+                                       cache=pcache[f"attn_{i}"],
+                                       attn_impl=policy.attention)
                     new_cache[f"attn_{i}"] = c
                 else:
                     a, st = mamba2.ssd_decode_step(
@@ -686,11 +700,13 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
             lp, lcache, xkv = scanned
             z = rms_norm(h, lp["ln1"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
-            a, lcache = attn_decode(lp["attn"], z, cfg, pos=pos, cache=lcache)
+            a, lcache = attn_decode(lp["attn"], z, cfg, pos=pos, cache=lcache,
+                                    attn_impl=policy.attention)
             h = h + a
             z = rms_norm(h, lp["ln2"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
-            h = h + _cross_attn_decode(lp["xattn"], z, xkv, cfg)
+            h = h + _cross_attn_decode(lp["xattn"], z, xkv, cfg,
+                                       attn_impl=policy.attention)
             z = rms_norm(h, lp["ln3"], cfg.norm_eps,
                          ff_stats=policy.ff_reductions)
             return h + mlp_apply(lp["ffn"], z,
@@ -711,12 +727,13 @@ def decode_step(params: Params, token: Array, pos: Array, cache: Params,
 
 
 def _cross_attn_decode(p: Params, x: Array, xkv: Params,
-                       cfg: ModelConfig) -> Array:
+                       cfg: ModelConfig, attn_impl: str = "fast") -> Array:
     from repro.models.layers import decode_attention
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
     dt = x.dtype
     q = (x @ p["wq"].astype(dt)).reshape(B, 1, cfg.num_heads, hd)
     Se = xkv["k"].shape[1]
-    o = decode_attention(q, xkv["k"], xkv["v"], jnp.int32(Se))
+    o = decode_attention(q, xkv["k"], xkv["v"], jnp.int32(Se),
+                        impl=attn_impl)
     return o.reshape(B, 1, cfg.num_heads * hd) @ p["wo"].astype(dt)

@@ -1,0 +1,29 @@
+"""``repro.serve`` — continuous-batching serving on a paged FF KV cache.
+
+The production decode loop around the fused FF flash-attention op
+(``ff.attention`` / ``repro.kernels.ff_attention``):
+
+  * :class:`~repro.serve.paged_kv.PagedKVCache` — the KV store as fixed-size
+    pages with a block table and free list.  All planes of a sequence (k/v,
+    and in ``kv_mode="ff_bf16"`` the FF hi/lo limb planes) share ONE block
+    table, so a page allocation always moves the full float-float value.
+  * :class:`~repro.serve.engine.ServeEngine` — request queue + continuous
+    batching: an explicit prefill/decode split (reusing
+    ``repro.train.serve_step``), per-row sequence lengths inside one jitted
+    paged decode step, and join/evict between steps.  Greedy decoding is
+    token-for-token the :func:`repro.train.serve_step.greedy_generate`
+    baseline (the per-row dense-softmax decode path is bitwise the scalar
+    one — see ``models.layers.decode_attention``).
+  * FF ``token_logprob`` scoring as the accuracy-critical tier: per-token
+    scores within 2^-40 of the f64 oracle (``docs/DESIGN_serving.md``).
+
+Quick use::
+
+    from repro.serve import Request, ServeEngine
+    eng = ServeEngine(params, cfg, max_batch=8, eos_id=0)
+    eng.submit(Request(uid=0, prompt=prompt_ids, max_new=32))
+    results = eng.run()          # {uid: GenResult(tokens, logprobs, ...)}
+"""
+
+from repro.serve.paged_kv import PagedKVCache  # noqa: F401
+from repro.serve.engine import GenResult, Request, ServeEngine  # noqa: F401

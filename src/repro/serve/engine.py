@@ -1,0 +1,324 @@
+"""Continuous-batching serve engine over the paged FF KV cache.
+
+Scheduling model (the standard production shape, single host):
+
+  * requests enter a FIFO queue; :meth:`ServeEngine.run` drains it;
+  * **prefill** runs one request at a time at its EXACT prompt length
+    (jit-cached per distinct length — no prompt padding, no wasted
+    attention FLOPs) through the stock :func:`repro.models.prefill` via
+    ``repro.train.serve_step.make_prefill_step``, then the prompt's K/V
+    moves into pages;
+  * **decode** advances every running sequence one token per step inside a
+    single jitted paged step: per-row positions/lengths, per-row RoPE, a
+    paged scatter of the new K/V (inactive rows scatter to the
+    out-of-bounds drop page) and a block-table gather feeding the per-row
+    ``decode_attention`` — which, for ``impl="fast"``, is bitwise the
+    scalar path :func:`~repro.train.serve_step.greedy_generate` uses, so
+    the engine is token-for-token the sequential baseline;
+  * between decode steps, finished rows (EOS or ``max_new``) are evicted
+    (pages back to the free list) and waiting requests join (continuous
+    batching) — the batch never drains to refill.
+
+Accuracy-critical tier: every emitted token is scored with the FF
+token-logprob (:func:`repro.train.serve_step.token_logprob_ff`) — the
+full vocab-LSE chain stays in float-float, within 2^-40 of the f64
+oracle (gated by ``benchmarks/table_serving.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.policy import PrecisionPolicy
+from repro.ff.scope import resolve_policy
+from repro.models import init_cache
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_rope, decode_attention, mlp_apply,
+                                 rms_norm, embed_apply, unembed_apply)
+from repro.train.serve_step import (make_prefill_step, token_logprob,
+                                    token_logprob_ff)
+from repro.serve.paged_kv import PagedKVCache, ff_merge, ff_split
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``prompt``: 1-D int32 token ids."""
+    uid: int
+    prompt: np.ndarray
+    max_new: int = 16
+
+
+@dataclasses.dataclass
+class GenResult:
+    """Completed generation: tokens, f32 scores, FF limb-pair scores."""
+    uid: int
+    tokens: np.ndarray            # (n,) int32, n <= max_new
+    logprobs: np.ndarray          # (n,) f32 (compensated-LSE scores)
+    logprobs_ff: np.ndarray       # (n, 2) f32 — FF (hi, lo) limb pairs
+    prompt_len: int = 0
+
+
+def _check_cfg(cfg: ModelConfig) -> None:
+    if cfg.family != "dense" or cfg.use_mla or cfg.moe_num_experts:
+        raise NotImplementedError(
+            "ServeEngine drives the dense GQA decoder stack; MLA/MoE/SSM "
+            "families keep the contiguous-cache loop in "
+            "repro.train.serve_step for now")
+
+
+class ServeEngine:
+    """Continuous-batching greedy decoder with a paged KV cache.
+
+    Parameters: ``max_batch`` concurrent rows; ``page_size`` tokens/page;
+    ``max_ctx`` per-sequence ceiling (prompt + generated); ``num_pages``
+    defaults to a full pool (``max_batch * pages_per_seq``); ``eos_id``
+    enables per-sequence termination (None = run to ``max_new``);
+    ``kv_mode`` is the page storage format ("bf16" matches the
+    ``greedy_generate`` baseline cache bitwise; "ff_bf16" pages FF hi/lo
+    limb planes through the shared block table).  The attention impl and
+    scoring class follow the ambient ``ff.policy`` (``attention="fast"``
+    default; ``ff.policy(attention="ff")`` switches the decode softmax to
+    the compensated FF class).
+    """
+
+    def __init__(self, params: Any, cfg: ModelConfig, *,
+                 max_batch: int = 8, page_size: int = 16,
+                 max_ctx: int = 256, num_pages: Optional[int] = None,
+                 eos_id: Optional[int] = None, kv_mode: str = "bf16",
+                 policy: Optional[PrecisionPolicy] = None):
+        _check_cfg(cfg)
+        self.params = params
+        self.cfg = cfg
+        self.policy = resolve_policy(policy)
+        self.max_batch = max_batch
+        self.eos_id = eos_id
+        pages_per_seq = -(-max_ctx // page_size)
+        if num_pages is None:
+            num_pages = max_batch * pages_per_seq
+        self.kv = PagedKVCache(
+            cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim,
+            num_pages=num_pages, page_size=page_size, max_seqs=max_batch,
+            max_ctx=max_ctx, kv_mode=kv_mode)
+        self.queue: List[Request] = []
+        self.results: Dict[int, GenResult] = {}
+        # slot -> in-flight request bookkeeping (None = free row)
+        self._slots: List[Optional[Dict[str, Any]]] = [None] * max_batch
+        self._last_tok = np.zeros((max_batch,), np.int32)
+        # NOTE: the page planes are deliberately NOT donated — on the CPU
+        # backend donation around the layer scan costs a defensive copy
+        # per step (measured 2x step latency); the non-donated step keeps
+        # the pool update as cheap aliased buffers
+        self._decode = jax.jit(self._make_decode_step())
+        self._score = jax.jit(
+            lambda lg, tk: token_logprob(lg, tk, self.policy))
+        def _ff_limbs(lg, tk):
+            r = token_logprob_ff(lg, tk)
+            return r.hi, r.lo
+        self._score_ff = jax.jit(_ff_limbs)
+        self._prefill_cache: Dict[int, Any] = {}
+        self.decode_steps = 0
+
+    # -- jitted paged decode step -----------------------------------------
+
+    def _make_decode_step(self):
+        cfg, policy, kv = self.cfg, self.policy, self.kv
+        ps, npg = kv.page_size, kv.max_pages
+        ff_pages = kv.kv_mode == "ff_bf16"
+
+        def step(params, token, lens, bt, active, planes):
+            """token: (B,1) int32; lens: (B,) tokens already cached;
+            bt: (B, npg) page table (-1 empty); active: (B,) bool;
+            planes: dict of (L, NP, ps, KV, hd).  Returns (next greedy
+            token (B,), its f32 and FF (hi, lo) logprobs, updated planes)
+            — argmax and BOTH scoring tiers run inside the one jitted
+            step, so per decode step the host sees four (B,) vectors, not
+            the (B, V) logits.  Math per active row is exactly the
+            ``model.decode_step`` dense body at that row's position."""
+            dt = jnp.dtype(cfg.compute_dtype)
+            B = token.shape[0]
+            H, KVh = cfg.num_heads, cfg.num_kv_heads
+            hd = cfg.resolved_head_dim
+            NP = next(iter(planes.values())).shape[1]
+            x = embed_apply(params["embed"], token, dt)
+            # the page/offset every row writes its new K/V to (drop page
+            # NP for inactive rows -> scatter is a no-op there)
+            rowpage = bt[jnp.arange(B), lens // ps]
+            wpage = jnp.where(active, rowpage, jnp.int32(NP))
+            woff = lens % ps
+            gidx = jnp.maximum(bt, 0)          # gather table (garbage rows
+            posv = lens[:, None]               # are masked by lens later)
+
+            def body(h, scanned):
+                lp = scanned[0]
+                pl = dict(zip(sorted(planes), scanned[1:]))
+                z = rms_norm(h, lp["ln1"], cfg.norm_eps,
+                             ff_stats=policy.ff_reductions)
+                ap = lp["attn"]
+                q = (z @ ap["wq"].astype(dt)).reshape(B, 1, H, hd)
+                k = (z @ ap["wk"].astype(dt)).reshape(B, 1, KVh, hd)
+                v = (z @ ap["wv"].astype(dt)).reshape(B, 1, KVh, hd)
+                q = apply_rope(q, posv, cfg.rope_theta)
+                k = apply_rope(k, posv, cfg.rope_theta)
+                gathered = {}
+                for base, new in (("k", k), ("v", v)):
+                    if ff_pages:
+                        hi, lo = ff_split(new[:, 0])
+                        pl[f"{base}_hi"] = pl[f"{base}_hi"].at[
+                            wpage, woff].set(hi, mode="drop")
+                        pl[f"{base}_lo"] = pl[f"{base}_lo"].at[
+                            wpage, woff].set(lo, mode="drop")
+                        merged = ff_merge(pl[f"{base}_hi"][gidx],
+                                          pl[f"{base}_lo"][gidx])
+                    else:
+                        pdt = pl[base].dtype
+                        pl[base] = pl[base].at[wpage, woff].set(
+                            new[:, 0].astype(pdt), mode="drop")
+                        merged = pl[base][gidx]
+                    gathered[base] = merged.reshape(B, npg * ps, KVh, hd)
+                o = decode_attention(q, gathered["k"], gathered["v"],
+                                     lens + 1, impl=policy.attention)
+                h = h + (o.reshape(B, 1, H * hd) @ ap["wo"].astype(dt))
+                z = rms_norm(h, lp["ln2"], cfg.norm_eps,
+                             ff_stats=policy.ff_reductions)
+                f = mlp_apply(lp["ffn"], z, ff_math=policy.ff_math)
+                return h + f, tuple(pl[n] for n in sorted(pl))
+
+            x, updated = lax.scan(
+                body, x,
+                (params["layers"],) + tuple(
+                    planes[n] for n in sorted(planes)))
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps,
+                         ff_stats=policy.ff_reductions)
+            logits = unembed_apply(params["embed"], x, cfg,
+                                   ff_math=policy.ff_math)[:, 0]
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            lp = token_logprob(logits, nxt, policy)
+            lp_ff = token_logprob_ff(logits, nxt)
+            return (nxt, lp, lp_ff.hi, lp_ff.lo,
+                    dict(zip(sorted(planes), updated)))
+
+        return step
+
+    # -- request lifecycle -------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_fn(self, S: int):
+        """Exact-length prefill, jit-cached per distinct prompt length."""
+        if S not in self._prefill_cache:
+            step = make_prefill_step(self.cfg, self.policy)
+            self._prefill_cache[S] = jax.jit(step)
+        return self._prefill_cache[S]
+
+    def _admit(self) -> None:
+        """Join waiting requests into free rows while pages allow (FIFO —
+        no request starves behind an unschedulable head-of-line)."""
+        while self.queue:
+            req = self.queue[0]
+            S = int(req.prompt.shape[0])
+            total = S + req.max_new
+            slot = next((i for i, s in enumerate(self._slots) if s is None),
+                        None)
+            if slot is None or not self.kv.can_alloc(total):
+                return
+            self.queue.pop(0)
+            self.kv.alloc(slot, total)      # reserve the whole trajectory
+            self.kv.seq_lens[slot] = S      # ...but only S tokens are live
+            # the prefill cache dtype IS the page fidelity: bf16 matches
+            # the greedy_generate baseline cache bitwise; the f32 / FF
+            # page modes keep the full compute-precision K/V
+            cache_dt = jnp.bfloat16 if self.kv.kv_mode == "bf16" \
+                else jnp.float32
+            cache = init_cache(self.cfg, 1, S, dtype=cache_dt)
+            logits, cache = self._prefill_fn(S)(
+                self.params, {"tokens": jnp.asarray(req.prompt[None])},
+                cache)
+            self.kv.write_prefill(slot, {
+                "k": cache["layers"]["k"][:, 0],
+                "v": cache["layers"]["v"][:, 0]})
+            tok = int(jnp.argmax(logits, -1)[0])
+            lp = float(self._score(logits, jnp.asarray([tok], jnp.int32))[0])
+            lph, lpl = self._score_ff(logits, jnp.asarray([tok], jnp.int32))
+            state = {"req": req, "prompt_len": S,
+                     "tokens": [tok], "logprobs": [lp],
+                     "logprobs_ff": [(float(lph[0]), float(lpl[0]))]}
+            self._slots[slot] = state
+            self._last_tok[slot] = tok
+            if self._finished(state):
+                self._retire(slot)
+
+    def _finished(self, state: Dict[str, Any]) -> bool:
+        if len(state["tokens"]) >= state["req"].max_new:
+            return True
+        return self.eos_id is not None and state["tokens"][-1] == self.eos_id
+
+    def _retire(self, slot: int) -> None:
+        state = self._slots[slot]
+        req = state["req"]
+        self.results[req.uid] = GenResult(
+            uid=req.uid,
+            tokens=np.asarray(state["tokens"], np.int32),
+            logprobs=np.asarray(state["logprobs"], np.float32),
+            logprobs_ff=np.asarray(state["logprobs_ff"], np.float32),
+            prompt_len=state["prompt_len"])
+        self.kv.free_slot(slot)
+        self._slots[slot] = None
+        self._last_tok[slot] = 0
+
+    def _step_decode(self) -> None:
+        active_np = np.asarray([s is not None for s in self._slots])
+        lens = np.where(
+            active_np,
+            np.asarray([(s["prompt_len"] + len(s["tokens"]) - 1) if s else 0
+                        for s in self._slots], np.int32),
+            0).astype(np.int32)
+        nxt, lp, lph, lpl, self.kv.planes = self._decode(
+            self.params, jnp.asarray(self._last_tok[:, None]),
+            jnp.asarray(lens), jnp.asarray(self.kv.block_table),
+            jnp.asarray(active_np), self.kv.planes)
+        self.decode_steps += 1
+        # one batched device->host sync for the four (B,) vectors
+        nxt, lp, lph, lpl = jax.device_get((nxt, lp, lph, lpl))
+        nxt = np.asarray(nxt, np.int32)
+        for slot, state in enumerate(self._slots):
+            if state is None:
+                continue
+            # the step wrote this row's K/V at position lens[slot]
+            self.kv.seq_lens[slot] = int(lens[slot]) + 1
+            tok = int(nxt[slot])
+            state["tokens"].append(tok)
+            state["logprobs"].append(float(lp[slot]))
+            state["logprobs_ff"].append((float(lph[slot]), float(lpl[slot])))
+            self._last_tok[slot] = tok
+            if self._finished(state):
+                self._retire(slot)
+
+    def step(self) -> bool:
+        """One scheduler iteration: admit waiting requests into free rows,
+        then advance every running row one token.  Returns True while work
+        remains.  Public hook for callers that interleave ``submit`` with
+        decoding (staggered arrivals join the running batch at the next
+        step — see ``examples/serve_lm.py``)."""
+        self._admit()
+        if any(s is not None for s in self._slots):
+            self._step_decode()
+            self._admit()
+        elif self.queue:
+            raise RuntimeError("scheduler stalled: no running rows and "
+                               "head-of-queue cannot be admitted")
+        return any(s is not None for s in self._slots) or bool(self.queue)
+
+    def run(self) -> Dict[int, GenResult]:
+        """Drain the queue: admit + decode until everything completes."""
+        while self.step():
+            pass
+        return self.results

@@ -1,0 +1,231 @@
+"""Paged KV cache: fixed-size pages, one block table for every plane.
+
+The contiguous per-sequence cache of ``models.init_cache`` wastes
+``max_ctx`` slots per slot-holder; under continuous batching the live
+lengths are ragged and churn every few steps.  This module stores KV as
+``(L, num_pages, page_size, KV, hd)`` pools ("planes" — one per cached
+tensor) plus per-sequence page lists, so memory scales with the sum of
+live lengths rounded up to a page.
+
+Float-float pages: in ``kv_mode="ff_bf16"`` each of k/v splits into an
+FF-style hi/lo limb pair (``hi = bf16(x)``, ``lo = bf16(x - hi)`` —
+double-bf16, the storage analogue of the paper's double-f32 operators).
+The limb planes are NOT independently paged: every plane indexes through
+the SAME block table, so allocation, eviction and serialization always
+move the hi and lo limbs of a value together — an FF number never has its
+limbs split across inconsistent pages.
+
+All host-side state (block table, free list, lengths) is numpy, and
+:meth:`to_state` / :meth:`from_state` round-trip the whole cache through
+a plain dict of numpy arrays (serialization-safe: no jax types, no python
+objects beyond the dict).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+#: plane-name suffixes per kv_mode (all planes share the block table)
+_MODE_PLANES = {
+    "bf16": ("k", "v"),
+    "f32": ("k", "v"),
+    "ff_bf16": ("k_hi", "k_lo", "v_hi", "v_lo"),
+}
+_MODE_DTYPE = {"bf16": jnp.bfloat16, "f32": jnp.float32,
+               "ff_bf16": jnp.bfloat16}
+
+
+def ff_split(x: Array, dtype=jnp.bfloat16):
+    """Split an f32 array into (hi, lo) storage limbs: ``hi = round(x)``,
+    ``lo = round(x - hi)``.  Exact Fast2Sum-style residual at the storage
+    precision (the subtraction is exact in f32 because hi has f32-width
+    significand content truncated to ``dtype``)."""
+    xf = jnp.asarray(x, jnp.float32)
+    hi = xf.astype(dtype)
+    lo = (xf - hi.astype(jnp.float32)).astype(dtype)
+    return hi, lo
+
+
+def ff_merge(hi: Array, lo: Array) -> Array:
+    """Rebuild the f32 value from storage limbs (exact sum in f32)."""
+    return hi.astype(jnp.float32) + lo.astype(jnp.float32)
+
+
+class PagedKVCache:
+    """Fixed-pool paged KV store for ``max_seqs`` concurrent sequences.
+
+    Planes are jnp arrays of shape ``(L, num_pages, page_size, KV, hd)``;
+    the block table is numpy ``(max_seqs, max_pages)`` int32 with ``-1``
+    marking unallocated entries.  Page 0..num_pages-1 are real; the engine
+    uses index ``num_pages`` as the out-of-bounds "drop" target for
+    inactive rows (``.at[...].set(mode="drop")``).
+    """
+
+    def __init__(self, num_layers: int, num_kv_heads: int, head_dim: int, *,
+                 num_pages: int, page_size: int = 16, max_seqs: int = 8,
+                 max_ctx: int = 512, kv_mode: str = "bf16"):
+        if kv_mode not in _MODE_PLANES:
+            raise ValueError(f"unknown kv_mode {kv_mode!r}; "
+                             f"choose from {tuple(_MODE_PLANES)}")
+        self.num_layers = num_layers
+        self.num_kv_heads = num_kv_heads
+        self.head_dim = head_dim
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_seqs = max_seqs
+        self.max_pages = -(-max_ctx // page_size)   # pages per sequence row
+        self.kv_mode = kv_mode
+        dt = _MODE_DTYPE[kv_mode]
+        shape = (num_layers, num_pages, page_size, num_kv_heads, head_dim)
+        self.planes: Dict[str, Array] = {
+            name: jnp.zeros(shape, dt) for name in _MODE_PLANES[kv_mode]}
+        self.block_table = np.full((max_seqs, self.max_pages), -1, np.int32)
+        self.seq_lens = np.zeros((max_seqs,), np.int32)
+        self.free_pages: List[int] = list(range(num_pages - 1, -1, -1))
+
+    # -- allocation --------------------------------------------------------
+
+    def pages_for(self, length: int) -> int:
+        return -(-length // self.page_size)
+
+    def can_alloc(self, length: int) -> bool:
+        return len(self.free_pages) >= self.pages_for(length)
+
+    def alloc(self, slot: int, length: int) -> List[int]:
+        """Allocate pages for a sequence of ``length`` tokens in ``slot``.
+        Returns the page ids (also recorded in the block table)."""
+        need = self.pages_for(length)
+        if need > self.max_pages:
+            raise ValueError(f"length {length} exceeds max_ctx "
+                             f"({self.max_pages * self.page_size})")
+        if need > len(self.free_pages):
+            raise RuntimeError("paged KV pool exhausted")
+        if self.seq_lens[slot] or (self.block_table[slot] >= 0).any():
+            raise RuntimeError(f"slot {slot} already holds a sequence")
+        ids = [self.free_pages.pop() for _ in range(need)]
+        self.block_table[slot, :need] = ids
+        self.seq_lens[slot] = length
+        return ids
+
+    def grow(self, slot: int, new_length: int) -> Optional[int]:
+        """Extend ``slot`` to ``new_length`` tokens, allocating at most one
+        new page (decode adds one token per step).  Returns the new page id
+        or None if the current last page still has room."""
+        have = self.pages_for(int(self.seq_lens[slot]))
+        need = self.pages_for(new_length)
+        self.seq_lens[slot] = new_length
+        if need <= have:
+            return None
+        if need - have != 1:
+            raise ValueError("grow() extends by at most one page")
+        if not self.free_pages:
+            raise RuntimeError("paged KV pool exhausted")
+        pid = self.free_pages.pop()
+        self.block_table[slot, have] = pid
+        return pid
+
+    def free_slot(self, slot: int) -> None:
+        """Evict a sequence: return its pages to the free list.  Page
+        contents are left as-is (stale but finite — masked reads contribute
+        exact zeros), so eviction is O(pages) host work with no device op."""
+        for pid in self.block_table[slot]:
+            if pid >= 0:
+                self.free_pages.append(int(pid))
+        self.block_table[slot] = -1
+        self.seq_lens[slot] = 0
+
+    # -- data movement -----------------------------------------------------
+
+    def write_prefill(self, slot: int, tensors: Dict[str, Array]) -> None:
+        """Write per-layer contiguous K/V (``{"k": (L, S, KV, hd), "v":
+        ...}`` in compute f32/bf16) into this slot's pages.  In FF mode the
+        values are limb-split here; both limbs land in the same pages."""
+        S = int(tensors["k"].shape[1])
+        if S != int(self.seq_lens[slot]):
+            raise ValueError("prefill length != allocated length")
+        npg = self.pages_for(S)
+        ids = self.block_table[slot, :npg]
+        pad = npg * self.page_size - S
+        for base in ("k", "v"):
+            x = jnp.asarray(tensors[base])
+            if pad:
+                x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            paged = x.reshape(x.shape[0], npg, self.page_size,
+                              self.num_kv_heads, self.head_dim)
+            if self.kv_mode == "ff_bf16":
+                hi, lo = ff_split(paged)
+                self.planes[f"{base}_hi"] = \
+                    self.planes[f"{base}_hi"].at[:, ids].set(hi)
+                self.planes[f"{base}_lo"] = \
+                    self.planes[f"{base}_lo"].at[:, ids].set(lo)
+            else:
+                dt = self.planes[base].dtype
+                self.planes[base] = \
+                    self.planes[base].at[:, ids].set(paged.astype(dt))
+
+    def gather(self, slot: int) -> Dict[str, Array]:
+        """Contiguous read-back of a slot ({"k": (L, S, KV, hd), ...}, f32
+        in FF mode, storage dtype otherwise).  Host/debug path — the engine
+        gathers on-device inside its jitted step instead."""
+        S = int(self.seq_lens[slot])
+        npg = self.pages_for(S)
+        ids = self.block_table[slot, :npg]
+        out = {}
+        for base in ("k", "v"):
+            if self.kv_mode == "ff_bf16":
+                hi = self.planes[f"{base}_hi"][:, ids]
+                lo = self.planes[f"{base}_lo"][:, ids]
+                paged = ff_merge(hi, lo)
+            else:
+                paged = self.planes[base][:, ids]
+            out[base] = paged.reshape(self.num_layers, npg * self.page_size,
+                                      self.num_kv_heads, self.head_dim)[:, :S]
+        return out
+
+    # -- serialization -----------------------------------------------------
+
+    def to_state(self) -> Dict[str, np.ndarray]:
+        """Whole cache as a flat dict of numpy arrays (plus scalars of the
+        geometry).  bf16 planes ship as uint16 bit patterns so the dict
+        round-trips through any numpy-only container (npz, plasma, ...)."""
+        state: Dict[str, np.ndarray] = {
+            "block_table": self.block_table.copy(),
+            "seq_lens": self.seq_lens.copy(),
+            "free_pages": np.asarray(self.free_pages, np.int32),
+            "geometry": np.asarray(
+                [self.num_layers, self.num_kv_heads, self.head_dim,
+                 self.num_pages, self.page_size, self.max_seqs,
+                 self.max_pages * self.page_size], np.int64),
+            "kv_mode": np.frombuffer(
+                self.kv_mode.encode().ljust(8, b"\0"), np.uint8).copy(),
+        }
+        for name, plane in self.planes.items():
+            arr = np.asarray(plane)
+            if arr.dtype == jnp.bfloat16:
+                arr = arr.view(np.uint16)
+            state[f"plane_{name}"] = arr
+        return state
+
+    @classmethod
+    def from_state(cls, state: Dict[str, np.ndarray]) -> "PagedKVCache":
+        L, KV, hd, NP, ps, ms, mc = (int(v) for v in state["geometry"])
+        mode = bytes(state["kv_mode"]).rstrip(b"\0").decode()
+        self = cls(L, KV, hd, num_pages=NP, page_size=ps, max_seqs=ms,
+                   max_ctx=mc, kv_mode=mode)
+        self.block_table = np.asarray(state["block_table"], np.int32).copy()
+        self.seq_lens = np.asarray(state["seq_lens"], np.int32).copy()
+        self.free_pages = [int(p) for p in state["free_pages"]]
+        dt = _MODE_DTYPE[mode]
+        for name in _MODE_PLANES[mode]:
+            arr = state[f"plane_{name}"]
+            if dt == jnp.bfloat16:
+                arr = arr.view(np.uint16)
+                self.planes[name] = jnp.asarray(arr).view(jnp.bfloat16)
+            else:
+                self.planes[name] = jnp.asarray(arr, dt)
+        return self

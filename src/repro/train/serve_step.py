@@ -59,16 +59,54 @@ def token_logprob(logits: Array, token: Array,
     return chosen - lse
 
 
+def token_logprob_ff(logits: Array, token: Array):
+    """FF-valued chosen-token log-probability: (B, V), (B,) -> FF of (B,).
+
+    The f32-returning :func:`token_logprob` rounds the score to ~2^-24 at
+    the final subtract, which floors any contract tighter than that.  The
+    serving accuracy gate (logprob within 2^-40 of the f64 oracle, see
+    docs/DESIGN_serving.md) therefore scores through this variant: the
+    whole chain — TwoSum max-shift, FF exponentials, compensated exp-sum,
+    FF log, and the final chosen-minus-LSE subtract — stays in FF, and the
+    caller compares limb pairs."""
+    import repro.core.compensated as compensated
+    import repro.core.ff as core_ff
+    import repro.core.ffmath as ffmath
+    import repro.core.transforms as T
+    from repro.core.ff import FF
+
+    x = jnp.asarray(logits, jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    dh, dl = T.two_sum(x, jnp.broadcast_to(-m, x.shape))
+    eh, el = ffmath.exp22(dh, dl, ffmath.CORE)
+    s = core_ff.add22_accurate(
+        compensated.ff_sum_blocked(eh, axis=-1, block=256),
+        compensated.ff_sum_blocked(el, axis=-1, block=256))
+    logs = FF(*ffmath.log22(s.hi, s.lo, ffmath.CORE))
+    lse = core_ff.add212(logs, jnp.squeeze(m, axis=-1))
+    chosen = jnp.take_along_axis(x, token[:, None], axis=-1)[:, 0]
+    return core_ff.add212(FF(-lse.hi, -lse.lo), chosen)
+
+
 def greedy_generate(params, cfg: ModelConfig, prompt: Array, max_new: int,
                     cache_len: int,
                     policy: Optional[PrecisionPolicy] = None,
                     extra_inputs: Dict[str, Array] | None = None,
-                    return_logprobs: bool = False):
+                    return_logprobs: bool = False,
+                    eos_id: Optional[int] = None):
     """Greedy decoding loop (jit per step).  prompt: (B, S) int32.
 
-    ``return_logprobs=True`` additionally returns the (B, max_new) array of
+    ``return_logprobs=True`` additionally returns the (B, n) array of
     chosen-token log-probabilities, scored with the compensated FF
-    log-sum-exp (:func:`token_logprob`)."""
+    log-sum-exp (:func:`token_logprob`).
+
+    ``eos_id`` (default None = historical behaviour, always ``max_new``
+    tokens) enables per-sequence termination: rows that have emitted
+    ``eos_id`` keep decoding in lockstep but their subsequent tokens are
+    pinned to ``eos_id``, and the loop exits early once EVERY row has
+    finished — so ``n <= max_new`` and everything past a row's first EOS
+    is EOS.  This is the semantic baseline the continuous-batching engine
+    (``repro.serve``) must reproduce token-for-token."""
     B, S = prompt.shape
     cache = init_cache(cfg, B, cache_len)
     batch = {"tokens": prompt}
@@ -81,10 +119,17 @@ def greedy_generate(params, cfg: ModelConfig, prompt: Array, max_new: int,
     logits, cache = pf(params, batch, cache)
     toks = [jnp.argmax(logits, -1).astype(jnp.int32)]
     lps = [score(logits, toks[-1])] if return_logprobs else None
+    done = (toks[-1] == eos_id) if eos_id is not None else None
     pos0 = S + (cfg.num_patches if cfg.family == "vlm" else 0)
     for t in range(max_new - 1):
+        if eos_id is not None and bool(done.all()):
+            break
         logits, cache = dc(params, toks[-1][:, None], jnp.int32(pos0 + t), cache)
-        toks.append(jnp.argmax(logits, -1).astype(jnp.int32))
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        if eos_id is not None:
+            nxt = jnp.where(done, jnp.int32(eos_id), nxt)
+            done = done | (nxt == eos_id)
+        toks.append(nxt)
         if return_logprobs:
             lps.append(score(logits, toks[-1]))
     out = jnp.stack(toks, axis=1)
