@@ -1,0 +1,39 @@
+"""``repro.chaos`` — deterministic fault injection for the FF serving tier.
+
+Robustness claims are only as good as the faults they were tested
+against.  This package injects the failure modes an FF serving system
+actually meets — numeric poison in the limb planes, corrupted paging
+metadata, exhausted page pools, truncated tuning sidecars, expired
+deadlines — as *deterministic, seed-driven* perturbations, so every chaos
+scenario is a reproducible test rather than a flake generator.
+
+The contract under test (``docs/DESIGN_robustness.md``): with
+``ff.guard`` active the engine finishes **every** submitted request with
+a documented terminal status (``OK/TIMEOUT/REJECTED/DEGRADED/FAILED`` —
+zero unhandled exceptions) and **never silently returns wrong tokens**:
+a request that reports ``OK`` is token-for-token the healthy run, a
+``DEGRADED`` one is token-for-token the fast-f32-tier run, and anything
+the guard could not save is withheld as ``FAILED``.
+
+Faults (all on :class:`~repro.chaos.inject.ChaosMonkey`):
+
+  * :meth:`~repro.chaos.inject.ChaosMonkey.corrupt_kv_limbs` — NaN / Inf
+    / subnormal-lo poison written into LIVE paged KV positions (stale
+    pages are legal scratch — the documented cache invariant is
+    "stale but finite", so chaos only targets positions a row will read);
+  * :meth:`~repro.chaos.inject.ChaosMonkey.flip_block_table` — paging
+    metadata corruption: duplicate, out-of-range, or free-list-colliding
+    page ids;
+  * :meth:`~repro.chaos.inject.ChaosMonkey.exhaust_pool` — steal free
+    pages for a scope (forced allocation failure / preemption pressure);
+  * :meth:`~repro.chaos.inject.ChaosMonkey.mangle_tune_json` — truncated
+    / garbage / wrongly-typed ``FF_TUNE.json`` sidecars;
+  * deadline forcing is plain data: submit a
+    :class:`~repro.serve.Request` with ``deadline_steps=0``.
+
+``python -m repro.chaos`` runs the guarded-serving smoke (the CI chaos
+job): a tiny model served under every fault class, exiting non-zero
+unless every request lands in a documented terminal status with parity.
+"""
+
+from repro.chaos.inject import ChaosMonkey  # noqa: F401

@@ -1,0 +1,193 @@
+"""Guarded-serving chaos smoke (the CI ``chaos`` job).
+
+``python -m repro.chaos`` serves a tiny dense model under every fault
+class the injectors produce and checks the robustness contract end to
+end:
+
+  * every submitted request terminates with a documented status
+    (``OK/TIMEOUT/REJECTED/DEGRADED/FAILED``) — zero unhandled exceptions;
+  * ``OK`` results are token-for-token the healthy sequential baseline,
+    ``DEGRADED`` results are token-for-token the fast-f32-tier baseline
+    (never silently wrong);
+  * a mangled ``FF_TUNE.json`` degrades to static dispatch defaults with
+    a warning, not a crash.
+
+Exits non-zero listing every violated check.  Deterministic: fixed model
+seed, fixed :class:`~repro.chaos.ChaosMonkey` seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+import tempfile
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.chaos import ChaosMonkey
+from repro.ff import tuning
+from repro.ff.scope import resolve_policy
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serve import (DEGRADED, OK, REJECTED, STATUSES, TIMEOUT,
+                         Request, ServeEngine)
+from repro.train.serve_step import greedy_generate
+
+CFG = ModelConfig(name="chaos-smoke", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=256, max_seq_len=64, compute_dtype="float32",
+                  remat=False)
+
+FAILURES = []
+
+
+def check(cond: bool, what: str) -> None:
+    mark = "ok" if cond else "FAIL"
+    print(f"  [{mark}] {what}")
+    if not cond:
+        FAILURES.append(what)
+
+
+def _prompts(rng, n, lo=6, hi=14):
+    return [rng.integers(1, CFG.vocab_size,
+                         size=int(s)).astype(np.int32)
+            for s in rng.integers(lo, hi, size=n)]
+
+
+def _baseline(params, prompt, max_new, policy=None):
+    return np.asarray(greedy_generate(
+        params, CFG, jnp.asarray(prompt[None]), max_new, cache_len=48,
+        policy=policy)[0])
+
+
+def main() -> int:
+    rng = np.random.default_rng(7)
+    monkey = ChaosMonkey(seed=11)
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    fast = dataclasses.replace(resolve_policy(None), attention="fast",
+                               ff_math=False)
+
+    print("chaos: healthy guarded serving (guard=check)")
+    prompts = _prompts(rng, 3)
+    eng = ServeEngine(params, CFG, max_batch=2, page_size=4, max_ctx=32,
+                      guard="check")
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new=6))
+    res = eng.run()
+    check(sorted(res) == [0, 1, 2], "all requests terminated")
+    check(all(r.status == OK for r in res.values()),
+          "healthy run: every status OK")
+    check(all(np.array_equal(res[i].tokens, _baseline(params, p, 6))
+              for i, p in enumerate(prompts)),
+          "healthy run: token parity with greedy baseline")
+
+    print("chaos: NaN poison in live KV limbs (guard=degrade)")
+    prompts = _prompts(rng, 2)
+    eng = ServeEngine(params, CFG, max_batch=2, page_size=4, max_ctx=32,
+                      guard="degrade")
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new=6))
+    eng.step()
+    monkey.corrupt_kv_limbs(eng.kv, slot=0, kind="nan", n=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        res = eng.run()
+    check(sorted(res) == [0, 1], "poisoned run: all requests terminated")
+    check(all(r.status in STATUSES for r in res.values()),
+          "poisoned run: statuses documented")
+    check(any(r.status == DEGRADED for r in res.values()),
+          "poisoned run: the poisoned row was quarantined (DEGRADED)")
+    for i, p in enumerate(prompts):
+        want = _baseline(params, p, 6,
+                         fast if res[i].status == DEGRADED else None)
+        check(np.array_equal(res[i].tokens, want),
+              f"poisoned run: uid {i} ({res[i].status}) token parity")
+
+    print("chaos: block-table corruption (guard=degrade)")
+    prompts = _prompts(rng, 2)
+    eng = ServeEngine(params, CFG, max_batch=2, page_size=4, max_ctx=32,
+                      guard="degrade")
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new=6))
+    eng.step()
+    monkey.flip_block_table(eng.kv, slot=1, mode="oob")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        res = eng.run()
+    check(sorted(res) == [0, 1], "paging chaos: all requests terminated")
+    check(all(r.status in STATUSES for r in res.values()),
+          "paging chaos: statuses documented")
+    check(eng.guard_stats["integrity_rebuilds"] >= 1,
+          "paging chaos: integrity audit rebuilt the free list")
+    probs, _ = eng.kv.check_integrity()
+    check(not probs, "paging chaos: metadata clean after recovery")
+    for i, p in enumerate(prompts):
+        want = _baseline(params, p, 6,
+                         fast if res[i].status == DEGRADED else None)
+        check(np.array_equal(res[i].tokens, want),
+              f"paging chaos: uid {i} ({res[i].status}) token parity")
+
+    print("chaos: pool exhaustion -> preempt-and-requeue (reserve=prompt)")
+    prompts = _prompts(rng, 3, lo=7, hi=9)
+    eng = ServeEngine(params, CFG, max_batch=3, page_size=4, max_ctx=32,
+                      num_pages=8, reserve="prompt")
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new=8))
+    res = eng.run()
+    check(sorted(res) == [0, 1, 2], "preemption: all requests terminated")
+    check(all(r.status == OK for r in res.values()),
+          "preemption: every request still completed OK")
+    check(eng.guard_stats["preempted"] >= 1,
+          "preemption: at least one row was preempted")
+    check(all(np.array_equal(res[i].tokens, _baseline(params, p, 8))
+              for i, p in enumerate(prompts)),
+          "preemption: token parity preserved across requeue")
+
+    print("chaos: backpressure — deadlines, bounded queue, oversize")
+    prompts = _prompts(rng, 2)
+    eng = ServeEngine(params, CFG, max_batch=1, page_size=4, max_ctx=32,
+                      max_queue=2)
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new=6))
+    eng.submit(Request(uid=1, prompt=prompts[1], max_new=6,
+                       deadline_steps=1))
+    st = eng.submit(Request(uid=2, prompt=prompts[0], max_new=64))
+    check(st == REJECTED and eng.results[2].status == REJECTED,
+          "oversize request REJECTED at submit")
+    st = eng.submit(Request(uid=3, prompt=prompts[1], max_new=6))
+    check(st == REJECTED, "queue overflow REJECTED at submit (max_queue)")
+    res = eng.run()
+    check(res[0].status == OK and res[1].status == TIMEOUT,
+          "deadline_steps while queued -> TIMEOUT; head -> OK")
+    check(sorted(res) == [0, 1, 2, 3], "backpressure: all uids terminated")
+
+    print("chaos: mangled FF_TUNE.json sidecars")
+    for mode in ("truncate", "garbage", "wrong_types"):
+        with tempfile.NamedTemporaryFile(suffix=".json",
+                                         delete=False) as tmp:
+            path = tmp.name
+        monkey.mangle_tune_json(path, mode=mode)
+        tuning.clear()
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            table = tuning.load(path)
+        check(len(caught) >= 1, f"tune sidecar [{mode}]: warned, not raised")
+        if mode == "wrong_types":
+            check("cpu/add" in table,
+                  "tune sidecar [wrong_types]: valid entries salvaged")
+    tuning.clear()
+
+    print()
+    if FAILURES:
+        print(f"chaos smoke: {len(FAILURES)} check(s) FAILED")
+        for f in FAILURES:
+            print(f"  - {f}")
+        return 1
+    print("chaos smoke: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

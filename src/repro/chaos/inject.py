@@ -1,0 +1,156 @@
+"""Seed-driven fault injectors for the paged FF serving stack.
+
+Every injector draws from one ``numpy`` generator seeded at construction,
+so a chaos scenario is a pure function of ``(seed, call sequence)`` —
+rerunning a failing test replays the exact same poison in the exact same
+limb.  Injectors mutate real engine state (the jnp limb planes, the numpy
+block table, the sidecar file on disk); nothing is mocked, so the
+recovery paths exercised are the production ones.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+from typing import List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.serve.paged_kv import PagedKVCache
+
+#: poison values per corruption kind; "denormal_lo" is the flush-to-zero
+#: hazard (legal-magnitude subnormal), not an invariant violation
+_POISON = {"nan": float("nan"), "inf": float("inf"), "denormal_lo": 2.0 ** -130}
+
+
+class ChaosMonkey:
+    """Deterministic fault injector (one ``numpy`` RNG, seeded once)."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    # -- numeric poison ----------------------------------------------------
+
+    def corrupt_kv_limbs(self, kv: PagedKVCache, slot: int, *,
+                         kind: str = "nan", n: int = 1,
+                         base: Optional[str] = None,
+                         limb: str = "lo") -> List[Tuple[int, int, int, int]]:
+        """Write ``kind`` poison into ``n`` LIVE cached positions of
+        ``slot`` (positions below ``seq_lens[slot]`` — the ones decode
+        actually reads; stale page contents are documented legal scratch).
+        In ``ff_bf16`` mode the poison lands in the ``limb`` plane ("hi" |
+        "lo"); elsewhere in the single k/v plane.  Returns the poisoned
+        ``(layer, position, head, dim)`` coordinates."""
+        if kind not in _POISON:
+            raise ValueError(f"kind {kind!r}: choose from {tuple(_POISON)}")
+        live = int(kv.seq_lens[slot])
+        if live <= 0:
+            raise ValueError(f"slot {slot} holds no live sequence")
+        ps = kv.page_size
+        coords = []
+        for _ in range(n):
+            b = base or ("k", "v")[self.rng.integers(2)]
+            plane = f"{b}_{limb}" if kv.kv_mode == "ff_bf16" else b
+            layer = int(self.rng.integers(kv.num_layers))
+            pos = int(self.rng.integers(live))
+            head = int(self.rng.integers(kv.num_kv_heads))
+            dim = int(self.rng.integers(kv.head_dim))
+            page = int(kv.block_table[slot, pos // ps])
+            off = pos % ps
+            val = jnp.asarray(_POISON[kind], kv.planes[plane].dtype)
+            kv.planes[plane] = kv.planes[plane].at[
+                layer, page, off, head, dim].set(val)
+            coords.append((layer, pos, head, dim))
+        return coords
+
+    # -- paging metadata corruption ----------------------------------------
+
+    def flip_block_table(self, kv: PagedKVCache, slot: int, *,
+                         mode: str = "oob") -> str:
+        """Corrupt one live block-table entry of ``slot``: ``"oob"`` (page
+        id past the pool), ``"dup"`` (alias another live slot's page — both
+        rows now share storage), or ``"free"`` (alias a page on the free
+        list — decode and a future allocation now race).  Returns a
+        description of the flip."""
+        live = kv.pages_for(int(kv.seq_lens[slot]))
+        if live <= 0:
+            raise ValueError(f"slot {slot} holds no live pages")
+        idx = int(self.rng.integers(live))
+        old = int(kv.block_table[slot, idx])
+        if mode == "oob":
+            new = kv.num_pages + int(self.rng.integers(1, 9))
+        elif mode == "dup":
+            victims = [
+                int(p)
+                for s in range(kv.max_seqs) if s != slot
+                for p in kv.block_table[s][
+                    :kv.pages_for(int(kv.seq_lens[s]))]
+                if int(p) >= 0]
+            if not victims:
+                raise ValueError("no other live slot to alias")
+            new = victims[int(self.rng.integers(len(victims)))]
+        elif mode == "free":
+            if not kv.free_pages:
+                raise ValueError("free list is empty")
+            new = int(kv.free_pages[
+                int(self.rng.integers(len(kv.free_pages)))])
+        else:
+            raise ValueError(f"mode {mode!r}: 'oob' | 'dup' | 'free'")
+        kv.block_table[slot, idx] = new
+        return f"slot {slot} entry {idx}: page {old} -> {new} ({mode})"
+
+    # -- resource pressure -------------------------------------------------
+
+    @contextlib.contextmanager
+    def exhaust_pool(self, kv: PagedKVCache, keep: int = 0):
+        """Steal all but ``keep`` free pages for the scope's duration
+        (forced allocation failure / preemption pressure), restoring the
+        stolen pages on exit.  Yields the stolen page ids."""
+        stolen = []
+        while len(kv.free_pages) > keep:
+            stolen.append(kv.free_pages.pop())
+        try:
+            yield stolen
+        finally:
+            kv.free_pages.extend(reversed(stolen))
+
+    # -- sidecar corruption ------------------------------------------------
+
+    def mangle_tune_json(self, path: str, *, mode: str = "truncate") -> str:
+        """Write a corrupted ``FF_TUNE.json`` at ``path``: ``"truncate"``
+        (a valid payload cut mid-record — the killed-during-write case),
+        ``"garbage"`` (non-JSON bytes), or ``"wrong_types"`` (valid JSON,
+        wrong structure: one salvageable op entry, one list where a dict
+        belongs).  Returns ``path``."""
+        good = {
+            "meta": {"backend": "cpu", "format": 1},
+            "table": {
+                "cpu/add": {"16x16": {"fast": {
+                    "impl": "jnp", "opts": {}, "us": 1.0}}},
+                "cpu/matmul": {"256x256": {"accurate": {
+                    "impl": "ozaki", "opts": {}, "us": 42.0}}},
+            },
+        }
+        if mode == "truncate":
+            text = json.dumps(good, indent=2)
+            cut = int(len(text) * 0.6)
+            payload = text[:cut].encode()
+        elif mode == "garbage":
+            payload = bytes(self.rng.integers(0, 256, size=64, dtype=np.uint8))
+        elif mode == "wrong_types":
+            bad = dict(good)
+            bad["table"] = {
+                "cpu/add": good["table"]["cpu/add"],     # salvageable
+                "cpu/matmul": ["not", "a", "dict"],      # dropped
+                "cpu/softmax": {"64x64": "not-a-record"},
+            }
+            payload = json.dumps(bad).encode()
+        else:
+            raise ValueError(
+                f"mode {mode!r}: 'truncate' | 'garbage' | 'wrong_types'")
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "wb") as f:
+            f.write(payload)
+        return path

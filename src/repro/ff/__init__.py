@@ -60,6 +60,11 @@ from repro.ff.math import (  # noqa: F401
 from repro.ff import fusion  # noqa: F401
 from repro.ff.fusion import fused  # noqa: F401
 from repro.ff import sharded  # noqa: F401  (registers the mesh impls)
+from repro.ff.guard import (  # noqa: F401  (registers guard_probe)
+    guard, guard_probe, health_mask, assert_healthy, current_guard,
+    GuardCounts, FFError, FFNonFiniteError, FFNormalizationError,
+    FFResourceError, FFGuardWarning, FFTuneWarning,
+)
 from repro.ff.docgen import render_api_table  # noqa: F401
 
 # -- constructors / views (constructor sugar over the FF class) --------------

@@ -162,7 +162,16 @@ def resolve_name(op: str, impl: Optional[str] = None,
         raise KeyError(
             f"ff op {op!r} has no implementation {name!r}; "
             f"available: {impls(op)}")
-    return name
+    # guard-context resolution: inside an ff.guard(mode="degrade") scope
+    # that has recorded a violation for this op, the accurate-class
+    # resolution drops one class (ff -> fast f32) — identity everywhere
+    # else (see repro.ff.guard.maybe_degrade).
+    import sys
+    _guard = sys.modules.get("repro.ff.guard")   # NOT `from repro.ff import
+    if _guard is None:                           # guard` — the package attr
+        from importlib import import_module      # is the scope *class*
+        _guard = import_module("repro.ff.guard")
+    return _guard.maybe_degrade(op, name)
 
 
 def resolve_opts(op: str, name: str,

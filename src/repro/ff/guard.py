@@ -1,0 +1,355 @@
+"""``ff.guard`` — numeric guardrails for float-float values.
+
+The paper's 2^-44 contract holds only while both limbs stay well-formed:
+finite, and normalized (``|lo| <= ulp(hi)/2``).  Non-IEEE arithmetic,
+flush-to-zero hardware, or a corrupted KV page silently violate exactly
+those invariants (Daumas et al., cs/0605081).  This module makes the
+invariants *observable* and *recoverable*:
+
+* :func:`guard_probe` — a jit-compatible health probe (registered
+  dispatch op, jnp + Pallas impls): per-category violation counts
+  (``nonfinite`` / ``unnormalized`` / ``denormal_lo``) as one cheap
+  fused reduction over the limb planes.
+* :func:`health_mask` / :func:`assert_healthy` — the elementwise
+  invariant as a boolean mask (for ``jnp.where`` repairs) and as a
+  host-side check raising the typed :class:`FFError` taxonomy.
+* :class:`guard` — a scoped policy slot, ``ff.guard(mode=...)``::
+
+      with ff.guard(mode="degrade") as g:
+          y = ff.exp(x)              # violation -> warn, count, and the
+          ...                        # op re-resolves one class lower
+      g.counters                     # {("exp", "nonfinite"): 2, ...}
+
+  ``mode="off"`` (default ambient state) disables every probe,
+  ``"check"`` detects + warns + counts, ``"degrade"`` additionally drops
+  the *offending op* one accuracy class (ff -> fast f32) for the rest of
+  the scope — the dispatch registry consults :func:`maybe_degrade` at
+  resolution time — and repairs flagged lanes via :func:`protect`.
+
+Like every ``repro.ff`` scope this is trace-time, thread-local Python
+state; runtime detections (``jax.debug.callback``) update the scope's
+counters and degradation set as they execute, so already-compiled calls
+keep their resolution and *newly traced* calls inside the scope pick up
+the degraded class.  See ``docs/DESIGN_robustness.md``.
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ff import FF
+from repro.kernels.ff_guard import flag_planes, guard_flags
+
+Array = jnp.ndarray
+
+_MODES = ("off", "check", "degrade")
+
+
+# ===========================================================================
+# FFError taxonomy
+# ===========================================================================
+
+class FFError(RuntimeError):
+    """Base of the structured FF failure taxonomy.
+
+    Carries the op name, a violation ``kind`` and a human detail string —
+    catch :class:`FFError` for "any FF guardrail tripped", or the
+    subclasses for one failure mode."""
+
+    kind = "error"
+
+    def __init__(self, op: str, detail: str = ""):
+        self.op = op
+        self.detail = detail
+        super().__init__(
+            f"ff.{op}: {self.kind}" + (f" — {detail}" if detail else ""))
+
+
+class FFNonFiniteError(FFError):
+    """A NaN or Inf limb reached an FF value."""
+    kind = "nonfinite"
+
+
+class FFNormalizationError(FFError):
+    """An FF pair violates ``|lo| <= ulp(hi)/2`` — the two limbs overlap
+    and the 2^-44 contract no longer holds."""
+    kind = "unnormalized"
+
+
+class FFResourceError(FFError):
+    """A host-side FF resource fault (page pool, bounded queue, sidecar)."""
+    kind = "resource"
+
+
+class FFGuardWarning(UserWarning):
+    """A guard scope detected (and handled) an FF invariant violation."""
+
+
+class FFTuneWarning(UserWarning):
+    """The tuning sidecar was unusable and static defaults are in effect."""
+
+
+#: violation kind -> the error class assert_healthy raises for it
+_ERRORS = {"nonfinite": FFNonFiniteError,
+           "unnormalized": FFNormalizationError}
+
+
+# ===========================================================================
+# probes (jit-compatible)
+# ===========================================================================
+
+class GuardCounts(NamedTuple):
+    """Per-category violation counts from one :func:`guard_probe` pass.
+
+    ``nonfinite`` and ``unnormalized`` are invariant *violations*;
+    ``denormal_lo`` is a hazard flag (a subnormal ``lo`` limb is legal,
+    but flush-to-zero hardware would zero it — silent precision loss)."""
+    nonfinite: Array
+    unnormalized: Array
+    denormal_lo: Array
+
+    @property
+    def violations(self) -> Array:
+        """nonfinite + unnormalized (the health-gating total)."""
+        return self.nonfinite + self.unnormalized
+
+
+def _as_limbs(x, lo=None) -> Tuple[Array, Array]:
+    if isinstance(x, FF):
+        return x.hi, x.lo
+    hi = jnp.asarray(x, jnp.float32)
+    lo = jnp.zeros_like(hi) if lo is None else jnp.asarray(lo, jnp.float32)
+    return hi, lo
+
+
+def health_mask(x, lo=None) -> Array:
+    """Elementwise FF health: True where both limbs are finite and the
+    pair is normalized (``denormal_lo`` does not fail health — see
+    :class:`GuardCounts`).  Accepts an :class:`FF` or (hi, lo) planes."""
+    hi, lo = _as_limbs(x, lo)
+    nf, un, _ = flag_planes(hi, lo)
+    return ~(nf | un)
+
+
+def _counts(nf: Array, un: Array, dn: Array) -> GuardCounts:
+    return GuardCounts(jnp.sum(nf, dtype=jnp.int32),
+                       jnp.sum(un, dtype=jnp.int32),
+                       jnp.sum(dn, dtype=jnp.int32))
+
+
+def _guard_probe_jnp(x, lo=None) -> GuardCounts:
+    hi, lo = _as_limbs(x, lo)
+    return _counts(*flag_planes(hi, lo))
+
+
+def _guard_probe_pallas(x, lo=None, *, block=None,
+                        interpret: Optional[bool] = None) -> GuardCounts:
+    from repro.ff.dispatch import _interpret
+    from repro.kernels.ff_elementwise import DEFAULT_BLOCK
+    hi, lo = _as_limbs(x, lo)
+    flags = guard_flags(hi, lo, block=tuple(block) if block else DEFAULT_BLOCK,
+                        interpret=_interpret(interpret))
+    codes = flags.astype(jnp.int32)
+    return GuardCounts(jnp.sum(codes & 1, dtype=jnp.int32),
+                       jnp.sum((codes >> 1) & 1, dtype=jnp.int32),
+                       jnp.sum((codes >> 2) & 1, dtype=jnp.int32))
+
+
+def guard_probe(x, lo=None, *, impl: Optional[str] = None,
+                **opts) -> GuardCounts:
+    """Count FF invariant violations in one fused reduction.
+
+    Returns :class:`GuardCounts` ``(nonfinite, unnormalized,
+    denormal_lo)`` int32 scalars for an :class:`FF` (or explicit
+    ``(hi, lo)`` planes, or a plain array checked for finiteness only).
+    jit-compatible — the probe is itself a registered dispatch op
+    (``jnp`` fused-reduction default everywhere; ``pallas`` tiled flag
+    kernel), so it follows ``ff.use`` scopes and per-call ``impl=`` like
+    any other op.  Exact (integer counts) on every impl."""
+    from repro.ff import dispatch
+    name = dispatch.resolve_name("guard_probe", impl)
+    return dispatch.lookup("guard_probe", name)(x, lo, **opts)
+
+
+def assert_healthy(x, lo=None, *, op: str = "value") -> None:
+    """Host-side invariant check: raises the typed :class:`FFError`
+    subclass for the first violated category (nonfinite before
+    unnormalized).  Concrete arrays only — inside jit use
+    :func:`guard_probe` / :func:`health_mask`."""
+    c = guard_probe(x, lo)
+    for kind, n in (("nonfinite", c.nonfinite),
+                    ("unnormalized", c.unnormalized)):
+        n = int(n)
+        if n:
+            raise _ERRORS[kind](op, f"{n} element(s) flagged by guard_probe")
+
+
+# ===========================================================================
+# the scoped guard policy slot
+# ===========================================================================
+
+class GuardScope:
+    """State of one active ``ff.guard`` scope: mode, per-(op, kind)
+    violation counters, and the set of ops degraded within the scope."""
+
+    def __init__(self, mode: str):
+        if mode not in _MODES:
+            raise ValueError(f"guard mode {mode!r}; choose from {_MODES}")
+        self.mode = mode
+        self.counters: Dict[Tuple[str, str], int] = {}
+        self.degraded: set = set()
+        self._warned: set = set()
+
+    def record(self, op: str, kind: str, count: int = 1) -> None:
+        """Count a detected violation; warn once per (op, kind); in
+        ``degrade`` mode mark ``op`` for one-class-lower resolution."""
+        if self.mode == "off" or count <= 0:
+            return
+        key = (op, kind)
+        self.counters[key] = self.counters.get(key, 0) + int(count)
+        if self.mode == "degrade" and kind in _ERRORS:
+            self.degraded.add(op)
+        if key not in self._warned:
+            self._warned.add(key)
+            act = ("degrading ff.%s one accuracy class for this scope"
+                   % op if self.mode == "degrade" and kind in _ERRORS
+                   else "counting only (mode=%r)" % self.mode)
+            warnings.warn(f"ff.guard: {count} {kind} FF element(s) in "
+                          f"ff.{op} — {act}", FFGuardWarning, stacklevel=2)
+
+
+_OFF = GuardScope("off")
+
+
+class _GuardState(threading.local):
+    def __init__(self):
+        self.stack = []
+
+
+_STATE = _GuardState()
+
+
+def current_guard() -> GuardScope:
+    """The innermost active guard scope (a shared ``mode="off"`` scope
+    when none is active)."""
+    return _STATE.stack[-1] if _STATE.stack else _OFF
+
+
+class guard:
+    """Context manager installing an FF guard policy for the scope.
+
+    ``mode``: ``"off"`` (no probes — the ambient default), ``"check"``
+    (detect, warn, count), or ``"degrade"`` (check + repair flagged lanes
+    + re-resolve the offending op one accuracy class lower for the rest
+    of the scope).  Yields the :class:`GuardScope` so callers can read
+    ``.counters`` / ``.degraded`` afterwards.  Trace-time and
+    thread-local, like ``ff.policy`` / ``ff.use``."""
+
+    def __init__(self, mode: str = "check"):
+        self._scope = GuardScope(mode)
+
+    def __enter__(self) -> GuardScope:
+        _STATE.stack.append(self._scope)
+        return self._scope
+
+    def __exit__(self, *exc):
+        _STATE.stack.pop()
+        return False
+
+
+def report_violation(op: str, kind: str, count: int = 1) -> None:
+    """Record a violation against the innermost guard scope (module-level
+    entry point for host-side detectors like the serve engine)."""
+    current_guard().record(op, kind, count)
+
+
+def protect(op: str, value, fallback=None):
+    """Guard an FF op result under the ambient scope (trace-time hook).
+
+    ``mode="off"``: returns ``value`` untouched (zero cost — nothing is
+    traced).  ``"check"``: probes the result; nonzero violation counts
+    surface through a ``jax.debug.callback`` into the scope's counters +
+    one warning.  ``"degrade"``: additionally repairs flagged lanes to
+    ``fallback`` (default: the f32-rounded ``hi`` limb with NaN/Inf
+    zeroed — the fast-class value of the same computation) and marks
+    ``op`` for degraded resolution in subsequent traces."""
+    g = current_guard()
+    if g.mode == "off" or not isinstance(value, FF):
+        return value
+    nf, un, _ = flag_planes(value.hi, value.lo)
+    bad = nf | un
+    nbad_nf = jnp.sum(nf, dtype=jnp.int32)
+    nbad_un = jnp.sum(un, dtype=jnp.int32)
+
+    def _cb(n_nf, n_un, scope=g, op=op):
+        scope.record(op, "nonfinite", int(n_nf))
+        scope.record(op, "unnormalized", int(n_un))
+
+    jax.debug.callback(_cb, nbad_nf, nbad_un)
+    if g.mode != "degrade":
+        return value
+    if fallback is None:
+        hi = jnp.where(jnp.isfinite(value.hi), value.hi, jnp.float32(0))
+        fb = FF(hi, jnp.zeros_like(hi))
+    elif isinstance(fallback, FF):
+        fb = fallback
+    else:
+        f = jnp.asarray(fallback, jnp.float32)
+        fb = FF(jnp.broadcast_to(f, value.hi.shape),
+                jnp.zeros(value.hi.shape, jnp.float32))
+    return FF(jnp.where(bad, fb.hi, value.hi),
+              jnp.where(bad, fb.lo, value.lo))
+
+
+# per-op preferred fast-class impls for one-class degradation (first
+# registered name wins; ops not listed fall back to any fast-class impl)
+_FAST_DEGRADE: Dict[str, Tuple[str, ...]] = {
+    "matmul": ("hybrid", "split", "jnp"),
+    "add": ("jnp",),
+    "softmax": ("jnp",),
+    "logsumexp": ("jnp",),
+    "attention": ("fast",),
+}
+
+
+def maybe_degrade(op: str, name: str) -> str:
+    """Dispatch hook: inside a ``mode="degrade"`` scope that has marked
+    ``op``, swap an accurate-class resolution for the op's fast class
+    (one class lower — never a different op, never a worse accurate
+    impl).  Anywhere else: identity."""
+    g = current_guard()
+    if g.mode != "degrade" or op not in g.degraded:
+        return name
+    from repro.ff import dispatch, tuning
+    if tuning.accuracy_class(op, name) == "fast":
+        return name                      # already at the fast class
+    reg = dispatch._REGISTRY.get(op, {})
+    cands = _FAST_DEGRADE.get(op, ())
+    swap = next((c for c in cands if c in reg), None)
+    if swap is None:
+        swap = next((c for c in reg
+                     if tuning.accuracy_class(op, c) == "fast"), None)
+    if swap is None:
+        return name                      # no fast class registered: keep
+    key = (op, "degrade-resolve")
+    if key not in g._warned:
+        g._warned.add(key)
+        warnings.warn(f"ff.guard(mode='degrade'): resolving ff.{op} to "
+                      f"fast-class impl {swap!r} (was {name!r}) for this "
+                      f"scope", FFGuardWarning, stacklevel=3)
+    return swap
+
+
+def _register():
+    from repro.ff import dispatch
+    dispatch.register("guard_probe", "jnp", _guard_probe_jnp,
+                      default_for=("*",))
+    dispatch.register("guard_probe", "pallas", _guard_probe_pallas)
+
+
+_register()

@@ -46,12 +46,20 @@ from repro.ff.autodiff import (
 Array = jnp.ndarray
 
 
+def _guard_protect(op: str, value: FF) -> FF:
+    """Route the op result through the ambient ``ff.guard`` scope (identity
+    when no scope is active / mode="off" — see ``repro.ff.guard``)."""
+    from importlib import import_module
+    return import_module("repro.ff.guard").protect(op, value)
+
+
 def _unary_call(op: str, a: Operand, impl: Optional[str], opts: dict) -> FF:
     a = _operand(a)
     shape = _bucket2d(_shape_of(a))
     name = dispatch.resolve_name(op, impl, shape=shape)
-    return _math1_p((op, name, _kind(a),
-                     _opts_tuple(_merge_tuned(op, name, shape, opts))), a)
+    return _guard_protect(op, _math1_p(
+        (op, name, _kind(a),
+         _opts_tuple(_merge_tuned(op, name, shape, opts))), a))
 
 
 def exp(a: Operand, *, impl: Optional[str] = None, **opts) -> FF:
@@ -114,9 +122,9 @@ def pow(a: Operand, b: Operand, *, impl: Optional[str] = None,  # noqa: A001
     a, b = _broadcast2(_operand(a), _operand(b))
     shape = _bucket2d(jnp.broadcast_shapes(_shape_of(a), _shape_of(b)))
     name = dispatch.resolve_name("pow", impl, shape=shape)
-    return _pow_p((name, _kind(a), _kind(b),
-                   _opts_tuple(_merge_tuned("pow", name, shape, opts))),
-                  a, b)
+    return _guard_protect("pow", _pow_p(
+        (name, _kind(a), _kind(b),
+         _opts_tuple(_merge_tuned("pow", name, shape, opts))), a, b))
 
 
 UNARY = ("exp", "expm1", "log", "log1p", "tanh", "sigmoid", "erf", "gelu",

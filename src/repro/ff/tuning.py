@@ -310,16 +310,56 @@ def clear() -> None:
     _LOADED_FROM = None
 
 
+def _warn_tune(msg: str) -> None:
+    import warnings
+    from repro.ff.guard import FFTuneWarning
+    warnings.warn(msg, FFTuneWarning, stacklevel=3)
+
+
 def load(path: Optional[str] = None) -> dict:
-    """Load the sidecar into the in-memory table (merging over it)."""
+    """Load the sidecar into the in-memory table (merging over it).
+
+    A malformed sidecar (truncated write, hand-edited garbage, wrong
+    structure) must never take dispatch down: parse / shape problems warn
+    (``FFTuneWarning``) and fall back to the static defaults, salvaging
+    whatever well-formed ``backend/op`` entries remain.  The path is
+    still recorded as loaded so a bad file is read (and warned about)
+    once, not on every dispatch."""
     global _LOADED_FROM
     path = path or default_cache_path()
-    if os.path.exists(path):
+    if not os.path.exists(path):
+        return dict(_TABLE)
+    try:
         with open(path) as f:
             payload = json.load(f)
-        for key, buckets in payload.get("table", {}).items():
-            _TABLE.setdefault(key, {}).update(buckets)
+    except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+        _warn_tune(f"FF_TUNE sidecar {path!r} is unreadable "
+                   f"({type(e).__name__}: {e}); falling back to static "
+                   f"dispatch defaults")
+        _LOADED_FROM = path          # don't re-read the bad file per lookup
+        return dict(_TABLE)
+    table = payload.get("table") if isinstance(payload, dict) else None
+    if not isinstance(table, dict):
+        _warn_tune(f"FF_TUNE sidecar {path!r} has no 'table' mapping; "
+                   f"falling back to static dispatch defaults")
         _LOADED_FROM = path
+        return dict(_TABLE)
+    dropped = 0
+    for key, buckets in table.items():
+        # salvage structurally sound entries, drop the rest: a key maps
+        # "backend/op" -> {bucket -> record dict}
+        if not (isinstance(key, str) and isinstance(buckets, dict)
+                and all(isinstance(b, str) and isinstance(rec, dict)
+                        for b, rec in buckets.items())):
+            dropped += 1
+            continue
+        _TABLE.setdefault(key, {}).update(buckets)
+    if dropped:
+        _warn_tune(f"FF_TUNE sidecar {path!r}: dropped {dropped} malformed "
+                   f"table entr{'y' if dropped == 1 else 'ies'} (kept "
+                   f"{len(table) - dropped}); static defaults cover the "
+                   f"rest")
+    _LOADED_FROM = path
     return dict(_TABLE)
 
 

@@ -1,0 +1,87 @@
+"""Pallas kernel for the FF health probe (``ff.guard_probe``).
+
+One pass over the (hi, lo) limb planes producing a small-integer flag
+plane (f32 values 0..7): bit 0 = non-finite limb, bit 1 = normalization
+violation (``|lo| > 2^-24 |hi|`` — the multiplicative surrogate for the
+paper's ``|lo| <= ulp(hi)/2`` invariant, exact for power-of-two ``hi``
+and within one binade everywhere), bit 2 = subnormal ``lo`` (a
+flush-to-zero hazard on non-IEEE hardware, not an invariant violation —
+see ``docs/DESIGN_robustness.md``).  The caller reduces the flag plane
+to per-category counts; padding tiles contribute healthy (0, 0) pairs
+and therefore flag 0.
+
+Reuses the elementwise tiling machinery (flatten to 2-D, (8, 128)-aligned
+blocks) from :mod:`repro.kernels.ff_elementwise`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ff_elementwise import (DEFAULT_BLOCK, _pad_to, _round_up,
+                                          _to_2d, pick_block)
+
+Array = jnp.ndarray
+
+#: |lo| <= HALF_ULP_SURROGATE * |hi| accepts every normalized pair and
+#: flags anything at least 2x out of normalization (see module doc)
+HALF_ULP_SURROGATE = 2.0 ** -24
+#: smallest normal f32 — anything smaller (and nonzero) is subnormal
+MIN_NORMAL_F32 = 2.0 ** -126
+
+
+def flag_planes(hi: Array, lo: Array) -> Tuple[Array, Array, Array]:
+    """The three boolean violation planes for an FF limb pair — shared by
+    the jnp probe and the kernel body (the kernel packs them into bits).
+
+    Returns ``(nonfinite, unnormalized, denormal_lo)``.  NaN/Inf limbs
+    count only as ``nonfinite`` (NaN comparisons would otherwise leak
+    into the other categories)."""
+    hi = jnp.asarray(hi, jnp.float32)
+    lo = jnp.asarray(lo, jnp.float32)
+    finite = jnp.isfinite(hi) & jnp.isfinite(lo)
+    bound = jnp.abs(hi) * jnp.float32(HALF_ULP_SURROGATE)
+    unnorm = finite & (jnp.abs(lo) > bound)
+    # subnormal lo via exponent/mantissa bits: a float compare (lo != 0)
+    # is itself DAZ-flushed on some backends — the very hazard this flag
+    # reports — while the bit pattern is preserved everywhere
+    bits = jax.lax.bitcast_convert_type(lo, jnp.uint32)
+    denorm = finite & ((bits >> 23) & 0xFF == 0) & (bits & 0x7FFFFF != 0)
+    return ~finite, unnorm, denorm
+
+
+def _guard_kernel(hi_ref, lo_ref, f_ref):
+    nf, un, dn = flag_planes(hi_ref[...], lo_ref[...])
+    f_ref[...] = (nf.astype(jnp.float32)
+                  + 2.0 * un.astype(jnp.float32)
+                  + 4.0 * dn.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def guard_flags(hi: Array, lo: Array,
+                block: Tuple[int, int] = DEFAULT_BLOCK,
+                interpret: bool = False) -> Array:
+    """Flag plane (same shape as ``hi``, f32 bit codes 0..7) for an FF
+    limb pair, computed by one tiled Pallas pass."""
+    hi2 = _to_2d(jnp.asarray(hi, jnp.float32))
+    lo2 = _to_2d(jnp.asarray(lo, jnp.float32))
+    R, C = hi2.shape
+    br, bc = pick_block(R, C, block)
+    hi2, lo2 = _pad_to(hi2, br, bc), _pad_to(lo2, br, bc)
+    Rp, Cp = _round_up(R, br), _round_up(C, bc)
+    grid = (Rp // br, Cp // bc)
+    spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    flags = pl.pallas_call(
+        _guard_kernel,
+        out_shape=jax.ShapeDtypeStruct((Rp, Cp), jnp.float32),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=interpret,
+    )(hi2, lo2)
+    return flags[:R, :C].reshape(jnp.shape(hi))

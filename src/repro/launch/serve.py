@@ -36,6 +36,12 @@ def main():
                     choices=("bf16", "f32", "ff_bf16"),
                     help="--engine page storage: bf16 (baseline parity), "
                          "f32, or ff_bf16 (double-bf16 limb planes)")
+    ap.add_argument("--guard", type=str, default="off",
+                    choices=("off", "check", "degrade"),
+                    help="--engine numeric guardrails: 'check' compiles the "
+                         "per-step FF/KV health probe (quarantine + fast-tier "
+                         "retry of poisoned rows), 'degrade' also drops "
+                         "violating ops one accuracy class")
     ap.add_argument("--mesh", action="store_true",
                     help="shard params over the local device mesh and route "
                          "the scoring reductions through the mesh-aware FF "
@@ -71,7 +77,7 @@ def main():
         lens = rng.integers(lo, args.prompt_len + 1, size=args.batch)
         eng = ServeEngine(params, cfg, max_batch=args.batch,
                           max_ctx=args.prompt_len + args.max_new + 8,
-                          kv_mode=args.kv_mode)
+                          kv_mode=args.kv_mode, guard=args.guard)
         for i, l in enumerate(lens):
             eng.submit(Request(
                 uid=i,
@@ -83,10 +89,14 @@ def main():
         dt = time.perf_counter() - t0
         n_tok = sum(len(r.tokens) for r in results.values())
         all_lps = np.concatenate([r.logprobs for r in results.values()])
-        print(f"[serve] {cfg.name} engine({args.kv_mode}): {len(results)} "
-              f"requests (prompts {lens.min()}..{lens.max()}), {n_tok} "
-              f"tokens in {dt:.1f}s ({n_tok / dt:.1f} tok/s), mean token "
-              f"logprob {all_lps.mean():.4f}")
+        by_status: dict = {}
+        for r in results.values():
+            by_status[r.status] = by_status.get(r.status, 0) + 1
+        status_str = " ".join(f"{k}={v}" for k, v in sorted(by_status.items()))
+        print(f"[serve] {cfg.name} engine({args.kv_mode}, guard={args.guard}):"
+              f" {len(results)} requests (prompts {lens.min()}..{lens.max()}),"
+              f" {n_tok} tokens in {dt:.1f}s ({n_tok / dt:.1f} tok/s), mean "
+              f"token logprob {all_lps.mean():.4f}, status {status_str}")
         print(results[0].tokens)
         return
     prompt = jax.random.randint(jax.random.PRNGKey(1),

@@ -16,6 +16,12 @@ The production decode loop around the fused FF flash-attention op
     one — see ``models.layers.decode_attention``).
   * FF ``token_logprob`` scoring as the accuracy-critical tier: per-token
     scores within 2^-40 of the f64 oracle (``docs/DESIGN_serving.md``).
+  * Fault tolerance (``docs/DESIGN_robustness.md``): every request ends in
+    a documented terminal status (``OK/TIMEOUT/REJECTED/DEGRADED/FAILED``),
+    admission is backpressured (bounded queue + deadlines), the pool
+    preempts instead of stalling, and under ``ff.guard`` poisoned rows are
+    quarantined and retried on the fast f32 tier — exercised by the
+    ``repro.chaos`` fault-injection tier.
 
 Quick use::
 
@@ -26,4 +32,7 @@ Quick use::
 """
 
 from repro.serve.paged_kv import PagedKVCache  # noqa: F401
-from repro.serve.engine import GenResult, Request, ServeEngine  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    DEGRADED, FAILED, OK, REJECTED, STATUSES, TIMEOUT,
+    GenResult, Request, ServeEngine, UnsupportedModelError,
+)

@@ -2,7 +2,7 @@
 
 Scheduling model (the standard production shape, single host):
 
-  * requests enter a FIFO queue; :meth:`ServeEngine.run` drains it;
+  * requests enter a bounded FIFO queue; :meth:`ServeEngine.run` drains it;
   * **prefill** runs one request at a time at its EXACT prompt length
     (jit-cached per distinct length — no prompt padding, no wasted
     attention FLOPs) through the stock :func:`repro.models.prefill` via
@@ -19,6 +19,32 @@ Scheduling model (the standard production shape, single host):
     (pages back to the free list) and waiting requests join (continuous
     batching) — the batch never drains to refill.
 
+Fault tolerance (see ``docs/DESIGN_robustness.md``): every request ends
+with a documented terminal status — ``OK`` / ``TIMEOUT`` / ``REJECTED`` /
+``DEGRADED`` / ``FAILED`` — and off-nominal conditions never raise out of
+:meth:`step`:
+
+  * admission backpressure: a bounded wait queue (``max_queue``) and
+    per-request deadlines (wall-clock ``deadline_s`` or deterministic
+    ``deadline_steps``); structurally impossible requests are ``REJECTED``
+    at submit, expired ones retire as ``TIMEOUT``;
+  * ``reserve="prompt"`` allocates pages lazily (prompt only) instead of
+    reserving the whole trajectory; when the pool runs dry mid-decode the
+    engine preempts the *youngest* running row (its pages return to the
+    free list, the request re-prefills later — greedy decoding is
+    deterministic, so the replay is token-for-token identical);
+  * with ``ff.guard`` active (or ``guard="check"|"degrade"``), the jitted
+    step additionally returns a per-row health flag — non-finite new K/V
+    in any layer, a non-finite f32 score, or an FF score violating the
+    normalization invariant — and flagged rows are quarantined and
+    retried on the fast f32 tier (``DEGRADED``), never silently emitted;
+    the paging metadata is audited per flush
+    (:meth:`~repro.serve.paged_kv.PagedKVCache.check_integrity`).
+  * eos-less decode can batch the device->host sync (``sync_every=N``):
+    the four per-row vectors of N steps transfer in one ``device_get``,
+    token-for-token identical to N=1 (the next input token stays on
+    device).
+
 Accuracy-critical tier: every emitted token is scored with the FF
 token-logprob (:func:`repro.train.serve_step.token_logprob_ff`) — the
 full vocab-LSE chain stays in float-float, within 2^-40 of the f64
@@ -28,6 +54,8 @@ oracle (gated by ``benchmarks/table_serving.py``).
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -36,42 +64,90 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.policy import PrecisionPolicy
+from repro.ff.guard import FFGuardWarning, health_mask, report_violation
 from repro.ff.scope import resolve_policy
 from repro.models import init_cache
 from repro.models.config import ModelConfig
 from repro.models.layers import (apply_rope, decode_attention, mlp_apply,
                                  rms_norm, embed_apply, unembed_apply)
-from repro.train.serve_step import (make_prefill_step, token_logprob,
-                                    token_logprob_ff)
+from repro.train.serve_step import (greedy_generate, make_prefill_step,
+                                    token_logprob, token_logprob_ff)
 from repro.serve.paged_kv import PagedKVCache, ff_merge, ff_split
 
 Array = jnp.ndarray
 
+# -- terminal statuses (every submitted request ends in exactly one) --------
+OK = "OK"                  # ran to eos/max_new on the requested tier
+TIMEOUT = "TIMEOUT"        # deadline expired (queued or mid-decode)
+REJECTED = "REJECTED"      # never admitted: bounded queue / impossible size
+DEGRADED = "DEGRADED"      # guard quarantined the row; fast-tier retry OK
+FAILED = "FAILED"          # no healthy result on any tier
+STATUSES = (OK, TIMEOUT, REJECTED, DEGRADED, FAILED)
+
+
+class UnsupportedModelError(NotImplementedError):
+    """A model config outside the engine's supported families, named by
+    the offending field (raised at construction, not first request)."""
+
+    def __init__(self, field: str, value: Any, supported: str):
+        self.field = field
+        self.value = value
+        self.supported = supported
+        super().__init__(
+            f"ServeEngine does not support {field}={value!r}; supported: "
+            f"{supported}.  Use repro.train.serve_step.greedy_generate "
+            f"(contiguous cache) for this family.")
+
 
 @dataclasses.dataclass
 class Request:
-    """One generation request.  ``prompt``: 1-D int32 token ids."""
+    """One generation request.  ``prompt``: 1-D int32 token ids.
+
+    ``deadline_s`` is a wall-clock budget (seconds from submit);
+    ``deadline_steps`` a deterministic scheduler budget (decode steps from
+    submit — the testable variant).  Either expiring retires the request
+    as ``TIMEOUT`` (with any tokens produced so far)."""
     uid: int
     prompt: np.ndarray
     max_new: int = 16
+    deadline_s: Optional[float] = None
+    deadline_steps: Optional[int] = None
 
 
 @dataclasses.dataclass
 class GenResult:
-    """Completed generation: tokens, f32 scores, FF limb-pair scores."""
+    """Completed generation: tokens, f32 scores, FF limb-pair scores, and
+    the terminal ``status`` (one of :data:`STATUSES`) with a human
+    ``detail`` for every non-``OK`` outcome."""
     uid: int
     tokens: np.ndarray            # (n,) int32, n <= max_new
     logprobs: np.ndarray          # (n,) f32 (compensated-LSE scores)
     logprobs_ff: np.ndarray       # (n, 2) f32 — FF (hi, lo) limb pairs
     prompt_len: int = 0
+    status: str = OK
+    detail: str = ""
 
 
 def _check_cfg(cfg: ModelConfig) -> None:
-    if cfg.family != "dense" or cfg.use_mla or cfg.moe_num_experts:
-        raise NotImplementedError(
-            "ServeEngine drives the dense GQA decoder stack; MLA/MoE/SSM "
-            "families keep the contiguous-cache loop in "
-            "repro.train.serve_step for now")
+    if cfg.family != "dense":
+        raise UnsupportedModelError("family", cfg.family,
+                                    '"dense" (GQA decoder stack)')
+    if cfg.use_mla:
+        raise UnsupportedModelError(
+            "use_mla", True, "use_mla=False — the MLA latent cache is not "
+            "paged yet (ROADMAP item 1)")
+    if cfg.moe_num_experts:
+        raise UnsupportedModelError(
+            "moe_num_experts", cfg.moe_num_experts,
+            "moe_num_experts=0 (dense FFN)")
+
+
+def _empty_result(req: Request, status: str, detail: str) -> GenResult:
+    return GenResult(uid=req.uid, tokens=np.zeros((0,), np.int32),
+                     logprobs=np.zeros((0,), np.float32),
+                     logprobs_ff=np.zeros((0, 2), np.float32),
+                     prompt_len=int(req.prompt.shape[0]),
+                     status=status, detail=detail)
 
 
 class ServeEngine:
@@ -87,19 +163,47 @@ class ServeEngine:
     scoring class follow the ambient ``ff.policy`` (``attention="fast"``
     default; ``ff.policy(attention="ff")`` switches the decode softmax to
     the compensated FF class).
+
+    Robustness knobs: ``max_queue`` bounds the wait queue (overflow =>
+    ``REJECTED``, never an exception); ``reserve`` is ``"trajectory"``
+    (default: whole-trajectory page reservation at admission — a request
+    that joins always completes) or ``"prompt"`` (lazy growth per decode
+    step + preempt-and-requeue of the youngest row on pool exhaustion —
+    higher occupancy, same tokens); ``guard`` overrides the ambient
+    ``ff.guard`` mode for the per-step health probe (None = inherit at
+    construction); ``sync_every`` batches the device->host sync for
+    eos-less decode (forced to 1 when ``eos_id`` is set — EOS needs the
+    token on the host every step).
     """
 
     def __init__(self, params: Any, cfg: ModelConfig, *,
                  max_batch: int = 8, page_size: int = 16,
                  max_ctx: int = 256, num_pages: Optional[int] = None,
                  eos_id: Optional[int] = None, kv_mode: str = "bf16",
-                 policy: Optional[PrecisionPolicy] = None):
+                 policy: Optional[PrecisionPolicy] = None,
+                 max_queue: Optional[int] = None,
+                 reserve: str = "trajectory",
+                 guard: Optional[str] = None,
+                 sync_every: int = 1):
         _check_cfg(cfg)
+        if reserve not in ("trajectory", "prompt"):
+            raise ValueError(f"reserve {reserve!r}: 'trajectory' | 'prompt'")
+        if sync_every < 1:
+            raise ValueError("sync_every must be >= 1")
         self.params = params
         self.cfg = cfg
         self.policy = resolve_policy(policy)
         self.max_batch = max_batch
         self.eos_id = eos_id
+        self.max_queue = max_queue
+        self.reserve = reserve
+        if guard is None:
+            from repro.ff.guard import current_guard
+            guard = current_guard().mode
+        if guard not in ("off", "check", "degrade"):
+            raise ValueError(f"guard {guard!r}: 'off' | 'check' | 'degrade'")
+        self.guard_mode = guard
+        self.sync_every = 1 if eos_id is not None else int(sync_every)
         pages_per_seq = -(-max_ctx // page_size)
         if num_pages is None:
             num_pages = max_batch * pages_per_seq
@@ -107,11 +211,17 @@ class ServeEngine:
             cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim,
             num_pages=num_pages, page_size=page_size, max_seqs=max_batch,
             max_ctx=max_ctx, kv_mode=kv_mode)
-        self.queue: List[Request] = []
+        self.queue: List[Dict[str, Any]] = []   # {"req", "t_sub", "step_sub"}
         self.results: Dict[int, GenResult] = {}
         # slot -> in-flight request bookkeeping (None = free row)
         self._slots: List[Optional[Dict[str, Any]]] = [None] * max_batch
         self._last_tok = np.zeros((max_batch,), np.int32)
+        self._token_dev = jnp.zeros((max_batch,), jnp.int32)
+        self._pending: List[Dict[str, Any]] = []  # unsynced decode outputs
+        self._admit_seq = 0
+        self._auditing = False
+        self.guard_stats = {"flagged_rows": 0, "quarantined": 0,
+                            "preempted": 0, "integrity_rebuilds": 0}
         # NOTE: the page planes are deliberately NOT donated — on the CPU
         # backend donation around the layer scan costs a defensive copy
         # per step (measured 2x step latency); the non-donated step keeps
@@ -132,16 +242,18 @@ class ServeEngine:
         cfg, policy, kv = self.cfg, self.policy, self.kv
         ps, npg = kv.page_size, kv.max_pages
         ff_pages = kv.kv_mode == "ff_bf16"
+        probe = self.guard_mode != "off"
 
         def step(params, token, lens, bt, active, planes):
             """token: (B,1) int32; lens: (B,) tokens already cached;
             bt: (B, npg) page table (-1 empty); active: (B,) bool;
             planes: dict of (L, NP, ps, KV, hd).  Returns (next greedy
-            token (B,), its f32 and FF (hi, lo) logprobs, updated planes)
-            — argmax and BOTH scoring tiers run inside the one jitted
-            step, so per decode step the host sees four (B,) vectors, not
-            the (B, V) logits.  Math per active row is exactly the
-            ``model.decode_step`` dense body at that row's position."""
+            token (B,), its f32 and FF (hi, lo) logprobs, a per-row guard
+            flag (constant False with the probe off), updated planes) —
+            argmax and BOTH scoring tiers run inside the one jitted step,
+            so per decode step the host sees four (B,) vectors (plus the
+            flag), not the (B, V) logits.  Math per active row is exactly
+            the ``model.decode_step`` dense body at that row's position."""
             dt = jnp.dtype(cfg.compute_dtype)
             B = token.shape[0]
             H, KVh = cfg.num_heads, cfg.num_kv_heads
@@ -156,7 +268,8 @@ class ServeEngine:
             gidx = jnp.maximum(bt, 0)          # gather table (garbage rows
             posv = lens[:, None]               # are masked by lens later)
 
-            def body(h, scanned):
+            def body(carry, scanned):
+                h, bad = carry
                 lp = scanned[0]
                 pl = dict(zip(sorted(planes), scanned[1:]))
                 z = rms_norm(h, lp["ln1"], cfg.norm_eps,
@@ -167,6 +280,13 @@ class ServeEngine:
                 v = (z @ ap["wv"].astype(dt)).reshape(B, 1, KVh, hd)
                 q = apply_rope(q, posv, cfg.rope_theta)
                 k = apply_rope(k, posv, cfg.rope_theta)
+                if probe:
+                    # non-finite new K/V in this layer poisons the row's
+                    # cache for every later step: flag at the source
+                    bad = bad | ~jnp.isfinite(
+                        k.astype(jnp.float32)).all(axis=(1, 2, 3))
+                    bad = bad | ~jnp.isfinite(
+                        v.astype(jnp.float32)).all(axis=(1, 2, 3))
                 gathered = {}
                 for base, new in (("k", k), ("v", v)):
                     if ff_pages:
@@ -189,10 +309,11 @@ class ServeEngine:
                 z = rms_norm(h, lp["ln2"], cfg.norm_eps,
                              ff_stats=policy.ff_reductions)
                 f = mlp_apply(lp["ffn"], z, ff_math=policy.ff_math)
-                return h + f, tuple(pl[n] for n in sorted(pl))
+                return (h + f, bad), tuple(pl[n] for n in sorted(pl))
 
-            x, updated = lax.scan(
-                body, x,
+            bad0 = jnp.zeros((B,), jnp.bool_)
+            (x, bad), updated = lax.scan(
+                body, (x, bad0),
                 (params["layers"],) + tuple(
                     planes[n] for n in sorted(planes)))
             x = rms_norm(x, params["final_norm"], cfg.norm_eps,
@@ -202,15 +323,56 @@ class ServeEngine:
             nxt = jnp.argmax(logits, -1).astype(jnp.int32)
             lp = token_logprob(logits, nxt, policy)
             lp_ff = token_logprob_ff(logits, nxt)
-            return (nxt, lp, lp_ff.hi, lp_ff.lo,
+            if probe:
+                # score health: non-finite f32 score, or an FF score pair
+                # that is non-finite / unnormalized (|lo| > ulp(hi)/2)
+                bad = bad | ~jnp.isfinite(lp) | ~health_mask(lp_ff)
+            return (nxt, lp, lp_ff.hi, lp_ff.lo, bad,
                     dict(zip(sorted(planes), updated)))
 
         return step
 
     # -- request lifecycle -------------------------------------------------
 
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    def submit(self, req: Request) -> str:
+        """Enqueue a request.  Returns ``"QUEUED"`` or, when the request
+        can never be served (bounded queue full, prompt + max_new over
+        ``max_ctx``, or a trajectory larger than the whole pool), records
+        a ``REJECTED`` result and returns it — submission never raises."""
+        S = int(req.prompt.shape[0])
+        total = S + req.max_new
+        max_ctx = self.kv.max_pages * self.kv.page_size
+        if total > max_ctx:
+            self.results[req.uid] = _empty_result(
+                req, REJECTED, f"prompt+max_new = {total} exceeds "
+                f"max_ctx = {max_ctx}")
+            return REJECTED
+        if self.kv.pages_for(total) > self.kv.num_pages:
+            self.results[req.uid] = _empty_result(
+                req, REJECTED, f"trajectory needs "
+                f"{self.kv.pages_for(total)} pages; pool has "
+                f"{self.kv.num_pages}")
+            return REJECTED
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.results[req.uid] = _empty_result(
+                req, REJECTED, f"wait queue full (max_queue = "
+                f"{self.max_queue})")
+            return REJECTED
+        self.queue.append({"req": req, "t_sub": time.monotonic(),
+                           "step_sub": self.decode_steps})
+        return "QUEUED"
+
+    def status(self, uid: int) -> str:
+        """Lifecycle status for a submitted uid: a terminal status from
+        :data:`STATUSES`, else ``"RUNNING"`` / ``"QUEUED"``."""
+        if uid in self.results:
+            return self.results[uid].status
+        for s in self._slots:
+            if s is not None and s["req"].uid == uid:
+                return "RUNNING"
+        if any(q["req"].uid == uid for q in self.queue):
+            return "QUEUED"
+        raise KeyError(f"unknown request uid {uid}")
 
     def _prefill_fn(self, S: int):
         """Exact-length prefill, jit-cached per distinct prompt length."""
@@ -219,20 +381,46 @@ class ServeEngine:
             self._prefill_cache[S] = jax.jit(step)
         return self._prefill_cache[S]
 
+    def _deadline_passed(self, req: Request, t_sub: float,
+                         step_sub: int) -> bool:
+        if req.deadline_s is not None and \
+                time.monotonic() - t_sub > req.deadline_s:
+            return True
+        if req.deadline_steps is not None and \
+                self.decode_steps - step_sub >= req.deadline_steps:
+            return True
+        return False
+
+    def _expire_queue(self) -> None:
+        kept = []
+        for q in self.queue:
+            if self._deadline_passed(q["req"], q["t_sub"], q["step_sub"]):
+                self.results[q["req"].uid] = _empty_result(
+                    q["req"], TIMEOUT, "deadline expired while queued")
+            else:
+                kept.append(q)
+        self.queue = kept
+
     def _admit(self) -> None:
         """Join waiting requests into free rows while pages allow (FIFO —
         no request starves behind an unschedulable head-of-line)."""
+        admitted = False
         while self.queue:
-            req = self.queue[0]
+            q = self.queue[0]
+            req = q["req"]
             S = int(req.prompt.shape[0])
             total = S + req.max_new
             slot = next((i for i, s in enumerate(self._slots) if s is None),
                         None)
-            if slot is None or not self.kv.can_alloc(total):
-                return
+            need = total if self.reserve == "trajectory" else S
+            if slot is None or not self.kv.can_alloc(need):
+                break
             self.queue.pop(0)
-            self.kv.alloc(slot, total)      # reserve the whole trajectory
-            self.kv.seq_lens[slot] = S      # ...but only S tokens are live
+            if self.reserve == "trajectory":
+                self.kv.alloc(slot, total)  # reserve the whole trajectory
+                self.kv.seq_lens[slot] = S  # ...but only S tokens are live
+            else:
+                self.kv.alloc(slot, S)      # lazy: grow() per decode step
             # the prefill cache dtype IS the page fidelity: bf16 matches
             # the greedy_generate baseline cache bitwise; the f32 / FF
             # page modes keep the full compute-precision K/V
@@ -250,18 +438,29 @@ class ServeEngine:
             lph, lpl = self._score_ff(logits, jnp.asarray([tok], jnp.int32))
             state = {"req": req, "prompt_len": S,
                      "tokens": [tok], "logprobs": [lp],
-                     "logprobs_ff": [(float(lph[0]), float(lpl[0]))]}
+                     "logprobs_ff": [(float(lph[0]), float(lpl[0]))],
+                     "pending": 0, "start_step": self.decode_steps,
+                     "t_sub": q["t_sub"], "step_sub": q["step_sub"],
+                     "admit_seq": self._admit_seq}
+            self._admit_seq += 1
             self._slots[slot] = state
             self._last_tok[slot] = tok
-            if self._finished(state):
+            self._token_dev = self._token_dev.at[slot].set(tok)
+            admitted = True
+            if self.guard_mode != "off" and not (
+                    np.isfinite(lp) and np.isfinite(float(lph[0]))):
+                self._quarantine(slot, "non-finite prefill score")
+            elif self._finished(state):
                 self._retire(slot)
+        if admitted and self.guard_mode != "off":
+            self._audit_paging()
 
     def _finished(self, state: Dict[str, Any]) -> bool:
         if len(state["tokens"]) >= state["req"].max_new:
             return True
         return self.eos_id is not None and state["tokens"][-1] == self.eos_id
 
-    def _retire(self, slot: int) -> None:
+    def _retire(self, slot: int, status: str = OK, detail: str = "") -> None:
         state = self._slots[slot]
         req = state["req"]
         self.results[req.uid] = GenResult(
@@ -269,56 +468,294 @@ class ServeEngine:
             tokens=np.asarray(state["tokens"], np.int32),
             logprobs=np.asarray(state["logprobs"], np.float32),
             logprobs_ff=np.asarray(state["logprobs_ff"], np.float32),
-            prompt_len=state["prompt_len"])
+            prompt_len=state["prompt_len"],
+            status=status, detail=detail)
         self.kv.free_slot(slot)
         self._slots[slot] = None
         self._last_tok[slot] = 0
 
+    def _fast_policy(self) -> PrecisionPolicy:
+        """One accuracy class below the serving policy: fast f32
+        attention, builtin transcendentals, f32 scoring inputs."""
+        return dataclasses.replace(
+            self.policy, attention="fast", ff_math=False)
+
+    def _quarantine(self, slot: int, why: str,
+                    trust_pages: bool = True) -> None:
+        """Evict a poisoned row and retry the whole request on the fast
+        tier (greedy decoding is deterministic, so the retry IS the
+        request's fast-class answer, not a different sample).  Healthy
+        retry => ``DEGRADED``; a retry that still scores non-finite =>
+        ``FAILED`` (tokens withheld — never silently wrong)."""
+        state = self._slots[slot]
+        req = state["req"]
+        if trust_pages:
+            self.kv.free_slot(slot)
+        else:
+            self.kv.drop_slot(slot)     # caller rebuilds the free list
+        self._slots[slot] = None
+        self._last_tok[slot] = 0
+        self.guard_stats["quarantined"] += 1
+        report_violation("serve.decode", "nonfinite")
+        detail = f"guard: {why}; retried on the fast tier"
+        try:
+            toks, lps = greedy_generate(
+                self.params, self.cfg, jnp.asarray(req.prompt[None]),
+                req.max_new, cache_len=state["prompt_len"] + req.max_new,
+                policy=self._fast_policy(), return_logprobs=True,
+                eos_id=self.eos_id)
+            toks = np.asarray(toks[0], np.int32)
+            lps = np.asarray(lps[0], np.float32)
+        except Exception as e:   # a retry must never take the engine down
+            self.results[req.uid] = _empty_result(
+                req, FAILED, f"guard: {why}; fast-tier retry raised "
+                f"{type(e).__name__}: {e}")
+            return
+        if not np.all(np.isfinite(lps)):
+            self.results[req.uid] = _empty_result(
+                req, FAILED, f"guard: {why}; fast-tier retry still "
+                f"non-finite")
+            return
+        self.results[req.uid] = GenResult(
+            uid=req.uid, tokens=toks, logprobs=lps,
+            logprobs_ff=np.stack([lps, np.zeros_like(lps)], axis=1),
+            prompt_len=state["prompt_len"], status=DEGRADED, detail=detail)
+
+    def _audit_paging(self) -> None:
+        """Guard-mode integrity audit of the paging metadata: quarantine
+        every slot with an untrusted page list, then rebuild the free
+        list.  Never raises; runs per flush and per admission round."""
+        if self._auditing:
+            return
+        self._auditing = True
+        try:
+            problems, bad = self.kv.check_integrity()
+            if not problems:
+                return
+            warnings.warn("ServeEngine: paging metadata corrupt — " +
+                          "; ".join(problems[:4]) +
+                          (f" (+{len(problems) - 4} more)"
+                           if len(problems) > 4 else ""),
+                          FFGuardWarning, stacklevel=2)
+            report_violation("serve.paging", "nonfinite", len(problems))
+            self._flush()
+            for slot in sorted(bad):
+                if self._slots[slot] is not None:
+                    self._quarantine(slot, "corrupt block table",
+                                     trust_pages=False)
+                else:
+                    self.kv.drop_slot(slot)
+            self.kv.rebuild_free_list()
+            self.guard_stats["integrity_rebuilds"] += 1
+        finally:
+            self._auditing = False
+
+    # -- decode ------------------------------------------------------------
+
+    def _row_len(self, state: Dict[str, Any]) -> int:
+        """Tokens already cached for this row = prompt + emitted (incl.
+        unsynced pending steps) - 1 (the latest token is the step INPUT —
+        its K/V is written by the step itself)."""
+        return state["prompt_len"] + len(state["tokens"]) \
+            + state["pending"] - 1
+
+    def _preempt(self, slot: int) -> None:
+        """Preempt a running row: pages back to the free list, request
+        back to the FRONT of the queue (it keeps its original submit
+        deadline) — the later re-prefill replays deterministically, so
+        the final tokens are identical to an uninterrupted run."""
+        state = self._slots[slot]
+        req = state["req"]
+        self.kv.free_slot(slot)
+        self._slots[slot] = None
+        self._last_tok[slot] = 0
+        self.guard_stats["preempted"] += 1
+        self.queue.insert(0, {"req": req, "t_sub": state["t_sub"],
+                              "step_sub": state["step_sub"]})
+
+    def _ensure_growth(self) -> bool:
+        """``reserve="prompt"`` only: make sure every active row has a
+        page for the K/V it writes this step, preempting the youngest
+        running row on pool exhaustion.  Returns False when nothing is
+        left to decode (everything preempted/retired)."""
+        if self.reserve == "trajectory":
+            return any(s is not None for s in self._slots)
+        order = sorted(
+            (i for i, s in enumerate(self._slots) if s is not None),
+            key=lambda i: self._slots[i]["admit_seq"])
+        for slot in order:
+            state = self._slots[slot]
+            if state is None:       # preempted by an older row's growth
+                continue
+            target = self._row_len(state) + 1
+            while True:
+                if self.kv.pages_for(target) <= self.kv.pages_for(
+                        int(self.kv.seq_lens[slot])) or self.kv.free_pages:
+                    self.kv.grow(slot, target)
+                    break
+                # pool dry: sync pending work, then preempt the youngest
+                self._flush()
+                if self._slots[slot] is None:   # flush retired/quarantined
+                    break
+                running = [i for i, s in enumerate(self._slots)
+                           if s is not None]
+                if len(running) == 1:
+                    # nobody to steal from: the pool cannot hold even one
+                    # trajectory -> terminal, not a livelock
+                    self._retire(slot, FAILED,
+                                 "page pool too small for one trajectory")
+                    break
+                victim = max(running,
+                             key=lambda i: self._slots[i]["admit_seq"])
+                self._preempt(victim)
+                if victim == slot:
+                    break
+        return any(s is not None for s in self._slots)
+
     def _step_decode(self) -> None:
+        if not self._ensure_growth():
+            return
         active_np = np.asarray([s is not None for s in self._slots])
-        lens = np.where(
-            active_np,
-            np.asarray([(s["prompt_len"] + len(s["tokens"]) - 1) if s else 0
-                        for s in self._slots], np.int32),
-            0).astype(np.int32)
-        nxt, lp, lph, lpl, self.kv.planes = self._decode(
-            self.params, jnp.asarray(self._last_tok[:, None]),
+        lens = np.asarray(
+            [self._row_len(s) if s else 0 for s in self._slots],
+            np.int32)
+        nxt, lp, lph, lpl, bad, self.kv.planes = self._decode(
+            self.params, self._token_dev[:, None],
             jnp.asarray(lens), jnp.asarray(self.kv.block_table),
             jnp.asarray(active_np), self.kv.planes)
+        self._token_dev = nxt
+        self._pending.append({"step": self.decode_steps, "nxt": nxt,
+                              "lp": lp, "lph": lph, "lpl": lpl,
+                              "bad": bad})
         self.decode_steps += 1
-        # one batched device->host sync for the four (B,) vectors
-        nxt, lp, lph, lpl = jax.device_get((nxt, lp, lph, lpl))
-        nxt = np.asarray(nxt, np.int32)
         for slot, state in enumerate(self._slots):
             if state is None:
                 continue
-            # the step wrote this row's K/V at position lens[slot]
+            state["pending"] += 1
+            # the step wrote this row's K/V at position lens[slot] (in
+            # prompt mode grow() already advanced seq_lens pre-step)
             self.kv.seq_lens[slot] = int(lens[slot]) + 1
-            tok = int(nxt[slot])
-            state["tokens"].append(tok)
-            state["logprobs"].append(float(lp[slot]))
-            state["logprobs_ff"].append((float(lph[slot]), float(lpl[slot])))
-            self._last_tok[slot] = tok
-            if self._finished(state):
+
+    def _flush(self) -> None:
+        """Sync every pending decode step's four (B,) vectors (+ guard
+        flag) to the host in ONE ``device_get``, append tokens/scores in
+        step order, then apply guard / deadline / finish transitions."""
+        if not self._pending:
+            return
+        entries = self._pending
+        self._pending = []
+        host = jax.device_get([(e["nxt"], e["lp"], e["lph"], e["lpl"],
+                                e["bad"]) for e in entries])
+        flagged: Dict[int, bool] = {}
+        for (e, (nxt, lp, lph, lpl, bad)) in zip(entries, host):
+            nxt = np.asarray(nxt, np.int32)
+            for slot, state in enumerate(self._slots):
+                if state is None or state["pending"] == 0:
+                    continue
+                if state["start_step"] > e["step"]:
+                    continue            # admitted after this step ran
+                tok = int(nxt[slot])
+                state["tokens"].append(tok)
+                state["logprobs"].append(float(lp[slot]))
+                state["logprobs_ff"].append(
+                    (float(lph[slot]), float(lpl[slot])))
+                state["pending"] -= 1
+                self._last_tok[slot] = tok
+                if bool(bad[slot]):
+                    flagged[slot] = True
+        if flagged:
+            self.guard_stats["flagged_rows"] += len(flagged)
+        for slot in list(flagged):
+            if self._slots[slot] is not None:
+                self._quarantine(slot, "per-step probe flagged the row")
+        for slot, state in enumerate(self._slots):
+            if state is None:
+                continue
+            if self._deadline_passed(state["req"], state["t_sub"],
+                                     state["step_sub"]):
+                self._retire(slot, TIMEOUT,
+                             "deadline expired mid-decode "
+                             f"(kept {len(state['tokens'])} tokens)")
+            elif self._finished(state):
                 self._retire(slot)
+        if self.guard_mode != "off":
+            self._audit_paging()
+
+    def _must_flush(self) -> bool:
+        if not self._pending:
+            return False
+        if len(self._pending) >= self.sync_every:
+            return True
+        for state in self._slots:
+            if state is None:
+                continue
+            req = state["req"]
+            if len(state["tokens"]) + state["pending"] >= req.max_new:
+                return True
+            if req.deadline_s is not None or req.deadline_steps is not None:
+                if self._deadline_passed(req, state["t_sub"],
+                                         state["step_sub"]):
+                    return True
+        if self.queue and any(s is None for s in self._slots):
+            return True                 # admission opportunity
+        return False
 
     def step(self) -> bool:
         """One scheduler iteration: admit waiting requests into free rows,
         then advance every running row one token.  Returns True while work
         remains.  Public hook for callers that interleave ``submit`` with
         decoding (staggered arrivals join the running batch at the next
-        step — see ``examples/serve_lm.py``)."""
+        step — see ``examples/serve_lm.py``).  Never raises for
+        off-nominal scheduling conditions — every request ends in a
+        terminal status from :data:`STATUSES`."""
+        self._expire_queue()
         self._admit()
         if any(s is not None for s in self._slots):
             self._step_decode()
-            self._admit()
+            if self._must_flush():
+                self._flush()
+                self._admit()
         elif self.queue:
-            raise RuntimeError("scheduler stalled: no running rows and "
-                               "head-of-queue cannot be admitted")
-        return any(s is not None for s in self._slots) or bool(self.queue)
+            self._flush()
+            if not any(s is not None for s in self._slots) and self.queue:
+                # empty engine, head still unschedulable: terminal (pages
+                # leaked or pool undersized) — fail it rather than stall
+                q = self.queue.pop(0)
+                self.results[q["req"].uid] = _empty_result(
+                    q["req"], FAILED,
+                    "unschedulable: no running rows and the head request "
+                    "cannot be admitted")
+        elif self._pending:
+            self._flush()
+        return (any(s is not None for s in self._slots)
+                or bool(self.queue) or bool(self._pending))
 
     def run(self) -> Dict[int, GenResult]:
-        """Drain the queue: admit + decode until everything completes."""
+        """Drain the queue: admit + decode until everything completes.
+        Every submitted uid is present in the result dict with a terminal
+        status — under fault injection too (chaos tier, see
+        ``repro.chaos``)."""
         while self.step():
             pass
+        self._flush()
         return self.results
+
+    # -- guard introspection ----------------------------------------------
+
+    def probe_kv(self):
+        """Whole-pool FF health probe of the live KV planes: one
+        :class:`~repro.ff.guard.GuardCounts` over every plane (in
+        ``ff_bf16`` mode the storage limbs are merged first — bf16 limb
+        pairs have their own, coarser normalization scale).  Debug /
+        chaos-harness hook; the per-step probe only sees NEW K/V."""
+        from repro.ff.guard import GuardCounts, guard_probe
+        tot = [0, 0, 0]
+        for base in ("k", "v"):
+            if self.kv.kv_mode == "ff_bf16":
+                plane = ff_merge(self.kv.planes[f"{base}_hi"],
+                                 self.kv.planes[f"{base}_lo"])
+            else:
+                plane = self.kv.planes[base].astype(jnp.float32)
+            c = guard_probe(plane)
+            tot = [t + int(v) for t, v in zip(tot, c)]
+        return GuardCounts(*(jnp.int32(t) for t in tot))

@@ -118,16 +118,85 @@ class PagedKVCache:
         or None if the current last page still has room."""
         have = self.pages_for(int(self.seq_lens[slot]))
         need = self.pages_for(new_length)
-        self.seq_lens[slot] = new_length
         if need <= have:
+            self.seq_lens[slot] = new_length
             return None
         if need - have != 1:
             raise ValueError("grow() extends by at most one page")
         if not self.free_pages:
+            # raise BEFORE touching seq_lens: a failed grow must leave the
+            # bookkeeping exactly as it was (check_integrity-clean), so
+            # the engine can preempt a neighbor and retry
             raise RuntimeError("paged KV pool exhausted")
         pid = self.free_pages.pop()
         self.block_table[slot, have] = pid
+        self.seq_lens[slot] = new_length
         return pid
+
+    def check_integrity(self):
+        """Audit the host-side paging metadata (block table + free list).
+
+        Returns ``(problems, bad_slots)``: human-readable descriptions and
+        the set of slots whose page lists can no longer be trusted (an
+        out-of-range page id, a page shared between two slots or with the
+        free list, or a hole below the live length).  Pure numpy scan of
+        ``max_seqs * max_pages`` entries — cheap enough to run per
+        scheduler step under ``ff.guard``.  The caller decides what to do
+        with the verdict (the serve engine quarantines the slots, zeroes
+        their rows and calls :meth:`rebuild_free_list`)."""
+        problems: List[str] = []
+        bad = set()
+        free = [int(p) for p in self.free_pages]
+        free_set = set(free)
+        if len(free_set) != len(free):
+            problems.append("free list contains duplicate page ids")
+        if any(not 0 <= p < self.num_pages for p in free_set):
+            problems.append("free list contains out-of-range page ids")
+        owner: Dict[int, int] = {}
+        for slot in range(self.max_seqs):
+            row = self.block_table[slot]
+            for pid in row:
+                pid = int(pid)
+                if pid == -1:
+                    continue
+                if not 0 <= pid < self.num_pages:
+                    problems.append(f"slot {slot}: page id {pid} out of "
+                                    f"range [0, {self.num_pages})")
+                    bad.add(slot)
+                    continue
+                if pid in free_set:
+                    problems.append(f"slot {slot}: page {pid} is also on "
+                                    f"the free list")
+                    bad.add(slot)
+                if pid in owner:
+                    problems.append(f"page {pid} referenced by slots "
+                                    f"{owner[pid]} and {slot}")
+                    bad.add(slot)
+                    bad.add(owner[pid])
+                else:
+                    owner[pid] = slot
+            live = self.pages_for(int(self.seq_lens[slot]))
+            if live and (row[:live] < 0).any():
+                problems.append(f"slot {slot}: missing page below live "
+                                f"length {int(self.seq_lens[slot])}")
+                bad.add(slot)
+        return problems, bad
+
+    def rebuild_free_list(self) -> None:
+        """Recompute the free list as every in-range page not referenced by
+        the block table (recovery path after :meth:`check_integrity` found
+        corruption and the caller cleared the untrusted rows)."""
+        used = {int(p) for p in self.block_table.ravel()
+                if 0 <= int(p) < self.num_pages}
+        self.free_pages = [p for p in range(self.num_pages - 1, -1, -1)
+                           if p not in used]
+
+    def drop_slot(self, slot: int) -> None:
+        """Clear a slot's row WITHOUT returning its pages to the free list
+        (quarantine path: the row's page ids are untrusted — follow with
+        :meth:`rebuild_free_list` once every bad row is cleared)."""
+        self.block_table[slot] = -1
+        self.seq_lens[slot] = 0
 
     def free_slot(self, slot: int) -> None:
         """Evict a sequence: return its pages to the free list.  Page

@@ -61,6 +61,6 @@ def test_readme_links_docs_tier():
         readme = f.read()
     for doc in ("docs/API.md", "docs/NUMERICS.md", "docs/DESIGN_ozaki.md",
                 "docs/DESIGN_fusion.md", "docs/DESIGN_sharded.md",
-                "docs/DESIGN_math.md"):
+                "docs/DESIGN_math.md", "docs/DESIGN_robustness.md"):
         assert doc in readme, f"README does not link {doc}"
         assert os.path.exists(os.path.join(ROOT, doc)), doc

@@ -1,0 +1,238 @@
+"""``ff.guard`` contracts: the fused health probe (jnp == pallas), the
+typed FFError taxonomy, and the scoped check/degrade policy.
+
+The invariant probed is the paper's FF normalization contract via its
+multiplicative surrogate ``|lo| <= 2^-24 |hi|`` (exact for power-of-two
+``hi``, within one binade everywhere — accepts every normalized pair,
+flags anything at least 2x out).  Subnormal ``lo`` is a separate hazard
+flag (flush-to-zero hardware), NOT a violation — legal FF pairs can have
+subnormal low limbs.  See docs/DESIGN_robustness.md.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.ff as ff
+from repro.core.ff import FF
+from repro.ff import dispatch
+from repro.ff.guard import (FFError, FFGuardWarning, FFNonFiniteError,
+                            FFNormalizationError, current_guard, protect,
+                            report_violation)
+from repro.kernels.ff_guard import HALF_ULP_SURROGATE, flag_planes
+
+
+@pytest.fixture
+def rng():
+    """File-local override of the conftest session rng: guard tests must
+    not advance the suite-wide stream — downstream accuracy tests were
+    calibrated against its unshifted draw sequence."""
+    return np.random.default_rng(778)
+
+
+def _healthy_ff(rng, shape=(4, 64)):
+    return FF.from_f32(jnp.asarray(
+        rng.standard_normal(shape) * 3.0, jnp.float32))
+
+
+def _poisoned_pair():
+    """(hi, lo) planes: 2 nonfinite, 1 unnormalized, 1 denormal-lo, and a
+    healthy in-bound pair at index 2 (2^-30 <= 2 * 2^-24)."""
+    hi = jnp.asarray([1.0, np.nan, 2.0, np.inf, 4.0, 1.0], jnp.float32)
+    lo = jnp.asarray([0.0, 0.0, 2.0 ** -30, 0.0, 0.25, 2.0 ** -130],
+                     jnp.float32)
+    return hi, lo
+
+
+# --------------------------------------------------------------------------
+# probe
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_probe_healthy_is_zero(rng, impl):
+    """Normalized FF pairs (the output contract of every FF op) carry no
+    violations under either probe implementation."""
+    x = _healthy_ff(rng)
+    c = ff.guard_probe(x, impl=impl)
+    assert int(c.nonfinite) == 0
+    assert int(c.unnormalized) == 0
+    assert int(c.violations) == 0
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_probe_counts_by_category(impl):
+    hi, lo = _poisoned_pair()
+    c = ff.guard_probe(hi, lo, impl=impl)
+    assert int(c.nonfinite) == 2
+    assert int(c.unnormalized) == 1
+    # subnormal lo is a hazard, not a violation — and it is detected via
+    # limb BITS, because a float compare is itself DAZ-flushed on some
+    # backends (the exact hazard the flag reports)
+    assert int(c.denormal_lo) == 1
+    assert int(c.violations) == 3
+
+
+def test_probe_impls_agree(rng):
+    """jnp and pallas probes agree plane-for-plane, including the
+    subnormal detection (bit inspection on both paths)."""
+    hi = jnp.asarray(rng.standard_normal((3, 40)), jnp.float32)
+    lo = hi * jnp.float32(HALF_ULP_SURROGATE) * jnp.asarray(
+        rng.uniform(0.0, 2.0, (3, 40)), jnp.float32)
+    a = ff.guard_probe(hi, lo, impl="jnp")
+    b = ff.guard_probe(hi, lo, impl="pallas")
+    assert tuple(map(int, a)) == tuple(map(int, b))
+
+
+def test_probe_surrogate_boundary():
+    """|lo| exactly at 2^-24 |hi| is healthy; one ulp above is flagged;
+    hi = 0 requires lo = 0."""
+    hi = jnp.asarray([1.0, 1.0, 0.0, 0.0], jnp.float32)
+    lo = jnp.asarray([2.0 ** -24, 2.0 ** -23, 0.0, 1e-3], jnp.float32)
+    nf, un, _ = flag_planes(hi, lo)
+    assert not bool(nf.any())
+    assert np.array_equal(np.asarray(un), [False, True, False, True])
+
+
+def test_health_mask_and_plain_f32(rng):
+    hi, lo = _poisoned_pair()
+    m = np.asarray(ff.health_mask(hi, lo))
+    # denormal lo (index 5) is a hazard, not a violation -> still healthy
+    assert m.tolist() == [True, False, True, False, False, True]
+    # plain f32 arrays probe as (x, 0) pairs: finiteness only
+    x = jnp.asarray([1.0, np.inf, 3.0], jnp.float32)
+    assert np.asarray(ff.health_mask(x)).tolist() == [True, False, True]
+
+
+def test_probe_nan_does_not_leak_categories():
+    """NaN limbs count ONLY as nonfinite (NaN comparisons must not bleed
+    into the normalization / subnormal categories)."""
+    hi = jnp.asarray([np.nan], jnp.float32)
+    lo = jnp.asarray([np.nan], jnp.float32)
+    c = ff.guard_probe(hi, lo)
+    assert (int(c.nonfinite), int(c.unnormalized),
+            int(c.denormal_lo)) == (1, 0, 0)
+
+
+# --------------------------------------------------------------------------
+# taxonomy
+# --------------------------------------------------------------------------
+
+def test_assert_healthy_taxonomy():
+    ff.assert_healthy(jnp.asarray([1.0, 2.0], jnp.float32))
+    with pytest.raises(FFNonFiniteError) as ei:
+        ff.assert_healthy(jnp.asarray([np.inf], jnp.float32), op="matmul")
+    assert ei.value.op == "matmul" and ei.value.kind == "nonfinite"
+    assert isinstance(ei.value, FFError)
+    with pytest.raises(FFNormalizationError) as ei:
+        ff.assert_healthy(jnp.asarray([1.0], jnp.float32),
+                          jnp.asarray([0.5], jnp.float32), op="add")
+    assert ei.value.kind == "unnormalized"
+    # nonfinite outranks unnormalized when both are present
+    hi, lo = _poisoned_pair()
+    with pytest.raises(FFNonFiniteError):
+        ff.assert_healthy(hi, lo)
+
+
+# --------------------------------------------------------------------------
+# scoped policy: off / check / degrade
+# --------------------------------------------------------------------------
+
+def test_guard_scope_stack_and_modes():
+    assert current_guard().mode == "off"
+    with ff.guard(mode="check") as g:
+        assert current_guard() is g
+        with ff.guard(mode="degrade"):
+            assert current_guard().mode == "degrade"
+        assert current_guard().mode == "check"
+    assert current_guard().mode == "off"
+    with pytest.raises(ValueError):
+        ff.guard(mode="loud")
+
+
+def test_check_mode_counts_without_changing_values(rng):
+    x = FF(jnp.asarray([1.0, np.inf, 2.0], jnp.float32),
+           jnp.zeros((3,), jnp.float32))
+    with pytest.warns(FFGuardWarning):
+        with ff.guard(mode="check") as g:
+            y = protect("softmax", x)
+            np.testing.assert_array_equal(
+                np.asarray(y.hi), np.asarray(x.hi))   # pass-through
+    assert g.counters[("softmax", "nonfinite")] == 1
+    assert ("softmax", "unnormalized") not in g.counters
+    assert not g.degraded                             # check never degrades
+
+
+def test_degrade_mode_repairs_and_reresolves():
+    """A violation under mode="degrade" (1) repairs the poisoned lanes,
+    (2) records the op, (3) drops that op's future resolution one
+    accuracy class (ff -> fast f32) INSIDE the scope only."""
+    before = dispatch.resolve_name("softmax", None)
+    x = FF(jnp.asarray([1.0, np.inf, 2.0], jnp.float32),
+           jnp.zeros((3,), jnp.float32))
+    with pytest.warns(FFGuardWarning):
+        with ff.guard(mode="degrade") as g:
+            y = protect("softmax", x)
+            assert np.asarray(jnp.isfinite(y.hi)).all()
+            assert "softmax" in g.degraded
+            inside = dispatch.resolve_name("softmax", None)
+    from repro.ff.tuning import accuracy_class
+    assert accuracy_class("softmax", inside) == "fast"
+    assert dispatch.resolve_name("softmax", None) == before  # scope exited
+
+
+def test_degrade_counts_under_jit():
+    """The probe + counter callback survive jit (jax.debug.callback), and
+    the repaired value comes out of the compiled function."""
+    x = FF(jnp.asarray([1.0, np.inf, 2.0], jnp.float32),
+           jnp.zeros((3,), jnp.float32))
+    f = jax.jit(lambda v: protect("log", v).hi)
+    with pytest.warns(FFGuardWarning):
+        with ff.guard(mode="degrade") as g:
+            out = np.asarray(jax.block_until_ready(f(x)))
+    assert np.isfinite(out).all()
+    assert g.counters[("log", "nonfinite")] == 1
+
+
+def test_off_mode_is_identity(rng):
+    x = FF(jnp.asarray([np.nan, 1.0], jnp.float32),
+           jnp.zeros((2,), jnp.float32))
+    y = protect("exp", x)       # no ambient scope -> structural no-op
+    assert y is x
+    assert current_guard().counters == {}
+
+
+def test_report_violation_explicit():
+    with ff.guard(mode="degrade") as g:
+        with pytest.warns(FFGuardWarning):
+            report_violation("matmul", "nonfinite", 3)
+        assert g.counters[("matmul", "nonfinite")] == 3
+        assert "matmul" in g.degraded
+        name = dispatch.resolve_name("matmul", None)
+    from repro.ff.tuning import accuracy_class
+    assert accuracy_class("matmul", name) == "fast"
+
+
+def test_math_ops_route_through_guard():
+    """ff.math results pass through the ambient guard: a non-finite
+    ff.log output is counted and repaired under mode="degrade"."""
+    x = jnp.asarray([0.5, -1.0, 2.0], jnp.float32)   # log(-1) = nan
+    with pytest.warns(FFGuardWarning):
+        with ff.guard(mode="degrade") as g:
+            y = ff.log(x)
+            assert np.asarray(jnp.isfinite(y.hi)).all()
+    assert g.counters[("log", "nonfinite")] == 1
+    assert "log" in g.degraded
+    # outside any scope the same call keeps its honest nan
+    assert not np.isfinite(np.asarray(ff.log(x).hi))[1]
+
+
+def test_grad_through_protect(rng):
+    """protect() is differentiable (the probe is data-independent of the
+    gradient path when healthy)."""
+    x = _healthy_ff(rng, (8,))
+    def loss(hi):
+        return protect("exp", FF(hi, x.lo)).to_f32().sum()
+    with ff.guard(mode="degrade"):
+        g = jax.grad(loss)(x.hi)
+    assert np.isfinite(np.asarray(g)).all()
