@@ -36,6 +36,13 @@ Modes:
   python -m benchmarks.table_serving --guard-overhead
       # additionally gate the ff.guard(mode="check") probe cost at B=8:
       # min-of-3 paired runs vs guard="off", <= 5% tokens/s overhead
+  python -m benchmarks.table_serving --snapshot-overhead
+      # additionally gate the crash-safety cost at B=8: engine with a
+      # write-ahead journal + async snapshot every 8 decode steps vs the
+      # same engine with durability off, min-of-3 paired runs, <= 5%
+      # tokens/s overhead; also measures restore_to_first_token_s (warm
+      # restart from the snapshot until the first post-restore token is
+      # synced — includes jit re-compile, the honest restart cost)
 """
 
 from __future__ import annotations
@@ -71,6 +78,10 @@ GATE_BATCH = 8
 #: robustness contract: ff.guard(mode="check") probe overhead at B=8
 #: (docs/DESIGN_robustness.md §5) — <= 5% tokens/s vs guard="off"
 GUARD_OVERHEAD_GATE = 1.05
+#: crash-safety contract: WAL + async snapshot every SNAPSHOT_EVERY decode
+#: steps at B=8 (docs/DESIGN_robustness.md §6) — <= 5% tokens/s vs off
+SNAPSHOT_OVERHEAD_GATE = 1.05
+SNAPSHOT_EVERY = 8
 
 BENCH_CFG = dict(name="serve-bench", family="dense", num_layers=4,
                  d_model=256, num_heads=8, num_kv_heads=4, d_ff=1024,
@@ -131,9 +142,13 @@ def _run_sequential_warm(params, cfg, reqs, cache_len) -> Dict:
 
 
 def _run_engine(params, cfg, reqs, *, batch, cache_len, kv_mode,
-                guard: str = "off") -> Dict:
+                guard: str = "off", snapshot_dir: Optional[str] = None,
+                snapshot_every: Optional[int] = None) -> Dict:
+    journal = (os.path.join(snapshot_dir, "wal.jsonl")
+               if snapshot_dir else None)
     eng = ServeEngine(params, cfg, max_batch=batch, page_size=16,
-                      max_ctx=cache_len, kv_mode=kv_mode, guard=guard)
+                      max_ctx=cache_len, kv_mode=kv_mode, guard=guard,
+                      journal=journal)
     for r in reqs:
         eng.submit(r)
     eng.run()                                      # compile outside the clock
@@ -141,7 +156,7 @@ def _run_engine(params, cfg, reqs, *, batch, cache_len, kv_mode,
     for r in reqs:
         eng.submit(r)
     t0 = time.perf_counter()
-    res = eng.run()
+    res = eng.run(snapshot_dir=snapshot_dir, snapshot_every=snapshot_every)
     dt = time.perf_counter() - t0
     return {"tokens": {u: r.tokens for u, r in res.items()},
             "results": res, "seconds": dt,
@@ -195,9 +210,78 @@ def _guard_overhead_arms(params, cfg, reqs, *, batch, cache_len,
     return best["off"], best["check"]
 
 
+def _snapshot_overhead_arms(params, cfg, reqs, *, batch, cache_len,
+                            reps: int) -> tuple:
+    """Interleaved min-of-``reps`` timing of durability OFF vs the full
+    crash-safety path (fsync'd write-ahead journal + async CRC32'd
+    snapshot every SNAPSHOT_EVERY decode steps) at the gate batch.  Each
+    snapshot rep writes into a fresh temp directory so retention GC cost
+    is identical across reps."""
+    import shutil
+    import tempfile
+    best: Dict[str, Dict] = {}
+    for _ in range(max(1, reps)):
+        for mode in ("off", "snap"):
+            if mode == "snap":
+                d = tempfile.mkdtemp(prefix="serve-snap-bench-")
+                try:
+                    r = _run_engine(params, cfg, reqs, batch=batch,
+                                    cache_len=cache_len, kv_mode="bf16",
+                                    snapshot_dir=d,
+                                    snapshot_every=SNAPSHOT_EVERY)
+                finally:
+                    shutil.rmtree(d, ignore_errors=True)
+            else:
+                r = _run_engine(params, cfg, reqs, batch=batch,
+                                cache_len=cache_len, kv_mode="bf16")
+            if mode not in best or r["seconds"] < best[mode]["seconds"]:
+                best[mode] = r
+    return best["off"], best["snap"]
+
+
+def _restore_to_first_token(params, cfg, reqs, *, batch, cache_len) -> float:
+    """Warm-restart latency: run a few decode steps, snapshot, then time
+    ``resume_engine`` (verified checkpoint load + KV/slot rebuild + jit
+    re-compile in the fresh process's stead) until the FIRST post-restore
+    token is synced to the host.  Compile cost is deliberately on the
+    clock — it IS the restart cost a crashed server pays."""
+    import shutil
+    import tempfile
+    from repro.serve import resume_engine
+    d = tempfile.mkdtemp(prefix="serve-restore-bench-")
+    try:
+        snapdir = os.path.join(d, "snap")
+        wal = os.path.join(d, "wal.jsonl")
+        eng = ServeEngine(params, cfg, max_batch=batch, page_size=16,
+                          max_ctx=cache_len, kv_mode="bf16", journal=wal)
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(6):
+            if not eng.step():
+                break
+        eng.save_snapshot(snapdir)
+
+        def synced(e) -> int:
+            return (sum(len(s["tokens"]) for s in e._slots if s is not None)
+                    + sum(len(r.tokens) for r in e.results.values()))
+
+        t0 = time.perf_counter()
+        eng2 = resume_engine(params, cfg, snapdir, journal=wal,
+                             max_batch=batch, max_ctx=cache_len,
+                             page_size=16, kv_mode="bf16")
+        n0 = synced(eng2)
+        while eng2.step():
+            eng2._flush()
+            if synced(eng2) > n0:
+                break
+        return time.perf_counter() - t0
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
 def run(*, num_requests: int = 16, max_new: int = 24,
         batches: Sequence[int] = (2, 4, 8), cache_len: int = 80,
-        guard_reps: int = 1):
+        guard_reps: int = 1, snapshot_reps: int = 0):
     cfg = ModelConfig(**BENCH_CFG)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -259,6 +343,35 @@ def run(*, num_requests: int = 16, max_new: int = 24,
                 f"engine_guarded B={max(batches)} uid={r.uid}: tokens "
                 f"diverge from greedy_generate")
 
+    # crash-safety overhead arm: the same B=GATE_BATCH bf16 engine with
+    # the write-ahead journal + async snapshot every SNAPSHOT_EVERY decode
+    # steps (docs/DESIGN_robustness.md §6).  Paired min-of-`snapshot_reps`
+    # timing vs a durability-off engine gates the <=5% cost; the restore
+    # probe times resume_engine until the first post-restore synced token.
+    if snapshot_reps:
+        off_best, snapped = _snapshot_overhead_arms(
+            params, cfg, reqs, batch=max(batches), cache_len=cache_len,
+            reps=snapshot_reps)
+        tps_off = off_best["count"] / off_best["seconds"]
+        tps_snap = snapped["count"] / snapped["seconds"]
+        restore_s = _restore_to_first_token(
+            params, cfg, reqs, batch=max(batches), cache_len=cache_len)
+        rows.append({"arm": "engine_snapshot", "batch": max(batches),
+                     "kv_mode": "bf16", "tokens": snapped["count"],
+                     "seconds": snapped["seconds"],
+                     "tokens_per_s": tps_snap,
+                     "speedup_vs_greedy": tps_snap / tps_greedy,
+                     "speedup_vs_warm": tps_snap / tps_warm,
+                     "snapshot_every": SNAPSHOT_EVERY,
+                     "snapshot_overhead": tps_off / tps_snap,
+                     "restore_to_first_token_s": restore_s})
+        for r in reqs:       # durability must not change a single token
+            if not np.array_equal(snapped["tokens"][r.uid],
+                                  greedy["tokens"][r.uid]):
+                parity_failures.append(
+                    f"engine_snapshot B={max(batches)} uid={r.uid}: tokens "
+                    f"diverge from greedy_generate")
+
     acc = _logprob_accuracy(params, cfg, reqs, cache_len)
     return rows, acc, parity_failures
 
@@ -275,6 +388,12 @@ def main(argv: Optional[Sequence[str]] = None,
                     help="gate ff.guard(mode='check') probe overhead at "
                          f"B={GATE_BATCH} (<= {GUARD_OVERHEAD_GATE:.2f}x "
                          "tokens/s vs guard='off', min-of-3 paired runs)")
+    ap.add_argument("--snapshot-overhead", action="store_true",
+                    help="gate the crash-safety cost (WAL + async snapshot "
+                         f"every {SNAPSHOT_EVERY} decode steps) at "
+                         f"B={GATE_BATCH} (<= {SNAPSHOT_OVERHEAD_GATE:.2f}x "
+                         "tokens/s vs durability off, min-of-3 paired "
+                         "runs) and record restore_to_first_token_s")
     ap.add_argument("--out", type=str, default=out_json)
     args = ap.parse_args([] if argv is None else argv)
 
@@ -282,14 +401,18 @@ def main(argv: Optional[Sequence[str]] = None,
     max_new = args.max_new or (16 if args.quick else 24)
     batches = (2, GATE_BATCH) if args.quick else (2, 4, GATE_BATCH)
 
-    rows, acc, parity_failures = run(num_requests=n, max_new=max_new,
-                                     batches=batches,
-                                     guard_reps=3 if args.guard_overhead else 1)
+    rows, acc, parity_failures = run(
+        num_requests=n, max_new=max_new, batches=batches,
+        guard_reps=3 if args.guard_overhead else 1,
+        snapshot_reps=3 if args.snapshot_overhead else 0)
 
     print("serving: arm,batch,kv_mode,tok/s,vs_greedy,vs_warm")
     for r in rows:
         extra = (f",guard_overhead={r['guard_overhead']:.3f}x"
                  if "guard_overhead" in r else "")
+        if "snapshot_overhead" in r:
+            extra += (f",snapshot_overhead={r['snapshot_overhead']:.3f}x,"
+                      f"restore={r['restore_to_first_token_s']:.2f}s")
         print(f"{r['arm']},{r['batch']},{r['kv_mode']},"
               f"{r['tokens_per_s']:.1f},{r['speedup_vs_greedy']:.2f}x,"
               f"{r['speedup_vs_warm']:.2f}x{extra}")
@@ -331,6 +454,13 @@ def main(argv: Optional[Sequence[str]] = None,
             failures.append(
                 f"guard='check' overhead {g['guard_overhead']:.3f}x at "
                 f"B={g['batch']} exceeds {GUARD_OVERHEAD_GATE:.2f}x")
+    if args.snapshot_overhead:
+        s = next(r for r in rows if r["arm"] == "engine_snapshot")
+        if s["snapshot_overhead"] > SNAPSHOT_OVERHEAD_GATE:
+            failures.append(
+                f"snapshot_every={s['snapshot_every']} overhead "
+                f"{s['snapshot_overhead']:.3f}x at B={s['batch']} exceeds "
+                f"{SNAPSHOT_OVERHEAD_GATE:.2f}x")
     if failures:
         print("SERVING GATE FAILURES:")
         for f_ in failures:

@@ -29,7 +29,19 @@ Faults (all on :class:`~repro.chaos.inject.ChaosMonkey`):
   * :meth:`~repro.chaos.inject.ChaosMonkey.mangle_tune_json` — truncated
     / garbage / wrongly-typed ``FF_TUNE.json`` sidecars;
   * deadline forcing is plain data: submit a
-    :class:`~repro.serve.Request` with ``deadline_steps=0``.
+    :class:`~repro.serve.Request` with ``deadline_steps=0``;
+  * restart-tier corruption — :meth:`~repro.chaos.inject.ChaosMonkey.
+    tear_checkpoint_tmp` (crash mid-save), :meth:`~repro.chaos.inject.
+    ChaosMonkey.flip_checkpoint_bit` (bit-rot the CRC must catch), and
+    :meth:`~repro.chaos.inject.ChaosMonkey.stale_manifest` (foreign /
+    downgraded writer) against the engine snapshot store.
+
+``python -m repro.chaos.restart`` (module :mod:`repro.chaos.restart`,
+the CI ``chaos-restart`` job) goes one tier harsher: it SIGKILLs a
+subprocess engine mid-decode and proves the warm restart
+(:func:`repro.serve.resume_engine` — verified snapshot + write-ahead
+journal replay) is token-for-token and FF-logprob bit-for-bit the
+uninterrupted run, per ``kv_mode``.
 
 ``python -m repro.chaos`` runs the guarded-serving smoke (the CI chaos
 job): a tiny model served under every fault class, exiting non-zero

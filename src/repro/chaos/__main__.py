@@ -10,7 +10,13 @@ end:
     ``DEGRADED`` results are token-for-token the fast-f32-tier baseline
     (never silently wrong);
   * a mangled ``FF_TUNE.json`` degrades to static dispatch defaults with
-    a warning, not a crash.
+    a warning, not a crash;
+  * restart tier: snapshot/restore replays token-for-token (FF logprobs
+    bit-for-bit); a torn ``.tmp``, a flipped checkpoint bit, or a
+    stale-version manifest falls back WARNED to the previous retained
+    generation (never a silent load); a write-ahead journal replays
+    crash-lost requests in order.  (The SIGKILL-a-subprocess variant is
+    ``python -m repro.chaos.restart`` — the CI ``chaos-restart`` job.)
 
 Exits non-zero listing every violated check.  Deterministic: fixed model
 seed, fixed :class:`~repro.chaos.ChaosMonkey` seed.
@@ -19,6 +25,7 @@ seed, fixed :class:`~repro.chaos.ChaosMonkey` seed.
 from __future__ import annotations
 
 import dataclasses
+import os
 import sys
 import tempfile
 import warnings
@@ -178,6 +185,96 @@ def main() -> int:
             check("cpu/add" in table,
                   "tune sidecar [wrong_types]: valid entries salvaged")
     tuning.clear()
+
+    print("chaos: snapshot/restore exact replay (kv_mode=ff_bf16)")
+    from repro.checkpoint import checkpoint as ckpt_lib
+    from repro.serve import resume_engine
+    prompts = _prompts(rng, 3)
+    submitted = [Request(uid=i, prompt=p, max_new=8)
+                 for i, p in enumerate(prompts)]
+    base = ServeEngine(params, CFG, max_batch=2, page_size=4, max_ctx=32,
+                       kv_mode="ff_bf16")
+    for r in submitted:
+        base.submit(r)
+    res_base = base.run()
+    snapdir = tempfile.mkdtemp(prefix="chaos-snap-")
+    eng = ServeEngine(params, CFG, max_batch=2, page_size=4, max_ctx=32,
+                      kv_mode="ff_bf16")
+    for r in submitted:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    eng.save_snapshot(snapdir)       # generation 1 (mid-run)
+    for _ in range(2):
+        eng.step()
+    eng.save_snapshot(snapdir)       # generation 2 (later)
+    eng2 = resume_engine(params, CFG, snapdir)
+    res = eng2.run()
+    check(sorted(res) == [0, 1, 2], "restart: all requests terminated")
+    check(all(np.array_equal(res[i].tokens, res_base[i].tokens)
+              for i in res),
+          "restart: token-for-token parity with the uninterrupted run")
+    check(all(np.array_equal(res[i].logprobs_ff, res_base[i].logprobs_ff)
+              for i in res),
+          "restart: FF logprob limb pairs bit-for-bit identical")
+
+    print("chaos: corrupted checkpoints fall back WARNED, never silent")
+    # the two retained generations above are the ladder under test
+    monkey.tear_checkpoint_tmp(snapdir)
+    steps_before = ckpt_lib.available_steps(snapdir)
+    check(len(steps_before) == 2 and not any(
+        d.endswith(".tmp") for d in os.listdir(snapdir)),
+        "torn .tmp write: skipped and garbage-collected")
+    newest = steps_before[-1]
+    monkey.flip_checkpoint_bit(snapdir, step=newest)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        eng3 = resume_engine(params, CFG, snapdir)
+    check(any(issubclass(w.category, ckpt_lib.CheckpointCorruptionWarning)
+              for w in caught),
+          "bit flip: CRC mismatch warned (loud fallback)")
+    check(eng3.decode_steps == steps_before[0],
+          "bit flip: fell back to the previous retained generation")
+    res = eng3.run()
+    check(all(np.array_equal(res[i].tokens, res_base[i].tokens)
+              for i in res),
+          "bit flip: replay from the older generation still exact")
+    monkey.stale_manifest(snapdir, step=steps_before[0])
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        try:
+            ckpt_lib.load_dict(snapdir)
+            loud = False
+        except ckpt_lib.CheckpointError:
+            loud = True      # every generation bad -> raise, not silence
+    check(loud and len(caught) >= 2,
+          "stale manifest: no generation verifies -> loud CheckpointError")
+
+    print("chaos: write-ahead journal replays crash-lost requests")
+    waldir = tempfile.mkdtemp(prefix="chaos-wal-")
+    wal = os.path.join(waldir, "wal.jsonl")
+    eng = ServeEngine(params, CFG, max_batch=2, page_size=4, max_ctx=32,
+                      journal=wal)
+    for r in submitted:
+        eng.submit(r)
+    del eng                          # crash before any decode/snapshot
+    eng2 = resume_engine(params, CFG,
+                         os.path.join(waldir, "snap"),
+                         journal=wal, max_batch=2, page_size=4,
+                         max_ctx=32)
+    check([q["req"].uid for q in eng2.queue] == [0, 1, 2],
+          "WAL: requests re-admitted in original order")
+    res = eng2.run()
+    base_bf16 = ServeEngine(params, CFG, max_batch=2, page_size=4,
+                            max_ctx=32)
+    for r in submitted:
+        base_bf16.submit(r)
+    res_base2 = base_bf16.run()
+    check(all(np.array_equal(res[i].tokens, res_base2[i].tokens)
+              for i in res),
+          "WAL: replayed requests produce the same tokens")
+    check(os.path.getsize(wal) == 0,
+          "WAL: journal truncated on clean retirement")
 
     print()
     if FAILURES:

@@ -116,6 +116,70 @@ class ChaosMonkey:
         finally:
             kv.free_pages.extend(reversed(stolen))
 
+    # -- checkpoint / restart corruption -----------------------------------
+
+    def tear_checkpoint_tmp(self, directory: str, *, step: int = 99) -> str:
+        """Fabricate a crash mid-save: a ``step_XXXXXXXX.tmp`` directory
+        holding a partial leaf and NO manifest — exactly what SIGKILL
+        during :func:`repro.checkpoint.checkpoint.save` leaves behind.
+        The read path must skip and garbage-collect it.  Returns the tmp
+        path."""
+        path = os.path.join(directory, f"step_{step:08d}.tmp")
+        os.makedirs(path, exist_ok=True)
+        with open(os.path.join(path, "torn_leaf.npy"), "wb") as f:
+            f.write(b"\x93NUMPY" + bytes(
+                self.rng.integers(0, 256, size=40, dtype=np.uint8)))
+        return path
+
+    def flip_checkpoint_bit(self, directory: str, *,
+                            step: Optional[int] = None) -> str:
+        """Flip ONE random bit in one ``.npy`` leaf of the (latest)
+        retained generation — classic bit-rot.  The CRC32 verify must
+        catch it and fall back to the previous generation.  Returns a
+        description of the flip."""
+        from repro.checkpoint import checkpoint as ckpt
+        if step is None:
+            step = ckpt.latest_step(directory)
+        if step is None:
+            raise ValueError(f"no checkpoint generation under {directory}")
+        path = os.path.join(directory, f"step_{step:08d}")
+        leaves = sorted(f for f in os.listdir(path) if f.endswith(".npy"))
+        if not leaves:
+            raise ValueError(f"{path} holds no leaves")
+        leaf = leaves[int(self.rng.integers(len(leaves)))]
+        fpath = os.path.join(path, leaf)
+        size = os.path.getsize(fpath)
+        # skip the ~128-byte npy header: flip payload data, the case a
+        # CRC (not the npy parser) must catch
+        lo = min(128, size - 1)
+        byte = int(self.rng.integers(lo, size))
+        bit = int(self.rng.integers(8))
+        with open(fpath, "r+b") as f:
+            f.seek(byte)
+            old = f.read(1)[0]
+            f.seek(byte)
+            f.write(bytes([old ^ (1 << bit)]))
+        return f"step {step} leaf {leaf}: bit {bit} of byte {byte} flipped"
+
+    def stale_manifest(self, directory: str, *,
+                       step: Optional[int] = None, version: int = 1) -> str:
+        """Rewrite the (latest) generation's manifest with a stale schema
+        ``version`` — the restart-after-downgrade / foreign-writer case.
+        The loader must treat it as unverifiable and fall back.  Returns
+        the manifest path."""
+        if step is None:
+            from repro.checkpoint import checkpoint as ckpt
+            step = ckpt.latest_step(directory)
+        if step is None:
+            raise ValueError(f"no checkpoint generation under {directory}")
+        mpath = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest["format"] = version
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        return mpath
+
     # -- sidecar corruption ------------------------------------------------
 
     def mangle_tune_json(self, path: str, *, mode: str = "truncate") -> str:

@@ -1,1 +1,11 @@
-"""repro.checkpoint substrate."""
+"""repro.checkpoint substrate — atomic, async, checksummed checkpoints.
+
+See :mod:`repro.checkpoint.checkpoint` for the format (per-step
+directories of ``.npy`` leaves + a CRC32'd, schema-versioned manifest)
+and the verified-load fallback ladder.
+"""
+
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    FORMAT, AsyncCheckpointer, CheckpointCorruptionWarning, CheckpointError,
+    available_steps, latest_step, load, load_dict, save,
+)

@@ -1,10 +1,22 @@
-"""Fault-tolerant checkpointing: atomic, async, elastic-reshardable.
+"""Fault-tolerant checkpointing: atomic, async, checksummed, elastic.
 
-Format: one directory per step with flat ``.npy`` leaves + a JSON manifest
-of the pytree structure.  Writes go to ``<dir>.tmp`` then ``os.rename`` —
-a crash mid-save can never corrupt the latest checkpoint.  ``save_async``
-snapshots to host memory synchronously (cheap) and writes on a worker
-thread so the train loop never blocks on the filesystem.
+Format (schema ``FORMAT``): one directory per step with flat ``.npy``
+leaves + a JSON manifest of the pytree structure.  Writes go to
+``<dir>.tmp`` then ``os.rename`` — a crash mid-save can never corrupt the
+latest checkpoint, and the orphaned ``.tmp`` it leaves behind is skipped
+and garbage-collected by the next :func:`latest_step` / :func:`load`.
+``save_async`` snapshots to host memory synchronously (cheap) and writes
+on a worker thread so the train/serve loop never blocks on the
+filesystem.
+
+Integrity: the manifest records a schema version plus a per-leaf CRC32 of
+the on-disk bytes.  :func:`load` / :func:`load_dict` verify both; on ANY
+mismatch (bit-flip, truncated leaf, missing file, stale schema) they warn
+(:class:`CheckpointCorruptionWarning`) and **fall back to the previous
+retained generation** instead of returning corrupted arrays.  Only when
+no retained generation verifies does loading raise
+(:class:`CheckpointError`) — corruption is never silent, and a torn write
+never takes recovery down.
 
 Elasticity: leaves are saved as FULL (host-gathered) arrays, so a restart
 may re-shard onto a different mesh/device-count — ``load`` just returns
@@ -17,12 +29,28 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+import warnings
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 SEP = "__"
+
+#: manifest schema version.  Bumped when the on-disk layout changes; a
+#: manifest with any other version is treated as corrupt (stale-schema
+#: mismatch) and falls into the generation ladder like a bad CRC.
+FORMAT = 2
+
+
+class CheckpointError(RuntimeError):
+    """No retained checkpoint generation verified (or an explicit step was
+    requested and nothing at-or-below it is loadable)."""
+
+
+class CheckpointCorruptionWarning(UserWarning):
+    """A checkpoint generation failed verification and was skipped."""
 
 
 def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
@@ -44,30 +72,42 @@ def _key_str(k) -> str:
     return str(k)
 
 
+def _stored_view(arr: np.ndarray) -> np.ndarray:
+    """The array as written to disk (numpy can't serialize ml_dtypes)."""
+    if str(arr.dtype) == "bfloat16":
+        return arr.view(np.uint16)
+    return arr
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
 def save(directory: str, step: int, tree, extra: Optional[Dict] = None) -> str:
-    """Synchronous atomic save.  Returns final path."""
+    """Synchronous atomic save (tmp dir + rename).  Returns final path."""
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     leaves = _flatten_with_paths(tree)
-    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    manifest = {"format": FORMAT, "step": step, "leaves": [],
+                "extra": extra or {}}
     for name, leaf in leaves:
         arr = np.asarray(jax.device_get(leaf))
-        dtype = str(arr.dtype)
-        if dtype == "bfloat16":          # numpy can't serialize ml_dtypes
-            np.save(os.path.join(tmp, name + ".npy"), arr.view(np.uint16))
-        else:
-            np.save(os.path.join(tmp, name + ".npy"), arr)
+        stored = _stored_view(arr)
+        np.save(os.path.join(tmp, name + ".npy"), stored)
         manifest["leaves"].append({"name": name, "shape": list(arr.shape),
-                                   "dtype": dtype})
+                                   "dtype": str(arr.dtype),
+                                   "crc32": _crc(stored)})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
-    # retention: keep last 3
+    # retention: keep last 3 (the fallback ladder load() walks down)
     ckpts = sorted(d for d in os.listdir(directory) if d.startswith("step_")
                    and not d.endswith(".tmp"))
     for old in ckpts[:-3]:
@@ -77,13 +117,20 @@ def save(directory: str, step: int, tree, extra: Optional[Dict] = None) -> str:
 
 class AsyncCheckpointer:
     """Snapshot-on-call, write-on-thread.  At most one write in flight;
-    a new save waits for the previous (backpressure, bounded memory)."""
+    a new save waits for the previous (backpressure, bounded memory).
 
-    def __init__(self, directory: str):
+    Write errors are never lost: :meth:`wait` (blocking) raises them, and
+    :meth:`poll` (non-blocking) returns them — the serve engine calls
+    ``poll()`` every scheduler iteration so a failing disk surfaces into
+    the engine loop within one step instead of at the next ``wait()``."""
+
+    def __init__(self, directory: str,
+                 error_cb: Optional[Callable[[BaseException], None]] = None):
         self.directory = directory
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._error_cb = error_cb
 
     def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
         self.wait()
@@ -93,11 +140,30 @@ class AsyncCheckpointer:
         def work():
             try:
                 save(self.directory, step, host_tree, extra)
-            except BaseException as e:  # surfaced on next wait()
+            except BaseException as e:  # surfaced by poll()/wait()
                 self._error = e
+                if self._error_cb is not None:
+                    try:
+                        self._error_cb(e)
+                    except Exception:
+                        pass
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
+
+    def poll(self) -> Optional[BaseException]:
+        """Non-blocking: reap a finished write and return (clearing) its
+        error, if any.  Returns None while a write is still in flight or
+        when the last write succeeded."""
+        if self._thread is not None:
+            if self._thread.is_alive():
+                return None
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            return err
+        return None
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -108,33 +174,126 @@ class AsyncCheckpointer:
             raise err
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _gc_tmp(directory: str) -> List[str]:
+    """Remove orphaned ``step_*.tmp`` directories left by a crash
+    mid-save.  Called from the read paths (``latest_step`` /
+    ``available_steps`` / ``load``) — which run before any writer starts,
+    so an in-flight save's tmp dir is never swept by its own process."""
+    removed = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+            removed.append(d)
+    return removed
+
+
+def available_steps(directory: str) -> List[int]:
+    """Ascending list of retained generation steps (orphaned ``.tmp``
+    dirs are skipped and garbage-collected)."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")]
+        return []
+    _gc_tmp(directory)
+    steps = []
+    for d in os.listdir(directory):
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        try:
+            steps.append(int(d.split("_")[1]))
+        except (IndexError, ValueError):
+            continue
+    return sorted(set(steps))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = available_steps(directory)
     return max(steps) if steps else None
+
+
+def _read_verified(path: str) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Read one generation, verifying schema version and per-leaf CRC32.
+    Raises :class:`CheckpointError` on ANY mismatch — truncated or
+    missing leaf, flipped bit, undecodable or stale-schema manifest."""
+    mpath = os.path.join(path, "manifest.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointError(f"{path}: manifest unreadable "
+                              f"({type(e).__name__}: {e})")
+    fmt = manifest.get("format") if isinstance(manifest, dict) else None
+    if fmt != FORMAT:
+        raise CheckpointError(f"{path}: manifest schema {fmt!r} != "
+                              f"supported {FORMAT} (stale or foreign "
+                              f"checkpoint)")
+    arrays: Dict[str, np.ndarray] = {}
+    for leaf in manifest["leaves"]:
+        name = leaf["name"]
+        fpath = os.path.join(path, name + ".npy")
+        try:
+            a = np.load(fpath)
+        except Exception as e:       # missing, truncated, garbled header
+            raise CheckpointError(f"{path}: leaf {name!r} unreadable "
+                                  f"({type(e).__name__}: {e})")
+        want_crc = leaf.get("crc32")
+        if want_crc is None or _crc(a) != want_crc:
+            raise CheckpointError(f"{path}: leaf {name!r} failed its CRC32 "
+                                  f"check (bit-rot or torn write)")
+        if leaf["dtype"] == "bfloat16":
+            import ml_dtypes
+            a = a.view(ml_dtypes.bfloat16)
+        if tuple(a.shape) != tuple(leaf["shape"]):
+            raise CheckpointError(f"{path}: leaf {name!r} shape "
+                                  f"{tuple(a.shape)} != manifest "
+                                  f"{tuple(leaf['shape'])}")
+        arrays[name] = a
+    return arrays, manifest
+
+
+def load_dict(directory: str, step: Optional[int] = None
+              ) -> Tuple[Dict[str, np.ndarray], int, Dict]:
+    """Load the newest VERIFIED generation as ``{leaf_name: array}``.
+
+    Walks the retained generations newest-first (from ``step`` down, when
+    given): a generation failing verification is warned about
+    (:class:`CheckpointCorruptionWarning`) and the ladder falls back to
+    the previous one — corrupted arrays are never returned silently.
+    Raises :class:`FileNotFoundError` when no generation exists at all,
+    :class:`CheckpointError` when generations exist but none verifies.
+    Returns ``(arrays, step, extra)``."""
+    steps = available_steps(directory)
+    if step is not None:
+        steps = [s for s in steps if s <= step]
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint under {directory}"
+                                + (f" at or below step {step}"
+                                   if step is not None else ""))
+    last_err: Optional[CheckpointError] = None
+    for s in reversed(steps):
+        path = os.path.join(directory, f"step_{s:08d}")
+        try:
+            arrays, manifest = _read_verified(path)
+        except CheckpointError as e:
+            warnings.warn(
+                f"checkpoint generation step_{s:08d} failed verification "
+                f"({e}); falling back to the previous retained generation",
+                CheckpointCorruptionWarning, stacklevel=2)
+            last_err = e
+            continue
+        return arrays, s, manifest.get("extra", {})
+    raise CheckpointError(
+        f"no retained checkpoint generation under {directory} verifies; "
+        f"last error: {last_err}")
 
 
 def load(directory: str, tree_like, step: Optional[int] = None
          ) -> Tuple[Any, int, Dict]:
     """Restore into the structure of ``tree_like`` (shapes may be resharded
-    by the caller afterwards).  Returns (tree, step, extra)."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {directory}")
-    path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    arrays = {}
-    for leaf_info in manifest["leaves"]:
-        n = leaf_info["name"]
-        a = np.load(os.path.join(path, n + ".npy"))
-        if leaf_info["dtype"] == "bfloat16":
-            import ml_dtypes
-            a = a.view(ml_dtypes.bfloat16)
-        arrays[n] = a
+    by the caller afterwards).  Verification + generation fallback as in
+    :func:`load_dict`; a leaf missing from the verified checkpoint or a
+    shape that disagrees with ``tree_like`` is a caller/structure error
+    and still raises (KeyError / ValueError).  Returns
+    ``(tree, step, extra)``."""
+    arrays, step, extra = load_dict(directory, step)
     flat = _flatten_with_paths(tree_like)
     new_leaves = []
     for name, like in flat:
@@ -146,4 +305,4 @@ def load(directory: str, tree_like, step: Optional[int] = None
             raise ValueError(f"leaf {name}: ckpt {a.shape} != expected {want}")
         new_leaves.append(a)
     treedef = jax.tree_util.tree_structure(tree_like)
-    return jax.tree_util.tree_unflatten(treedef, new_leaves), step, manifest["extra"]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step, extra

@@ -364,6 +364,9 @@ def load(path: Optional[str] = None) -> dict:
 
 
 def save(path: Optional[str] = None) -> str:
+    """Write the tuning table atomically: dump to ``<path>.tmp``, fsync,
+    then ``os.replace`` — a crash mid-dump leaves the previous sidecar
+    intact instead of the torn file :func:`load` would have to salvage."""
     import jax
 
     path = path or _LOADED_FROM or default_cache_path()
@@ -375,8 +378,16 @@ def save(path: Optional[str] = None) -> str:
         },
         "table": _TABLE,
     }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
+    tmp = path + ".tmp"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
     return path
 
 

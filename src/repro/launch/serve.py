@@ -46,7 +46,22 @@ def main():
                     help="shard params over the local device mesh and route "
                          "the scoring reductions through the mesh-aware FF "
                          "tier")
+    ap.add_argument("--snapshot-dir", type=str, default=None,
+                    help="--engine crash safety: directory for engine "
+                         "snapshots (atomic CRC32'd checkpoints, "
+                         "keep-last-3) and the write-ahead request journal")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="--engine: snapshot every N decode steps through "
+                         "the async checkpointer (0 = off; requires "
+                         "--snapshot-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="--engine: warm-restart from the newest VERIFIED "
+                         "snapshot generation under --snapshot-dir (corrupt "
+                         "generations fall back warned) and replay the "
+                         "journal, instead of submitting fresh requests")
     args = ap.parse_args()
+    if (args.snapshot_every or args.resume) and not args.snapshot_dir:
+        ap.error("--snapshot-every/--resume require --snapshot-dir")
 
     import contextlib
 
@@ -71,33 +86,53 @@ def main():
               f"scoring reductions mesh-routed")
     if args.engine:
         import numpy as np
-        from repro.serve import Request, ServeEngine
+        from repro.serve import Request, ServeEngine, resume_engine
+        journal = (os.path.join(args.snapshot_dir, "wal.jsonl")
+                   if args.snapshot_dir else None)
         rng = np.random.default_rng(1)
         lo = max(4, args.prompt_len // 2)
         lens = rng.integers(lo, args.prompt_len + 1, size=args.batch)
-        eng = ServeEngine(params, cfg, max_batch=args.batch,
-                          max_ctx=args.prompt_len + args.max_new + 8,
-                          kv_mode=args.kv_mode, guard=args.guard)
-        for i, l in enumerate(lens):
-            eng.submit(Request(
-                uid=i,
-                prompt=rng.integers(1, cfg.vocab_size,
-                                    size=int(l)).astype(np.int32),
-                max_new=args.max_new))
+        if args.resume:
+            t0 = time.perf_counter()
+            eng = resume_engine(params, cfg, args.snapshot_dir,
+                                journal=journal, max_batch=args.batch,
+                                max_ctx=args.prompt_len + args.max_new + 8,
+                                kv_mode=args.kv_mode, guard=args.guard)
+            n_restored = sum(s is not None for s in eng._slots)
+            print(f"[serve] resumed from {args.snapshot_dir}: "
+                  f"{len(eng.results)} completed, {n_restored} running, "
+                  f"{len(eng.queue)} queued/replayed "
+                  f"({time.perf_counter() - t0:.2f}s to warm state)")
+        else:
+            eng = ServeEngine(params, cfg, max_batch=args.batch,
+                              max_ctx=args.prompt_len + args.max_new + 8,
+                              kv_mode=args.kv_mode, guard=args.guard,
+                              journal=journal)
+            for i, l in enumerate(lens):
+                eng.submit(Request(
+                    uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        size=int(l)).astype(np.int32),
+                    max_new=args.max_new))
         t0 = time.perf_counter()
-        results = eng.run()
+        results = eng.run(snapshot_dir=args.snapshot_dir,
+                          snapshot_every=args.snapshot_every or None)
         dt = time.perf_counter() - t0
         n_tok = sum(len(r.tokens) for r in results.values())
-        all_lps = np.concatenate([r.logprobs for r in results.values()])
+        all_lps = np.concatenate(
+            [r.logprobs for r in results.values()]
+            or [np.zeros((0,), np.float32)])
         by_status: dict = {}
         for r in results.values():
             by_status[r.status] = by_status.get(r.status, 0) + 1
         status_str = " ".join(f"{k}={v}" for k, v in sorted(by_status.items()))
+        mean_lp = float(all_lps.mean()) if all_lps.size else float("nan")
         print(f"[serve] {cfg.name} engine({args.kv_mode}, guard={args.guard}):"
               f" {len(results)} requests (prompts {lens.min()}..{lens.max()}),"
               f" {n_tok} tokens in {dt:.1f}s ({n_tok / dt:.1f} tok/s), mean "
-              f"token logprob {all_lps.mean():.4f}, status {status_str}")
-        print(results[0].tokens)
+              f"token logprob {mean_lp:.4f}, status {status_str}")
+        if results:
+            print(results[sorted(results)[0]].tokens)
         return
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len),

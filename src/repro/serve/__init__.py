@@ -22,6 +22,13 @@ The production decode loop around the fused FF flash-attention op
     preempts instead of stalling, and under ``ff.guard`` poisoned rows are
     quarantined and retried on the fast f32 tier — exercised by the
     ``repro.chaos`` fault-injection tier.
+  * Crash safety: ``ServeEngine.snapshot()/restore()`` freeze/rebuild the
+    full engine (KV planes, block table, queued+running requests, results,
+    counters) with token-for-token replay parity; a write-ahead request
+    journal (:class:`~repro.serve.journal.RequestJournal`) makes accepted
+    requests durable before admission; :func:`~repro.serve.engine.
+    resume_engine` warm-restarts from the newest snapshot generation that
+    passes CRC verification, falling back warned on corruption.
 
 Quick use::
 
@@ -32,7 +39,9 @@ Quick use::
 """
 
 from repro.serve.paged_kv import PagedKVCache  # noqa: F401
+from repro.serve.journal import JournalWarning, RequestJournal  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
-    DEGRADED, FAILED, OK, REJECTED, STATUSES, TIMEOUT,
+    DEGRADED, FAILED, OK, REJECTED, SNAPSHOT_SCHEMA, STATUSES, TIMEOUT,
     GenResult, Request, ServeEngine, UnsupportedModelError,
+    resume_engine,
 )

@@ -45,6 +45,38 @@ with a documented terminal status — ``OK`` / ``TIMEOUT`` / ``REJECTED`` /
     token-for-token identical to N=1 (the next input token stays on
     device).
 
+Crash safety (process lifecycle — the tier around a run): the engine is
+**restartable** with exact-replay semantics.
+
+  * :meth:`ServeEngine.snapshot` captures the FULL engine between decode
+    steps — paged KV planes (all three kv_modes, FF limb planes
+    included), block table + free list, queued and running requests with
+    their emitted tokens/scores, completed results, deadlines, and the
+    sync/guard counters — as flat numpy arrays + a JSON meta dict;
+    :meth:`ServeEngine.restore` rebuilds a fresh engine from them, and
+    continuing decodes **token-for-token (FF logprob bit-for-bit)
+    identical** to the uninterrupted run (greedy decoding is
+    deterministic; the snapshot syncs pending steps first so the resumed
+    math starts at a step boundary).  Wall-clock deadlines that expired
+    during downtime retire as the documented ``TIMEOUT`` on restore —
+    never silently revived — while deterministic ``deadline_steps``
+    budgets are unaffected by downtime.
+  * a write-ahead request journal (``journal=`` path,
+    :class:`repro.serve.journal.RequestJournal`): ``submit()`` appends an
+    fsync'd JSONL record BEFORE admission, so accepted requests survive a
+    crash and are re-admitted in original order on restore (replaying to
+    the same tokens); the log truncates on clean retirement and compacts
+    to the unsnapshotted tail whenever a snapshot becomes durable.
+  * snapshots persist through the hardened ``repro.checkpoint`` (atomic
+    tmp+rename, per-leaf CRC32, schema-versioned manifest, keep-last-3
+    fallback ladder); :func:`resume_engine` loads the newest generation
+    that VERIFIES — a torn/bit-flipped/stale snapshot falls back warned
+    to the previous one, bottoming out at a WAL-only cold replay.
+    ``run(snapshot_dir=..., snapshot_every=N)`` snapshots every N decode
+    steps through an :class:`~repro.checkpoint.checkpoint.AsyncCheckpointer`
+    whose write errors surface into the engine loop via ``poll()`` each
+    scheduler iteration (counted in ``guard_stats["snapshot_errors"]``).
+
 Accuracy-critical tier: every emitted token is scored with the FF
 token-logprob (:func:`repro.train.serve_step.token_logprob_ff`) — the
 full vocab-LSE chain stays in float-float, within 2^-40 of the f64
@@ -72,9 +104,14 @@ from repro.models.layers import (apply_rope, decode_attention, mlp_apply,
                                  rms_norm, embed_apply, unembed_apply)
 from repro.train.serve_step import (greedy_generate, make_prefill_step,
                                     token_logprob, token_logprob_ff)
+from repro.serve.journal import RequestJournal
 from repro.serve.paged_kv import PagedKVCache, ff_merge, ff_split
 
 Array = jnp.ndarray
+
+#: engine snapshot schema version (independent of the checkpoint
+#: container's ``FORMAT``); restore() refuses any other version.
+SNAPSHOT_SCHEMA = 1
 
 # -- terminal statuses (every submitted request ends in exactly one) --------
 OK = "OK"                  # ran to eos/max_new on the requested tier
@@ -174,6 +211,13 @@ class ServeEngine:
     construction); ``sync_every`` batches the device->host sync for
     eos-less decode (forced to 1 when ``eos_id`` is set — EOS needs the
     token on the host every step).
+
+    Crash-safety knobs: ``journal`` names an fsync'd JSONL write-ahead
+    log — ``submit()`` records every request durably before admission,
+    and attaching an existing journal replays its unaccounted-for
+    requests in original order (see :meth:`attach_journal` /
+    :func:`resume_engine`); :meth:`snapshot` / :meth:`restore` freeze and
+    rebuild the full engine with token-for-token replay parity.
     """
 
     def __init__(self, params: Any, cfg: ModelConfig, *,
@@ -184,7 +228,8 @@ class ServeEngine:
                  max_queue: Optional[int] = None,
                  reserve: str = "trajectory",
                  guard: Optional[str] = None,
-                 sync_every: int = 1):
+                 sync_every: int = 1,
+                 journal: Optional[str] = None):
         _check_cfg(cfg)
         if reserve not in ("trajectory", "prompt"):
             raise ValueError(f"reserve {reserve!r}: 'trajectory' | 'prompt'")
@@ -221,7 +266,10 @@ class ServeEngine:
         self._admit_seq = 0
         self._auditing = False
         self.guard_stats = {"flagged_rows": 0, "quarantined": 0,
-                            "preempted": 0, "integrity_rebuilds": 0}
+                            "preempted": 0, "integrity_rebuilds": 0,
+                            "snapshot_errors": 0}
+        self.journal: Optional[RequestJournal] = None
+        self._snap_cover: Optional[set] = None  # uids of last async save
         # NOTE: the page planes are deliberately NOT donated — on the CPU
         # backend donation around the layer scan costs a defensive copy
         # per step (measured 2x step latency); the non-donated step keeps
@@ -235,6 +283,8 @@ class ServeEngine:
         self._score_ff = jax.jit(_ff_limbs)
         self._prefill_cache: Dict[int, Any] = {}
         self.decode_steps = 0
+        if journal is not None:
+            self.attach_journal(journal)
 
     # -- jitted paged decode step -----------------------------------------
 
@@ -334,32 +384,53 @@ class ServeEngine:
 
     # -- request lifecycle -------------------------------------------------
 
+    def _set_result(self, res: GenResult) -> None:
+        """The single terminal-result sink: records the result AND, with
+        a journal attached, durably marks the uid retired (truncating the
+        log once every journaled request has a terminal status)."""
+        self.results[res.uid] = res
+        if self.journal is not None:
+            self.journal.retire(res.uid, res.status)
+
     def submit(self, req: Request) -> str:
         """Enqueue a request.  Returns ``"QUEUED"`` or, when the request
         can never be served (bounded queue full, prompt + max_new over
         ``max_ctx``, or a trajectory larger than the whole pool), records
-        a ``REJECTED`` result and returns it — submission never raises."""
+        a ``REJECTED`` result and returns it — submission never raises.
+        With a journal attached the request is journaled (fsync'd)
+        BEFORE admission: an accepted request survives a crash."""
+        if self.journal is not None:
+            self.journal.append(req, step_sub=self.decode_steps)
+        return self._submit(req, t_sub=time.monotonic(),
+                            step_sub=self.decode_steps, bounded=True)
+
+    def _submit(self, req: Request, *, t_sub: float, step_sub: int,
+                bounded: bool) -> str:
+        """Admission checks + enqueue.  ``bounded=False`` (journal
+        replay) skips the queue bound — the request was already accepted
+        once; structural impossibility still rejects."""
         S = int(req.prompt.shape[0])
         total = S + req.max_new
         max_ctx = self.kv.max_pages * self.kv.page_size
         if total > max_ctx:
-            self.results[req.uid] = _empty_result(
+            self._set_result(_empty_result(
                 req, REJECTED, f"prompt+max_new = {total} exceeds "
-                f"max_ctx = {max_ctx}")
+                f"max_ctx = {max_ctx}"))
             return REJECTED
         if self.kv.pages_for(total) > self.kv.num_pages:
-            self.results[req.uid] = _empty_result(
+            self._set_result(_empty_result(
                 req, REJECTED, f"trajectory needs "
                 f"{self.kv.pages_for(total)} pages; pool has "
-                f"{self.kv.num_pages}")
+                f"{self.kv.num_pages}"))
             return REJECTED
-        if self.max_queue is not None and len(self.queue) >= self.max_queue:
-            self.results[req.uid] = _empty_result(
+        if bounded and self.max_queue is not None \
+                and len(self.queue) >= self.max_queue:
+            self._set_result(_empty_result(
                 req, REJECTED, f"wait queue full (max_queue = "
-                f"{self.max_queue})")
+                f"{self.max_queue})"))
             return REJECTED
-        self.queue.append({"req": req, "t_sub": time.monotonic(),
-                           "step_sub": self.decode_steps})
+        self.queue.append({"req": req, "t_sub": t_sub,
+                           "step_sub": step_sub})
         return "QUEUED"
 
     def status(self, uid: int) -> str:
@@ -395,8 +466,8 @@ class ServeEngine:
         kept = []
         for q in self.queue:
             if self._deadline_passed(q["req"], q["t_sub"], q["step_sub"]):
-                self.results[q["req"].uid] = _empty_result(
-                    q["req"], TIMEOUT, "deadline expired while queued")
+                self._set_result(_empty_result(
+                    q["req"], TIMEOUT, "deadline expired while queued"))
             else:
                 kept.append(q)
         self.queue = kept
@@ -463,13 +534,13 @@ class ServeEngine:
     def _retire(self, slot: int, status: str = OK, detail: str = "") -> None:
         state = self._slots[slot]
         req = state["req"]
-        self.results[req.uid] = GenResult(
+        self._set_result(GenResult(
             uid=req.uid,
             tokens=np.asarray(state["tokens"], np.int32),
             logprobs=np.asarray(state["logprobs"], np.float32),
             logprobs_ff=np.asarray(state["logprobs_ff"], np.float32),
             prompt_len=state["prompt_len"],
-            status=status, detail=detail)
+            status=status, detail=detail))
         self.kv.free_slot(slot)
         self._slots[slot] = None
         self._last_tok[slot] = 0
@@ -507,19 +578,19 @@ class ServeEngine:
             toks = np.asarray(toks[0], np.int32)
             lps = np.asarray(lps[0], np.float32)
         except Exception as e:   # a retry must never take the engine down
-            self.results[req.uid] = _empty_result(
+            self._set_result(_empty_result(
                 req, FAILED, f"guard: {why}; fast-tier retry raised "
-                f"{type(e).__name__}: {e}")
+                f"{type(e).__name__}: {e}"))
             return
         if not np.all(np.isfinite(lps)):
-            self.results[req.uid] = _empty_result(
+            self._set_result(_empty_result(
                 req, FAILED, f"guard: {why}; fast-tier retry still "
-                f"non-finite")
+                f"non-finite"))
             return
-        self.results[req.uid] = GenResult(
+        self._set_result(GenResult(
             uid=req.uid, tokens=toks, logprobs=lps,
             logprobs_ff=np.stack([lps, np.zeros_like(lps)], axis=1),
-            prompt_len=state["prompt_len"], status=DEGRADED, detail=detail)
+            prompt_len=state["prompt_len"], status=DEGRADED, detail=detail))
 
     def _audit_paging(self) -> None:
         """Guard-mode integrity audit of the paging metadata: quarantine
@@ -721,24 +792,298 @@ class ServeEngine:
                 # empty engine, head still unschedulable: terminal (pages
                 # leaked or pool undersized) — fail it rather than stall
                 q = self.queue.pop(0)
-                self.results[q["req"].uid] = _empty_result(
+                self._set_result(_empty_result(
                     q["req"], FAILED,
                     "unschedulable: no running rows and the head request "
-                    "cannot be admitted")
+                    "cannot be admitted"))
         elif self._pending:
             self._flush()
         return (any(s is not None for s in self._slots)
                 or bool(self.queue) or bool(self._pending))
 
-    def run(self) -> Dict[int, GenResult]:
+    def run(self, *, snapshot_dir: Optional[str] = None,
+            snapshot_every: Optional[int] = None) -> Dict[int, GenResult]:
         """Drain the queue: admit + decode until everything completes.
         Every submitted uid is present in the result dict with a terminal
         status — under fault injection too (chaos tier, see
-        ``repro.chaos``)."""
+        ``repro.chaos``).
+
+        With ``snapshot_dir`` + ``snapshot_every`` set, the engine
+        snapshots every N decode steps through an async checkpointer
+        (writes overlap decode), ``poll()``-ing it each scheduler
+        iteration so a failing disk surfaces immediately as an
+        :class:`FFGuardWarning` + ``guard_stats["snapshot_errors"]``
+        (serving continues — durability degrades, decode does not).  A
+        final synchronous snapshot lands after the queue drains."""
+        ckpt = None
+        last_snap = self.decode_steps
+        if snapshot_dir is not None and snapshot_every:
+            from repro.checkpoint import checkpoint as ckpt_lib
+            ckpt = ckpt_lib.AsyncCheckpointer(snapshot_dir)
         while self.step():
-            pass
+            if ckpt is not None:
+                self._poll_snapshot(ckpt)
+                if self.decode_steps - last_snap >= snapshot_every:
+                    try:
+                        arrays, meta = self.snapshot()
+                        ckpt.save(self.decode_steps, arrays, extra=meta)
+                        self._snap_cover = set(self.results)
+                    except Exception as e:
+                        self._snapshot_error(e)
+                    last_snap = self.decode_steps
         self._flush()
+        if ckpt is not None:
+            try:
+                ckpt.wait()
+            except BaseException as e:
+                self._snapshot_error(e)
+            self._snap_cover = None
+            try:
+                self.save_snapshot(snapshot_dir)
+            except Exception as e:
+                self._snapshot_error(e)
         return self.results
+
+    # -- crash safety: snapshot / restore / journal ------------------------
+
+    def _fingerprint(self) -> Dict[str, Any]:
+        """The construction-time knobs a snapshot is only valid under.
+        Model params/config are NOT snapshotted (the caller provides the
+        same weights, as with trainer checkpoints) — the policy repr and
+        config name are fingerprinted so a mismatch fails loudly."""
+        return {"kv_mode": self.kv.kv_mode, "max_batch": self.max_batch,
+                "page_size": self.kv.page_size,
+                "max_ctx": self.kv.max_pages * self.kv.page_size,
+                "num_pages": self.kv.num_pages, "eos_id": self.eos_id,
+                "reserve": self.reserve, "sync_every": self.sync_every,
+                "guard": self.guard_mode, "max_queue": self.max_queue,
+                "policy_repr": repr(self.policy),
+                "cfg_name": self.cfg.name}
+
+    def snapshot(self):
+        """Freeze the full engine between decode steps.  Returns
+        ``(arrays, meta)``: a flat ``{name: np.ndarray}`` dict (KV planes
+        via :meth:`PagedKVCache.to_state`, per-slot/queue prompts and
+        emitted tokens/scores, completed results) plus a JSON-able meta
+        dict (schema, wall time, counters, per-request deadlines as
+        elapsed time — portable across processes).  Pending device work
+        is synced first, so the snapshot sits at a step boundary and the
+        resumed decode replays token-for-token."""
+        self._flush()
+        arrays: Dict[str, np.ndarray] = {}
+        for k, v in self.kv.to_state().items():
+            arrays[f"kv.{k}"] = v
+        arrays["last_tok"] = self._last_tok.copy()
+        now_m, now_w = time.monotonic(), time.time()
+        slots_meta: List[Optional[Dict[str, Any]]] = []
+        for i, s in enumerate(self._slots):
+            if s is None:
+                slots_meta.append(None)
+                continue
+            req = s["req"]
+            arrays[f"slot.{i}.prompt"] = np.asarray(req.prompt, np.int32)
+            arrays[f"slot.{i}.tokens"] = np.asarray(s["tokens"], np.int32)
+            arrays[f"slot.{i}.logprobs"] = np.asarray(
+                s["logprobs"], np.float32)
+            arrays[f"slot.{i}.logprobs_ff"] = np.asarray(
+                s["logprobs_ff"], np.float32).reshape(-1, 2)
+            slots_meta.append({
+                "uid": int(req.uid), "max_new": int(req.max_new),
+                "deadline_s": req.deadline_s,
+                "deadline_steps": req.deadline_steps,
+                "prompt_len": int(s["prompt_len"]),
+                "start_step": int(s["start_step"]),
+                "step_sub": int(s["step_sub"]),
+                "admit_seq": int(s["admit_seq"]),
+                "elapsed_s": float(now_m - s["t_sub"])})
+        queue_meta = []
+        for j, q in enumerate(self.queue):
+            req = q["req"]
+            arrays[f"queue.{j}.prompt"] = np.asarray(req.prompt, np.int32)
+            queue_meta.append({
+                "uid": int(req.uid), "max_new": int(req.max_new),
+                "deadline_s": req.deadline_s,
+                "deadline_steps": req.deadline_steps,
+                "step_sub": int(q["step_sub"]),
+                "elapsed_s": float(now_m - q["t_sub"])})
+        results_meta = []
+        for uid, r in self.results.items():
+            arrays[f"result.{uid}.tokens"] = np.asarray(r.tokens, np.int32)
+            arrays[f"result.{uid}.logprobs"] = np.asarray(
+                r.logprobs, np.float32)
+            arrays[f"result.{uid}.logprobs_ff"] = np.asarray(
+                r.logprobs_ff, np.float32).reshape(-1, 2)
+            results_meta.append({"uid": int(uid), "status": r.status,
+                                 "detail": r.detail,
+                                 "prompt_len": int(r.prompt_len)})
+        meta = {"schema": SNAPSHOT_SCHEMA, "wall_time": now_w,
+                "decode_steps": int(self.decode_steps),
+                "admit_seq": int(self._admit_seq),
+                "guard_stats": {k: int(v)
+                                for k, v in self.guard_stats.items()},
+                "engine": self._fingerprint(),
+                "slots": slots_meta, "queue": queue_meta,
+                "results": results_meta}
+        return arrays, meta
+
+    def restore(self, arrays: Dict[str, np.ndarray], meta: Dict[str, Any],
+                *, downtime_s: Optional[float] = None) -> None:
+        """Rebuild a freshly constructed engine from :meth:`snapshot`
+        output.  Validates the snapshot schema and the engine
+        fingerprint (kv_mode, geometry, policy, ...) — a mismatch raises
+        ``ValueError`` rather than decoding subtly-wrong tokens.
+
+        Deadlines: per-request elapsed time was stored relative to the
+        snapshot's wall clock; ``downtime_s`` (default: wall time since
+        the snapshot) is added back, so a wall-clock ``deadline_s`` that
+        expired while the process was down retires as the documented
+        ``TIMEOUT`` immediately — never silently revived.  Deterministic
+        ``deadline_steps`` budgets count decode steps and are unaffected
+        by downtime."""
+        if not isinstance(meta, dict) or meta.get("schema") != \
+                SNAPSHOT_SCHEMA:
+            raise ValueError(
+                f"engine snapshot schema {meta.get('schema')!r} != "
+                f"supported {SNAPSHOT_SCHEMA}")
+        mine, theirs = self._fingerprint(), meta["engine"]
+        for k in sorted(set(mine) | set(theirs)):
+            if mine.get(k) != theirs.get(k):
+                raise ValueError(
+                    f"snapshot/engine mismatch: snapshot has "
+                    f"{k}={theirs.get(k)!r}, this engine has "
+                    f"{mine.get(k)!r}")
+        if (self.queue or self._pending or self.results
+                or any(s is not None for s in self._slots)):
+            raise RuntimeError("restore() requires a freshly constructed "
+                               "engine (no queued/running/completed work)")
+        self.kv = PagedKVCache.from_state(
+            {k[len("kv."):]: np.asarray(v) for k, v in arrays.items()
+             if k.startswith("kv.")})
+        self.decode_steps = int(meta["decode_steps"])
+        self._admit_seq = int(meta["admit_seq"])
+        self.guard_stats.update(meta["guard_stats"])
+        now_m, now_w = time.monotonic(), time.time()
+        if downtime_s is None:
+            downtime_s = max(0.0, now_w - float(meta["wall_time"]))
+        self._last_tok = np.asarray(arrays["last_tok"], np.int32).copy()
+        self._token_dev = jnp.asarray(self._last_tok)
+        for i, sm in enumerate(meta["slots"]):
+            if sm is None:
+                continue
+            req = Request(uid=sm["uid"],
+                          prompt=np.asarray(arrays[f"slot.{i}.prompt"],
+                                            np.int32),
+                          max_new=sm["max_new"],
+                          deadline_s=sm["deadline_s"],
+                          deadline_steps=sm["deadline_steps"])
+            lf = np.asarray(arrays[f"slot.{i}.logprobs_ff"],
+                            np.float32).reshape(-1, 2)
+            self._slots[i] = {
+                "req": req, "prompt_len": sm["prompt_len"],
+                "tokens": [int(t) for t in arrays[f"slot.{i}.tokens"]],
+                "logprobs": [float(x)
+                             for x in arrays[f"slot.{i}.logprobs"]],
+                "logprobs_ff": [(float(h), float(l)) for h, l in lf],
+                "pending": 0, "start_step": sm["start_step"],
+                "t_sub": now_m - (sm["elapsed_s"] + downtime_s),
+                "step_sub": sm["step_sub"], "admit_seq": sm["admit_seq"]}
+        self.queue = []
+        for j, qm in enumerate(meta["queue"]):
+            req = Request(uid=qm["uid"],
+                          prompt=np.asarray(arrays[f"queue.{j}.prompt"],
+                                            np.int32),
+                          max_new=qm["max_new"],
+                          deadline_s=qm["deadline_s"],
+                          deadline_steps=qm["deadline_steps"])
+            self.queue.append({
+                "req": req,
+                "t_sub": now_m - (qm["elapsed_s"] + downtime_s),
+                "step_sub": qm["step_sub"]})
+        for rm in meta["results"]:
+            uid = rm["uid"]
+            self.results[uid] = GenResult(
+                uid=uid,
+                tokens=np.asarray(arrays[f"result.{uid}.tokens"],
+                                  np.int32),
+                logprobs=np.asarray(arrays[f"result.{uid}.logprobs"],
+                                    np.float32),
+                logprobs_ff=np.asarray(
+                    arrays[f"result.{uid}.logprobs_ff"],
+                    np.float32).reshape(-1, 2),
+                prompt_len=rm["prompt_len"], status=rm["status"],
+                detail=rm["detail"])
+        # wall-clock deadlines that expired during downtime retire NOW,
+        # with the tokens produced so far — documented, never revived
+        self._expire_queue()
+        for slot, state in enumerate(self._slots):
+            if state is not None and self._deadline_passed(
+                    state["req"], state["t_sub"], state["step_sub"]):
+                self._retire(slot, TIMEOUT,
+                             "deadline expired across restart downtime "
+                             f"(kept {len(state['tokens'])} tokens)")
+
+    def save_snapshot(self, directory: str) -> str:
+        """Synchronous :meth:`snapshot` -> hardened checkpoint write
+        (atomic tmp+rename, CRC32 manifest, keep-last-3).  The journal is
+        compacted afterwards: the durable snapshot now covers every
+        completed result.  Returns the checkpoint path."""
+        from repro.checkpoint import checkpoint as ckpt_lib
+        arrays, meta = self.snapshot()
+        path = ckpt_lib.save(directory, self.decode_steps, arrays,
+                             extra=meta)
+        if self.journal is not None:
+            self.journal.compact(set(self.results))
+        return path
+
+    def _poll_snapshot(self, ckpt) -> None:
+        """Surface async-write errors into the engine loop (not just the
+        next ``wait()``), and compact the journal once the last enqueued
+        snapshot is durably on disk."""
+        err = ckpt.poll()
+        if err is not None:
+            self._snapshot_error(err)
+            self._snap_cover = None
+        elif self._snap_cover is not None and not (
+                ckpt._thread is not None and ckpt._thread.is_alive()):
+            if self.journal is not None:
+                self.journal.compact(self._snap_cover)
+            self._snap_cover = None
+
+    def _snapshot_error(self, err: BaseException) -> None:
+        self.guard_stats["snapshot_errors"] += 1
+        warnings.warn(
+            f"ServeEngine: snapshot write failed "
+            f"({type(err).__name__}: {err}) — serving continues, restart "
+            f"durability degraded", FFGuardWarning, stacklevel=3)
+
+    def attach_journal(self, path: str) -> RequestJournal:
+        """Attach a write-ahead request journal, replaying any journaled
+        request not accounted for by the current engine state (terminal
+        result, running row, or queued) in original submission order.
+        Greedy decoding is deterministic, so a replayed request produces
+        the same tokens the crashed run would have."""
+        self.journal = RequestJournal(path)
+        now_w = time.time()
+        for rec in self.journal.pending():
+            uid = rec["uid"]
+            if uid in self.results:
+                continue
+            if any(s is not None and s["req"].uid == uid
+                   for s in self._slots):
+                continue
+            if any(q["req"].uid == uid for q in self.queue):
+                continue
+            req = Request(uid=uid,
+                          prompt=np.asarray(rec["prompt"], np.int32),
+                          max_new=rec["max_new"],
+                          deadline_s=rec.get("deadline_s"),
+                          deadline_steps=rec.get("deadline_steps"))
+            elapsed = max(0.0, now_w - rec.get("t_wall", now_w))
+            self._submit(req, t_sub=time.monotonic() - elapsed,
+                         step_sub=min(int(rec.get("step_sub", 0)),
+                                      self.decode_steps),
+                         bounded=False)
+        return self.journal
 
     # -- guard introspection ----------------------------------------------
 
@@ -759,3 +1104,44 @@ class ServeEngine:
             c = guard_probe(plane)
             tot = [t + int(v) for t, v in zip(tot, c)]
         return GuardCounts(*(jnp.int32(t) for t in tot))
+
+
+def resume_engine(params: Any, cfg: ModelConfig, snapshot_dir: str, *,
+                  journal: Optional[str] = None,
+                  downtime_s: Optional[float] = None,
+                  policy: Optional[PrecisionPolicy] = None,
+                  **engine_kwargs) -> ServeEngine:
+    """Warm-restart a :class:`ServeEngine` after a crash.
+
+    Loads the newest snapshot generation that VERIFIES (per-leaf CRC32 +
+    schema version; a corrupted/torn/stale generation falls back warned
+    to the previous retained one — see ``repro.checkpoint``), constructs
+    an engine with the snapshot's own knobs (overridable via
+    ``engine_kwargs``), restores it, then replays the write-ahead
+    ``journal``'s unaccounted-for requests in original order.  When NO
+    snapshot exists at all (crash before the first write, or its tmp dir
+    was garbage-collected) the ladder bottoms out at a cold engine +
+    full WAL replay — still token-for-token the lost run, just without
+    the saved KV work.  Continuing is exact replay: greedy decode is
+    deterministic, so tokens (and FF logprob bits) match the
+    uninterrupted run; wall-clock deadlines that expired during downtime
+    retire as ``TIMEOUT`` on restore.  Raises
+    :class:`repro.checkpoint.checkpoint.CheckpointError` when
+    generations exist but none verifies (corruption is never silent)."""
+    from repro.checkpoint import checkpoint as ckpt_lib
+    try:
+        arrays, _step, meta = ckpt_lib.load_dict(snapshot_dir)
+    except FileNotFoundError:
+        arrays, meta = None, None
+    if meta is not None:
+        knobs = {k: v for k, v in meta["engine"].items()
+                 if k not in ("policy_repr", "cfg_name", "guard")}
+        knobs["guard"] = meta["engine"].get("guard", "off")
+        knobs.update(engine_kwargs)
+        eng = ServeEngine(params, cfg, policy=policy, **knobs)
+        eng.restore(arrays, meta, downtime_s=downtime_s)
+    else:
+        eng = ServeEngine(params, cfg, policy=policy, **engine_kwargs)
+    if journal is not None:
+        eng.attach_journal(journal)
+    return eng

@@ -282,8 +282,33 @@ class PagedKVCache:
 
     @classmethod
     def from_state(cls, state: Dict[str, np.ndarray]) -> "PagedKVCache":
-        L, KV, hd, NP, ps, ms, mc = (int(v) for v in state["geometry"])
+        """Rebuild a cache from :meth:`to_state` output.  The container
+        (``repro.checkpoint``) guarantees bit integrity via CRC32; this
+        validates STRUCTURE — missing keys, a malformed geometry vector,
+        or plane shapes disagreeing with it raise ``ValueError`` instead
+        of constructing a cache that decodes garbage."""
+        for key in ("geometry", "kv_mode", "block_table", "seq_lens",
+                    "free_pages"):
+            if key not in state:
+                raise ValueError(f"KV state missing required key {key!r}")
+        geom = np.asarray(state["geometry"]).ravel()
+        if geom.shape[0] != 7:
+            raise ValueError(f"KV state geometry has {geom.shape[0]} "
+                             f"entries; expected 7")
+        L, KV, hd, NP, ps, ms, mc = (int(v) for v in geom)
         mode = bytes(state["kv_mode"]).rstrip(b"\0").decode()
+        if mode not in _MODE_PLANES:
+            raise ValueError(f"KV state names unknown kv_mode {mode!r}")
+        want_shape = (L, NP, ps, KV, hd)
+        for name in _MODE_PLANES[mode]:
+            key = f"plane_{name}"
+            if key not in state:
+                raise ValueError(f"KV state missing plane {key!r} for "
+                                 f"kv_mode {mode!r}")
+            got = tuple(np.asarray(state[key]).shape)
+            if got != want_shape:
+                raise ValueError(f"KV state plane {key!r} shape {got} != "
+                                 f"geometry {want_shape}")
         self = cls(L, KV, hd, num_pages=NP, page_size=ps, max_seqs=ms,
                    max_ctx=mc, kv_mode=mode)
         self.block_table = np.asarray(state["block_table"], np.int32).copy()

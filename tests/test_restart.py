@@ -1,0 +1,395 @@
+"""Crash-safe serving: checksummed checkpoints, engine snapshot/restore
+with exact-replay parity, the write-ahead request journal, and the
+restart-tier chaos injectors.
+
+Contracts under test (docs/DESIGN_robustness.md §6):
+  * checkpoint generations verify per-leaf CRC32 + manifest schema on
+    load; ANY mismatch (bit-rot, stale schema, torn tmp) falls back
+    WARNED to the previous retained generation — corrupt state never
+    loads silently, and only ``CheckpointError`` when nothing verifies;
+  * ``ServeEngine.snapshot()/restore()`` round-trips the full engine
+    (paged KV planes in all three kv_modes, slots, queue, results,
+    counters) and the resumed run is token-for-token — and FF-logprob
+    bit-for-bit — identical to an uninterrupted engine run;
+  * wall-clock ``deadline_s`` budgets that expire across restart
+    downtime retire as the documented ``TIMEOUT`` (never silently
+    revived); deterministic ``deadline_steps`` budgets are unaffected;
+  * the fsync'd write-ahead journal replays crash-lost submissions in
+    original order and truncates once every journaled uid retires.
+
+Local ``np.random.default_rng`` fixtures (not the session rng): restart
+scenarios are order-sensitive, and a shared stream would couple them to
+unrelated tests.
+"""
+
+import json
+import os
+import time
+import warnings
+
+import numpy as np
+import pytest
+import jax
+
+from repro.chaos.inject import ChaosMonkey
+from repro.checkpoint import (AsyncCheckpointer, CheckpointCorruptionWarning,
+                              CheckpointError, available_steps, latest_step,
+                              load_dict, save)
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serve import (OK, TIMEOUT, Request, ServeEngine, SNAPSHOT_SCHEMA,
+                         resume_engine)
+
+CFG = ModelConfig(name="restart-test", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=256, max_seq_len=64, compute_dtype="float32",
+                  remat=False)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _requests(rng, n=3, max_new=6, **kw):
+    lens = rng.integers(5, 14, size=n)
+    return [Request(uid=i,
+                    prompt=rng.integers(1, CFG.vocab_size,
+                                        size=int(l)).astype(np.int32),
+                    max_new=max_new, **kw)
+            for i, l in enumerate(lens)]
+
+
+def _engine(params, kv_mode="bf16", **kw):
+    return ServeEngine(params, CFG, max_batch=2, page_size=4, max_ctx=32,
+                      kv_mode=kv_mode, **kw)
+
+
+# --------------------------------------------------------------------------
+# hardened checkpoint format: CRC32 + schema + fallback ladder
+# --------------------------------------------------------------------------
+
+def _write_gens(d, steps=(1, 2, 3)):
+    rng = np.random.default_rng(781)
+    trees = {}
+    for s in steps:
+        trees[s] = {"w": rng.standard_normal(16).astype(np.float32),
+                    "ids": np.arange(s * 4, dtype=np.int32)}
+        save(str(d), s, trees[s], extra={"tag": s})
+    return trees
+
+
+def test_checkpoint_roundtrip_with_extra(tmp_path):
+    trees = _write_gens(tmp_path)
+    arrays, step, extra = load_dict(str(tmp_path))
+    assert step == 3 and extra["tag"] == 3
+    for k in trees[3]:
+        np.testing.assert_array_equal(arrays[k], trees[3][k])
+
+
+def test_crc_bit_flip_falls_back_warned(tmp_path):
+    """One flipped payload bit in the newest generation: the CRC verify
+    must catch it and fall back — warned — to the previous generation."""
+    trees = _write_gens(tmp_path)
+    ChaosMonkey(7).flip_checkpoint_bit(str(tmp_path))
+    with pytest.warns(CheckpointCorruptionWarning):
+        arrays, step, extra = load_dict(str(tmp_path))
+    assert step == 2 and extra["tag"] == 2
+    for k in trees[2]:
+        np.testing.assert_array_equal(arrays[k], trees[2][k])
+
+
+def test_stale_manifest_schema_falls_back_warned(tmp_path):
+    _write_gens(tmp_path)
+    ChaosMonkey(8).stale_manifest(str(tmp_path), version=1)
+    with pytest.warns(CheckpointCorruptionWarning):
+        _, step, _ = load_dict(str(tmp_path))
+    assert step == 2
+
+
+def test_torn_tmp_skipped_and_garbage_collected(tmp_path):
+    """A crash mid-save leaves ``step_XXXXXXXX.tmp`` behind; the read
+    path must never surface it as a generation AND must remove it
+    (regression: a .tmp matching the step glob once shadowed real
+    generations)."""
+    _write_gens(tmp_path)
+    torn = ChaosMonkey(9).tear_checkpoint_tmp(str(tmp_path), step=99)
+    assert available_steps(str(tmp_path)) == [1, 2, 3]
+    assert not os.path.exists(torn)
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_every_generation_corrupt_raises(tmp_path):
+    _write_gens(tmp_path)
+    mk = ChaosMonkey(10)
+    for s in (1, 2, 3):
+        mk.flip_checkpoint_bit(str(tmp_path), step=s)
+    with pytest.warns(CheckpointCorruptionWarning):
+        with pytest.raises(CheckpointError):
+            load_dict(str(tmp_path))
+
+
+def test_missing_directory_raises_file_not_found(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_dict(str(tmp_path / "nope"))
+
+
+def test_async_checkpointer_poll_surfaces_write_error(tmp_path):
+    """A failing disk must surface through poll() — not vanish in the
+    writer thread (the engine turns it into an FFGuardWarning)."""
+    ac = AsyncCheckpointer(str(tmp_path))
+    # a plain FILE where save() needs its tmp directory: the writer
+    # thread's rmtree/makedirs fails, not the caller
+    (tmp_path / "step_00000001.tmp").write_text("in the way")
+    ac.save(1, {"a": np.zeros(4, np.float32)})
+    err = None
+    for _ in range(500):
+        err = ac.poll()
+        if err is not None:
+            break
+        time.sleep(0.01)
+    assert err is not None
+
+
+def test_async_checkpointer_writes_verifiable_generation(tmp_path):
+    ac = AsyncCheckpointer(str(tmp_path))
+    tree = {"a": np.arange(6, dtype=np.float32)}
+    ac.save(5, tree, extra={"k": 1})
+    ac.wait()
+    arrays, step, extra = load_dict(str(tmp_path))
+    assert step == 5 and extra["k"] == 1
+    np.testing.assert_array_equal(arrays["a"], tree["a"])
+
+
+# --------------------------------------------------------------------------
+# atomic tuning sidecar save
+# --------------------------------------------------------------------------
+
+def test_tuning_save_atomic(tmp_path):
+    """ff.tuning.save writes via tmp+rename: the target parses as JSON
+    and no ``.tmp`` residue survives."""
+    from repro.ff import tuning
+    path = str(tmp_path / "FF_TUNE.json")
+    out = tuning.save(path)
+    assert out == path and os.path.exists(path)
+    assert not os.path.exists(path + ".tmp")
+    with open(path) as f:
+        payload = json.load(f)
+    assert "meta" in payload and "table" in payload
+
+
+# --------------------------------------------------------------------------
+# engine snapshot/restore: exact-replay parity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_mode", ["bf16", "f32", "ff_bf16"])
+def test_snapshot_restore_exact_replay(params, kv_mode):
+    """Interrupt after 3 decode steps, restore into a fresh engine, run
+    to completion: tokens identical and FF logprob limb pairs
+    bit-for-bit vs an uninterrupted run of the same engine class (greedy
+    decode is deterministic; same process, same compiled programs)."""
+    rng = np.random.default_rng(782)
+    reqs = _requests(rng)
+    base = _engine(params, kv_mode)
+    for r in reqs:
+        base.submit(r)
+    baseline = base.run()
+
+    src = _engine(params, kv_mode)
+    for r in reqs:
+        src.submit(r)
+    for _ in range(3):
+        src.step()
+    arrays, meta = src.snapshot()
+    assert meta["schema"] == SNAPSHOT_SCHEMA
+
+    dst = _engine(params, kv_mode)
+    dst.restore(arrays, meta, downtime_s=0.0)
+    resumed = dst.run()
+
+    assert set(resumed) == set(baseline)
+    for uid in baseline:
+        assert resumed[uid].status == OK, resumed[uid].detail
+        assert np.array_equal(resumed[uid].tokens, baseline[uid].tokens)
+        assert np.array_equal(resumed[uid].logprobs_ff,
+                              baseline[uid].logprobs_ff), \
+            f"uid {uid}: FF limbs not bit-identical after restore"
+
+
+def test_disk_roundtrip_resume_engine(params, tmp_path):
+    """save_snapshot -> resume_engine round-trips through the verified
+    on-disk format (CRC'd leaves + manifest) with the journal attached,
+    and the journal is empty after every request retires cleanly."""
+    rng = np.random.default_rng(783)
+    reqs = _requests(rng)
+    base = _engine(params)
+    for r in reqs:
+        base.submit(r)
+    baseline = base.run()
+
+    wal = str(tmp_path / "wal.jsonl")
+    snap = str(tmp_path / "snap")
+    src = _engine(params, journal=wal)
+    for r in reqs:
+        src.submit(r)
+    for _ in range(3):
+        src.step()
+    src.save_snapshot(snap)
+    del src
+
+    eng = resume_engine(params, CFG, snap, journal=wal, max_batch=2,
+                        page_size=4, max_ctx=32)
+    resumed = eng.run()
+    for uid in baseline:
+        assert resumed[uid].status == OK
+        assert np.array_equal(resumed[uid].tokens, baseline[uid].tokens)
+        assert np.array_equal(resumed[uid].logprobs_ff,
+                              baseline[uid].logprobs_ff)
+    assert os.path.getsize(wal) == 0, "journal must truncate once clean"
+
+
+def test_restore_rejects_schema_and_fingerprint_mismatch(params):
+    rng = np.random.default_rng(784)
+    reqs = _requests(rng, n=2)
+    src = _engine(params)
+    for r in reqs:
+        src.submit(r)
+    src.step()
+    arrays, meta = src.snapshot()
+
+    bad_schema = dict(meta, schema=SNAPSHOT_SCHEMA + 1)
+    with pytest.raises(ValueError, match="schema"):
+        _engine(params).restore(arrays, bad_schema)
+
+    with pytest.raises(ValueError, match="kv_mode"):
+        _engine(params, kv_mode="f32").restore(arrays, meta)
+
+    busy = _engine(params)
+    busy.submit(reqs[0])
+    with pytest.raises(RuntimeError, match="freshly constructed"):
+        busy.restore(arrays, meta)
+
+
+def test_guard_state_survives_restore(params):
+    """guard_stats counters ride the snapshot, and a guard-mode mismatch
+    between snapshot and engine fails loudly instead of silently
+    changing the degradation policy mid-flight."""
+    rng = np.random.default_rng(785)
+    reqs = _requests(rng, n=2)
+    src = _engine(params, guard="check")
+    for r in reqs:
+        src.submit(r)
+    for _ in range(2):
+        src.step()
+    src.guard_stats["flagged_rows"] += 3      # pretend probes fired
+    arrays, meta = src.snapshot()
+
+    with pytest.raises(ValueError, match="guard"):
+        _engine(params, guard="off").restore(arrays, meta)
+
+    dst = _engine(params, guard="check")
+    dst.restore(arrays, meta, downtime_s=0.0)
+    assert dst.guard_stats["flagged_rows"] == 3
+    resumed = dst.run()
+    assert all(r.status == OK for r in resumed.values())
+
+
+# --------------------------------------------------------------------------
+# deadlines across restart downtime
+# --------------------------------------------------------------------------
+
+def test_wall_clock_deadline_expires_across_downtime(params):
+    """A running request whose ``deadline_s`` elapsed while the process
+    was down retires as TIMEOUT at restore — documented, never silently
+    revived — while the deadline-free request completes untouched."""
+    rng = np.random.default_rng(786)
+    prompts = [rng.integers(1, CFG.vocab_size, size=n).astype(np.int32)
+               for n in (6, 9)]
+    reqs = [Request(uid=0, prompt=prompts[0], max_new=6, deadline_s=30.0),
+            Request(uid=1, prompt=prompts[1], max_new=6)]
+    src = _engine(params)
+    for r in reqs:
+        src.submit(r)
+    for _ in range(3):
+        src.step()
+    arrays, meta = src.snapshot()
+
+    dst = _engine(params)
+    dst.restore(arrays, meta, downtime_s=120.0)
+    assert dst.results[0].status == TIMEOUT
+    assert "downtime" in dst.results[0].detail
+    assert 0 < len(dst.results[0].tokens) < 6   # partial output kept
+    res = dst.run()
+    assert res[1].status == OK and len(res[1].tokens) == 6
+
+
+def test_step_deadline_unaffected_by_downtime(params):
+    """Deterministic ``deadline_steps`` budgets count decode steps, not
+    wall clock: a huge downtime must not expire them."""
+    rng = np.random.default_rng(787)
+    reqs = _requests(rng, n=2, deadline_steps=64)
+    src = _engine(params)
+    for r in reqs:
+        src.submit(r)
+    for _ in range(3):
+        src.step()
+    arrays, meta = src.snapshot()
+
+    dst = _engine(params)
+    dst.restore(arrays, meta, downtime_s=3600.0)
+    res = dst.run()
+    assert all(r.status == OK for r in res.values())
+    assert all(len(r.tokens) == 6 for r in res.values())
+
+
+# --------------------------------------------------------------------------
+# write-ahead request journal
+# --------------------------------------------------------------------------
+
+def test_journal_replays_crash_lost_submissions_in_order(params, tmp_path):
+    """Submissions journaled but never snapshotted (crash before any
+    checkpoint) are re-admitted in original order on resume and produce
+    the same tokens as an uninterrupted run."""
+    rng = np.random.default_rng(788)
+    reqs = _requests(rng)
+    base = _engine(params)
+    for r in reqs:
+        base.submit(r)
+    baseline = base.run()
+
+    wal = str(tmp_path / "wal.jsonl")
+    crashed = _engine(params, journal=wal)
+    for r in reqs:
+        crashed.submit(r)
+    del crashed                       # SIGKILL stand-in: no snapshot ever
+
+    eng = resume_engine(params, CFG, str(tmp_path / "no-snap"), journal=wal,
+                        max_batch=2, page_size=4, max_ctx=32)
+    assert [q["req"].uid for q in eng.queue] == [r.uid for r in reqs]
+    resumed = eng.run()
+    for uid in baseline:
+        assert resumed[uid].status == OK
+        assert np.array_equal(resumed[uid].tokens, baseline[uid].tokens)
+    assert os.path.getsize(wal) == 0
+
+
+def test_journal_skips_torn_tail_line(params, tmp_path):
+    """SIGKILL mid-append leaves a torn final JSONL line; recovery must
+    warn, drop it, and replay every complete record."""
+    from repro.serve import JournalWarning
+    rng = np.random.default_rng(789)
+    reqs = _requests(rng, n=2)
+    wal = str(tmp_path / "wal.jsonl")
+    crashed = _engine(params, journal=wal)
+    for r in reqs:
+        crashed.submit(r)
+    del crashed
+    with open(wal, "a") as f:
+        f.write('{"op": "submit", "uid": 9, "prom')     # torn mid-record
+    with pytest.warns(JournalWarning):
+        eng = resume_engine(params, CFG, str(tmp_path / "no-snap"),
+                            journal=wal, max_batch=2, page_size=4,
+                            max_ctx=32)
+    assert [q["req"].uid for q in eng.queue] == [0, 1]
+    res = eng.run()
+    assert sorted(res) == [0, 1]
