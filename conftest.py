@@ -8,6 +8,44 @@ before the first jax import (see ``core/selfcheck.py``; the 2006 GPUs had
 no FMA either, so this is also the faithful hardware model)."""
 import os
 
+import pytest
+
 _flags = os.environ.get("XLA_FLAGS", "")
 if "--xla_cpu_max_isa" not in _flags:
     os.environ["XLA_FLAGS"] = ("--xla_cpu_max_isa=SSE4_2 " + _flags).strip()
+
+# one code path for CI quick sweeps and local full-grid runs: the budget
+# option feeds the ``sweep_budget`` fixture, and ``slow_sweep``-marked
+# exhaustive arms only run when the budget says the caller means it
+FULL_SWEEP_BUDGET = 1 << 22
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sweep-budget", type=int, default=1 << 16,
+        help="points per seam for the repro.verify sweeps "
+             f"(>= {FULL_SWEEP_BUDGET} also enables slow_sweep tests)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow_sweep: exhaustive full-grid sweep arms; skipped unless "
+        f"--sweep-budget >= {FULL_SWEEP_BUDGET}")
+
+
+def pytest_collection_modifyitems(config, items):
+    budget = config.getoption("--sweep-budget")
+    if budget >= FULL_SWEEP_BUDGET:
+        return
+    skip = pytest.mark.skip(
+        reason=f"slow_sweep needs --sweep-budget >= {FULL_SWEEP_BUDGET} "
+               f"(got {budget})")
+    for item in items:
+        if "slow_sweep" in item.keywords:
+            item.add_marker(skip)
+
+
+@pytest.fixture(scope="session")
+def sweep_budget(request):
+    return request.config.getoption("--sweep-budget")

@@ -46,7 +46,8 @@ separate accuracy-tier escape on hardware that has f64 units.
 
 from __future__ import annotations
 
-from typing import Tuple
+import math
+from typing import List, NamedTuple, Tuple
 
 import jax.numpy as jnp
 from jax import lax
@@ -637,3 +638,150 @@ UNARY22 = {
     "tanh": tanh22, "sigmoid": sigmoid22, "erf": erf22, "gelu": gelu22,
     "silu": silu22,
 }
+
+
+# ---------------------------------------------------------------------------
+# seam registry — every reduction-boundary input class, enumerated FROM
+# the live constants above (verify.sweeps walks this; a constant edit
+# moves the swept neighborhoods with it, there is no copy to go stale)
+# ---------------------------------------------------------------------------
+
+class SeamSpec(NamedTuple):
+    """One seam input class of an ``ff.math`` reduction scheme.
+
+    kind
+      ``centers`` — bit-step exhaustive f32 neighborhoods around each
+      listed value (the sweep budget is split across centers);
+      ``window`` — a closed interval: edges bit-stepped exhaustively,
+      interior log-covered with the remaining budget;
+      ``points`` — an explicit, exact value set (specials).
+    check
+      ``contract`` — |rel err| <= bound vs the beyond-f64 oracle;
+      ``identity`` — output limbs bitwise-equal the input limbs;
+      ``special``  — oracle special handling (nan/inf/limit classes).
+    """
+
+    name: str
+    fn: str          # UNARY22 key
+    kind: str        # centers | window | points
+    data: tuple
+    bound: float     # relative bound for check == "contract"
+    check: str
+    note: str
+
+
+def _exp_k_boundaries(half: bool) -> tuple:
+    """x where round(x/ln2) changes (half) or r crosses zero (integer):
+    the Cody–Waite k-grid of :func:`_exp_reduce`, from the live clip
+    window so the center list tracks any retuning."""
+    ln2 = _EXP_L1 + _EXP_L2  # the split's own value of ln2
+    kmin = int(math.ceil(_EXP_CLIP_LO / ln2))
+    kmax = int(math.floor(_EXP_CLIP_HI / ln2))
+    off = 0.5 if half else 0.0
+    return tuple((k + off) * ln2 for k in range(kmin, kmax + 1))
+
+
+def _tanh_expm1_boundaries() -> tuple:
+    """|x| where the large-branch expm1(-2|x|) reduction integer flips:
+    |x| = (j - 0.5) ln2 / 2 up to deep saturation; both signs (odd)."""
+    ln2 = _EXP_L1 + _EXP_L2
+    xs = []
+    j = 1
+    while (j - 0.5) * ln2 / 2.0 < 19.0:           # past saturation ~17-18
+        x = (j - 0.5) * ln2 / 2.0
+        if x > _TANH_SMALL:                        # inside the large branch
+            xs += [x, -x]
+        j += 1
+    return tuple(xs)
+
+
+def reduction_seams() -> List[SeamSpec]:
+    """The exhaustive-sweep registry for exp / log / tanh (the three
+    hardest reduction schemes; the rest of ``UNARY22`` is covered by the
+    sampled tier).  ``tests/test_verify_sweep.py`` asserts completeness
+    of this list against the documented seam classes."""
+    ln2 = _EXP_L1 + _EXP_L2
+    lo_flush = math.log(2.0 ** -82)                # exp(x) < 2^-82: lo flushes
+    subn_onset = math.log(2.0 ** -126)             # exp(x) goes subnormal
+    total_flush = math.log(2.0 ** -149)            # exp(x) rounds to zero
+    nat_ovf = math.log((2.0 - 2.0 ** -24) * 2.0 ** 127)   # hi-limb overflow
+    seams: List[SeamSpec] = [
+        # ---- exp -----------------------------------------------------
+        SeamSpec("exp/cody_waite_half_k", "exp", "centers",
+                 _exp_k_boundaries(half=True), 2.0 ** -42, "contract",
+                 "round(x/ln2) flips: largest |r| and the k<->k+1 "
+                 "reconstruction seam"),
+        SeamSpec("exp/cody_waite_integer_k", "exp", "centers",
+                 _exp_k_boundaries(half=False), 2.0 ** -42, "contract",
+                 "r crosses zero: maximal cancellation in the reduction"),
+        SeamSpec("exp/overflow_window", "exp", "window",
+                 (88.5, float(_EXP_CLIP_HI) + 0.5), 2.0 ** -42, "contract",
+                 f"natural hi-limb overflow at ~{nat_ovf:.4f} through the "
+                 "clip edge: saturation must be a clean (inf, 0)"),
+        SeamSpec("exp/underflow_window", "exp", "window",
+                 (float(_EXP_CLIP_LO) - 0.5, subn_onset + 0.5),
+                 2.0 ** -42, "contract",
+                 f"subnormal onset {subn_onset:.4f}, total flush "
+                 f"{total_flush:.4f}, clip edge {_EXP_CLIP_LO}"),
+        SeamSpec("exp/lo_flush_band", "exp", "window",
+                 (lo_flush - 0.5, lo_flush + 0.5), 2.0 ** -42, "contract",
+                 "exp(x) < 2^-82: the lo limb itself flushes — bound "
+                 "degrades to f32 (2^-23) there by the documented model"),
+        SeamSpec("exp/tiny_arguments", "exp", "window",
+                 (-(2.0 ** -40), 2.0 ** -40), 2.0 ** -42, "contract",
+                 "k = 0, r = x: exp ~= 1 + x, poly tail below FF noise"),
+        SeamSpec("exp/subnormal_arguments", "exp", "points",
+                 (2.0 ** -130, -(2.0 ** -130), 2.0 ** -149, -(2.0 ** -149),
+                  1e-40, -1e-40), 2.0 ** -42, "contract",
+                 "subnormal x: exp(x) == 1 at FF resolution"),
+        SeamSpec("exp/specials", "exp", "points",
+                 (0.0, -0.0, math.inf, -math.inf, math.nan,
+                  3.4028235e38, -3.4028235e38), 2.0 ** -42, "special",
+                 "IEEE specials and the f32 extremes"),
+        # ---- log -----------------------------------------------------
+        SeamSpec("log/binade_boundaries", "log", "centers",
+                 tuple(2.0 ** e for e in range(-126, 128, 2)),
+                 2.0 ** -42, "contract",
+                 "frexp exponent surgery flips e at every power of two"),
+        SeamSpec("log/sqrt2_fold", "log", "centers",
+                 tuple(1.4142135 * 2.0 ** e
+                       for e in (-126, -64, -16, -2, -1, 0, 1, 2, 16, 64,
+                                 126)),
+                 2.0 ** -42, "contract",
+                 "the m > 1.4142135 fold halves m and bumps e: the "
+                 "mantissa-range seam, sampled across binades"),
+        SeamSpec("log/near_one", "log", "window",
+                 (1.0 - 2.0 ** -8, 1.0 + 2.0 ** -8), 2.0 ** -42, "contract",
+                 "log(1+eps) cancellation: atanh kernel at its smallest s"),
+        SeamSpec("log/specials", "log", "points",
+                 (0.0, -0.0, math.inf, -math.inf, math.nan, -1.0,
+                  3.4028235e38), 2.0 ** -42, "special",
+                 "+-0 -> -inf, x < 0 -> nan, inf -> inf"),
+        # ---- tanh ----------------------------------------------------
+        SeamSpec("tanh/small_large_seam", "tanh", "centers",
+                 (float(_TANH_SMALL), -float(_TANH_SMALL)),
+                 2.0 ** -41, "contract",
+                 "Maclaurin vs expm1-rational handoff at |x| = 0.35"),
+        SeamSpec("tanh/expm1_k_boundaries", "tanh", "centers",
+                 _tanh_expm1_boundaries(), 2.0 ** -41, "contract",
+                 "the large branch's own Cody–Waite grid at y = -2|x|"),
+        SeamSpec("tanh/saturation_window", "tanh", "window",
+                 (16.5, 18.5), 2.0 ** -41, "contract",
+                 "t -> -1: tanh == +-1 at FF resolution beyond ~17.3"),
+        SeamSpec("tanh/deep_saturation", "tanh", "points",
+                 (20.0, -20.0, 50.0, -50.0, 88.0, -88.0, 1e10, -1e10,
+                  1e38, -1e38), 2.0 ** -41, "contract",
+                 "deep saturation must stay exactly +-1, not drift"),
+        SeamSpec("tanh/identity_band", "tanh", "window",
+                 (2.0 ** -60, 2.0 ** -45), 0.0, "identity",
+                 "|x| < 2^-45: output limbs must be the input limbs, "
+                 "bitwise (keeps signed zero and the EFT underflow domain)"),
+        SeamSpec("tanh/identity_edge", "tanh", "centers",
+                 (2.0 ** -45, -(2.0 ** -45)), 2.0 ** -41, "contract",
+                 "both sides of the identity-band edge meet the bound"),
+        SeamSpec("tanh/specials", "tanh", "points",
+                 (0.0, -0.0, math.inf, -math.inf, math.nan),
+                 2.0 ** -41, "special",
+                 "+-inf -> +-1 exactly, nan propagates, signed zero kept"),
+    ]
+    return seams

@@ -1,0 +1,161 @@
+"""``python -m repro.verify`` — run every verification tier, emit a report.
+
+Exit status is nonzero only on a genuine contract failure (an SMT
+counterexample, a sweep violation, a hazard-mitigation regression, or a
+failed trace pin).  Missing optional dependencies (z3) downgrade the
+affected tier to ``skipped`` — the CI ``verify`` job exercises that path
+explicitly to prove skip-not-fail.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+
+
+def _trace_pins() -> dict:
+    """The always-on bitwise pin: the symbolically-traced formulas come
+    from the live code (NumpyBackend vs real jnp execution)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.verify import symtrace
+
+    rng = np.random.default_rng(20260809)
+    n = 512
+    a = (rng.standard_normal(n) * np.exp2(rng.integers(-20, 20, n))
+         ).astype(np.float32)
+    b = (rng.standard_normal(n) * np.exp2(rng.integers(-20, 20, n))
+         ).astype(np.float32)
+    al = (a * np.float32(2 ** -25)).astype(np.float32)
+    bl = (b * np.float32(2 ** -25)).astype(np.float32)
+    be = symtrace.NumpyBackend()
+    out = {}
+    for ns in symtrace.NAMESPACES:
+        fns = symtrace.eft_fns(ns)
+        for name, fn in fns.items():
+            if name == "sqrt22":
+                args = [np.abs(a) + np.float32(0.5), al]
+            elif name in ("two_sum", "fast_two_sum", "two_prod"):
+                if name == "fast_two_sum":
+                    hi = np.where(np.abs(a) >= np.abs(b), a, b)
+                    lo = np.where(np.abs(a) >= np.abs(b), b, a)
+                    args = [hi, lo]
+                else:
+                    args = [a, b]
+            else:
+                args = [a, al, b, bl]
+            traced = symtrace.run_traced(ns, name, be, args)
+            live = fn(*[jnp.asarray(x) for x in args])
+            ok = all(
+                bool(np.all((np.asarray(t, np.float32).view(np.uint32)
+                             == np.asarray(l, np.float32).view(np.uint32))
+                            | (np.isnan(np.asarray(t, np.float32))
+                               & np.isnan(np.asarray(l, np.float32)))))
+                for t, l in zip(traced, live))
+            out[f"{ns}.{name}"] = "ok" if ok else "MISMATCH"
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.verify")
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    ap.add_argument("--budget", type=int, default=1 << 16,
+                    help="sweep points per seam (default 2^16)")
+    ap.add_argument("--smt-timeout-ms", type=int, default=None,
+                    help="per-obligation solver timeout "
+                         "(default: VERIFY_SMT_TIMEOUT_MS or 600000)")
+    ap.add_argument("--heavy", action="store_true",
+                    help="include the heavy SMT obligations (div/sqrt)")
+    ap.add_argument("--skip-smt", action="store_true")
+    ap.add_argument("--skip-sweeps", action="store_true")
+    ap.add_argument("--skip-hazards", action="store_true")
+    args = ap.parse_args(argv)
+
+    import os
+
+    import jax
+    import numpy as np
+
+    from repro.verify import contracts, hazards, oracle, smt, sweeps
+
+    report = {
+        "env": {
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "numpy": np.__version__,
+            "backend": jax.default_backend(),
+            "z3": smt.have_z3(),
+        },
+        "contracts": {c.name: c.status for c in contracts.CONTRACTS},
+    }
+    failures = []
+
+    try:
+        report["oracle_self_check"] = oracle.self_check()
+        if report["oracle_self_check"]["certified_bits"] < 60:
+            failures.append("oracle certified below 60 bits")
+    except ImportError as e:
+        report["oracle_self_check"] = {"skipped": str(e)}
+
+    report["trace_pins"] = _trace_pins()
+    bad_pins = [k for k, v in report["trace_pins"].items() if v != "ok"]
+    if bad_pins:
+        failures.append(f"trace pins mismatch: {bad_pins}")
+
+    if not args.skip_smt:
+        timeout = args.smt_timeout_ms or int(
+            os.environ.get("VERIFY_SMT_TIMEOUT_MS", smt.DEFAULT_TIMEOUT_MS))
+        results = smt.prove_all(timeout, include_heavy=args.heavy)
+        report["smt"] = [
+            {"obligation": r.name, "namespace": r.namespace,
+             "status": r.status, "seconds": round(r.seconds, 2),
+             "detail": r.detail}
+            for r in results]
+        bad = [r for r in results if r.status == "counterexample"]
+        if bad:
+            failures.append(
+                f"SMT counterexamples: {[r.name for r in bad]}")
+
+    if not args.skip_hazards:
+        reports = hazards.run_corpus()
+        report["hazards"] = [dataclass_dict(r) for r in reports]
+        bad = [r for r in reports if not r.ok]
+        if bad:
+            failures.append(
+                f"hazard mitigations regressed: "
+                f"{[(r.hazard, r.mode) for r in bad]}")
+
+    if not args.skip_sweeps:
+        results = sweeps.run_all(budget=args.budget)
+        report["sweeps"] = [dataclass_dict(r) for r in results]
+        bad = [r for r in results if not r.ok]
+        if bad:
+            failures.append(
+                f"sweep violations: {[(r.seam, r.violations) for r in bad]}")
+
+    report["failures"] = failures
+    report["ok"] = not failures
+
+    text = json.dumps(report, indent=2, default=str)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+    if failures:
+        print(f"\nFAILED: {failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def dataclass_dict(obj) -> dict:
+    import dataclasses
+    d = dataclasses.asdict(obj)
+    return {k: (v if not isinstance(v, float) or v == v else "nan")
+            for k, v in d.items()}
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

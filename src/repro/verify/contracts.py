@@ -1,0 +1,192 @@
+"""The proof-status registry: every machine-checked contract, one place.
+
+``docs/VERIFY.md`` embeds :func:`render_table` output between marker
+comments and ``tests/test_docs.py`` re-renders and compares — the doc
+cannot drift from this registry.  The same test gates the proof-status
+column of ``docs/NUMERICS.md`` against :data:`NUMERICS_STATUS`.
+
+Status vocabulary (weakest claim wins when tiers disagree):
+
+* ``proved``  — an SMT obligation over all binary32 inputs in the stated
+  domain discharges UNSAT (:mod:`repro.verify.smt`); the traced formula
+  comes from the live code path, and tier-1 pins that path bitwise even
+  when z3 is absent.
+* ``swept``   — every documented seam/boundary input class is enumerated
+  exhaustively on the f32 grid and adjudicated against the beyond-f64
+  oracle (:mod:`repro.verify.sweeps`).
+* ``sampled`` — randomized/property testing only (hypothesis + fixed
+  rng grids in tier-1).
+* ``pinned``  — an executable regression pin of a known-hazard behavior
+  (:mod:`repro.verify.hazards`), not a correctness bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+BEGIN = "<!-- BEGIN VERIFY CONTRACTS (generated: repro.verify.contracts) -->"
+END = "<!-- END VERIFY CONTRACTS -->"
+
+STATUSES = ("proved", "swept", "sampled", "pinned")
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    name: str          # e.g. "two_sum.residual_exact"
+    claim: str         # one-line statement of the obligation
+    domain: str        # input domain the claim holds on
+    status: str        # proved | swept | sampled | pinned
+    checked_by: str    # module/obligation/seam keys discharging it
+
+    def __post_init__(self):
+        assert self.status in STATUSES, self.status
+
+
+def _c(name, claim, domain, status, checked_by):
+    return Contract(name, claim, domain, status, checked_by)
+
+
+CONTRACTS: List[Contract] = [
+    # --- EFT exactness (SMT tier; both namespaces) ---------------------
+    _c("two_sum.residual_exact",
+       "s + r == a + b exactly (Knuth 6-flop TwoSum)",
+       "all intermediates normal-or-zero (paper §6.1)",
+       "proved", "smt:two_sum_residual_exact[kernels|core]"),
+    _c("fast_two_sum.residual_exact",
+       "s + r == a + b exactly (Dekker 3-flop, |a| >= |b|)",
+       "|a| >= |b| or a == 0; intermediates normal-or-zero",
+       "proved", "smt:fast_two_sum_residual_exact[kernels|core]"),
+    _c("two_prod.residual_exact",
+       "x + y == a * b exactly (Dekker split product)",
+       "|a|,|b| in [2^-100, 2^115] or zero; intermediates normal-or-zero",
+       "proved", "smt:two_prod_residual_exact[kernels|core]"),
+    # --- FF algorithm error bounds (SMT tier) --------------------------
+    _c("add22.sloppy_thm5_bound",
+       "delta <= max(2^-24 |al+bl|, 2^-44 |a+b|)  (paper Thm 5)",
+       "normalized pairs, hi WLOG in [1,2) by scale invariance",
+       "proved", "smt:add22_sloppy_thm5_bound[kernels|core]"),
+    _c("add22_accurate.rel_bound",
+       "relative error <= 2^-44 unconditionally",
+       "normalized pairs, hi WLOG in [1,2)",
+       "proved", "smt:add22_accurate_rel_bound_2pow44[core]"),
+    _c("mul22.rel_bound",
+       "relative error <= 2^-44  (paper Thm 6 class)",
+       "normalized pairs, hi WLOG in [1,2)",
+       "proved", "smt:mul22_rel_bound_2pow44[kernels|core]"),
+    _c("div22.rel_bound",
+       "relative error <= 2^-43 class",
+       "normalized pairs, hi WLOG in [1,2)",
+       "proved", "smt:div22_rel_bound_2pow43[kernels|core] (heavy tier)"),
+    _c("sqrt22.rel_bound",
+       "relative error <= 2^-44 class",
+       "normalized pair, hi WLOG in [1,4) (even-binade scaling)",
+       "proved", "smt:sqrt22_rel_bound_2pow44[kernels|core] (heavy tier)"),
+    _c("eft.kernels_equals_core",
+       "barrier-free kernel limbs == barrier-carrying core limbs, bitwise",
+       "intermediates normal-or-zero",
+       "proved", "smt:*_kernels_equals_core[both]"),
+    # --- ff.math seam coverage (sweep tier; beyond-f64 oracle) ---------
+    _c("ffmath.exp.seams",
+       "|rel err| <= 2^-42 on every Cody-Waite k-boundary, clip edge, "
+       "lo-flush band, identity band, tiny/subnormal class, and specials",
+       "exhaustive f32 neighborhoods per seam (oracle >= 60 bits)",
+       "swept", "sweeps:exp/* (registry: ffmath.reduction_seams)"),
+    _c("ffmath.log.seams",
+       "|rel err| <= 2^-42 on binade boundaries, sqrt(2)-fold points, "
+       "near-one cancellation band, and specials",
+       "exhaustive f32 neighborhoods per seam (oracle >= 60 bits)",
+       "swept", "sweeps:log/*"),
+    _c("ffmath.tanh.seams",
+       "|rel err| <= 2^-41 on the 0.35 small/large seam, expm1 "
+       "k-boundaries, saturation window, identity band, and specials",
+       "exhaustive f32 neighborhoods per seam (oracle >= 60 bits)",
+       "swept", "sweeps:tanh/*"),
+    _c("ffmath.other.bounds",
+       "documented full-domain bounds for expm1/log1p/sigmoid/erf/"
+       "gelu/silu",
+       "fixed rng grids + hypothesis adversarial-limb strategies",
+       "sampled", "tests:test_ff_math.py, test_property_ff.py"),
+    # --- executable hazard pins ----------------------------------------
+    _c("hazard.constant_fold_two_sum",
+       "two_sum(literal, x) residual constant-folds to zero under jit; "
+       "the (x, literal) orientation survives",
+       "per backend, jit and eager",
+       "pinned", "hazards:constant_fold_two_sum"),
+    _c("hazard.x64_literal_canonicalization",
+       "python-float literals inside trace-scoped enable_x64 canonicalize "
+       "to f32; traced-value-derived constants survive (f64 impl <= 2^-47)",
+       "per backend, jit and eager",
+       "pinned", "hazards:x64_literal_canonicalization"),
+    _c("guard.subnormal_lo_census",
+       "guard_probe's bit-level denormal-lo counter agrees with the "
+       "oracle's DAZ-immune classification",
+       "bit-constructed subnormal/normal/zero grid",
+       "pinned", "tests:test_verify_oracle.py::test_guard_census_matches_oracle"),
+]
+
+# NUMERICS.md contract-table rows (matched by the literal first-cell
+# token) must carry exactly this status in their proof-status column;
+# tests/test_docs.py enforces the pairing line by line.
+NUMERICS_STATUS: Dict[str, str] = {
+    "`ff.two_sum(a, b)`": "proved",
+    "`ff.two_prod(a, b)`": "proved",
+    "`ff.add` (`jnp`/`pallas`, sloppy Add22)": "proved",
+    "`ff.add` (`accurate`)": "proved",
+    "`ff.mul` (Mul22)": "proved",
+    "`ff.div`": "proved",
+    "`ff.sqrt`": "proved",
+    "`ff.exp`": "swept",
+    "`ff.log`": "swept",
+    "`ff.tanh`": "swept",
+    "`ff.expm1`": "sampled",
+    "`ff.log1p`": "sampled",
+    "`ff.sigmoid`": "sampled",
+    "`ff.erf`": "sampled",
+    "`ff.gelu`": "sampled",
+    "`ff.silu`": "sampled",
+    "`ff.pow`": "sampled",
+}
+
+
+def render_table() -> str:
+    """The markdown table embedded in docs/VERIFY.md (between markers)."""
+    lines = [
+        "| contract | claim | domain | status | checked by |",
+        "|---|---|---|---|---|",
+    ]
+    for c in CONTRACTS:
+        lines.append(
+            f"| `{c.name}` | {c.claim} | {c.domain} | **{c.status}** "
+            f"| `{c.checked_by}` |")
+    return "\n".join(lines)
+
+
+def extract_table(doc_text: str) -> str:
+    m = re.search(re.escape(BEGIN) + r"\n(.*?)\n" + re.escape(END),
+                  doc_text, re.S)
+    if not m:
+        raise ValueError("VERIFY contract markers not found in document")
+    return m.group(1).strip()
+
+
+def check_doc(doc_text: str) -> Tuple[bool, str]:
+    """True iff the doc's embedded table matches the registry exactly."""
+    try:
+        got = extract_table(doc_text)
+    except ValueError as e:
+        return False, str(e)
+    want = render_table()
+    if got != want:
+        return False, ("embedded table is stale — regenerate with "
+                       "python -c \"from repro.verify.contracts import "
+                       "render_table; print(render_table())\"")
+    return True, "ok"
+
+
+def summary() -> Dict[str, int]:
+    out = {s: 0 for s in STATUSES}
+    for c in CONTRACTS:
+        out[c.status] += 1
+    return out

@@ -1,0 +1,316 @@
+"""Beyond-f64 oracle: exact f32 bit semantics + extended-precision math.
+
+Two layers, both pure Python (no jax — the oracle must not share a
+single rounding path with the code under test):
+
+  * **Exact integer layer** — ``fractions.Fraction`` values of f32/f64
+    bit patterns, correct round-to-nearest-even ``round_f32`` (scale-and
+    -round on integer significands: NO double rounding through f64), and
+    bit-level classification (zero/subnormal/normal/inf/nan) that a DAZ
+    backend cannot flush, because it never compares floats.  The EFT
+    residual ground truths (``two_sum``/``two_prod`` residuals are
+    *definitionally* exact rationals) live here.
+  * **mpmath layer** — elementary-function references at >= 60 bits
+    (default 120) with exactly-converted f32 inputs, for contracts the
+    f64 oracle cannot resolve: the 2^-47-class claims sit only ~6 bits
+    above f64's own 2^-52 noise floor.
+
+The existing f64 oracle (numpy) remains the fast *screen* in
+``repro.verify.sweeps``; every decision within ``SCREEN_MARGIN`` of a
+contract boundary is re-adjudicated here.
+"""
+
+from __future__ import annotations
+
+import math
+from fractions import Fraction
+from typing import Iterable, Tuple
+
+import numpy as np
+
+# f32 format constants (paper §4: binary32, p = 24)
+F32_PREC = 24
+F32_EMAX = 127
+F32_EMIN = -126                       # minimum normal exponent
+MIN_NORMAL = Fraction(2) ** -126
+MIN_SUBNORMAL = Fraction(2) ** -149
+MAX_FINITE = (Fraction(2) - Fraction(2) ** -23) * Fraction(2) ** 127
+# IEEE RN overflow threshold: |x| >= 2^128 - 2^103 rounds to inf
+OVERFLOW_THRESHOLD = Fraction(2) ** 128 - Fraction(2) ** 103
+
+DEFAULT_PREC = 120                    # bits; contract requires >= 60
+
+
+def _mp(prec_bits: int):
+    """mpmath with a local precision context (lazy import so the package
+    imports even where mpmath is missing; callers get a clear error)."""
+    try:
+        import mpmath
+    except ImportError as e:                      # pragma: no cover
+        raise ImportError(
+            "repro.verify.oracle needs mpmath for extended-precision "
+            "references (the exact integer layer works without it)") from e
+    return mpmath
+
+
+# ---------------------------------------------------------------------------
+# exact integer layer
+# ---------------------------------------------------------------------------
+
+def f32_bits(x) -> int:
+    """The raw bit pattern of a binary32 value, via numpy view (never a
+    float compare — subnormal limbs survive DAZ hardware)."""
+    return int(np.float32(x).view(np.uint32))
+
+
+def bits_f32(bits: int) -> np.float32:
+    return np.uint32(bits).view(np.float32)
+
+
+def classify_bits(bits: int) -> str:
+    """'zero' | 'subnormal' | 'normal' | 'inf' | 'nan' from the bit
+    pattern alone."""
+    e = (bits >> 23) & 0xFF
+    m = bits & 0x7FFFFF
+    if e == 0xFF:
+        return "nan" if m else "inf"
+    if e == 0:
+        return "subnormal" if m else "zero"
+    return "normal"
+
+
+def classify_f32(x) -> str:
+    return classify_bits(f32_bits(x))
+
+
+def exact(x) -> Fraction:
+    """The exact rational value of a finite float (f32 or f64 — both are
+    dyadic rationals; Fraction(float) is exact by construction)."""
+    xf = float(x)
+    if not math.isfinite(xf):
+        raise ValueError(f"exact() is defined for finite values, got {x!r}")
+    return Fraction(xf)
+
+
+def ff_exact(hi, lo) -> Fraction:
+    """The exact value represented by an FF pair (unevaluated hi + lo)."""
+    return exact(hi) + exact(lo)
+
+
+def ulp32(x) -> Fraction:
+    """ulp of the binade containing finite nonzero x (2^(e - 23); the
+    subnormal range shares 2^-149)."""
+    fx = abs(float(x))
+    if fx == 0.0 or fx < float(MIN_NORMAL):
+        return MIN_SUBNORMAL
+    e = math.floor(math.log2(fx))
+    # guard the binade edge: log2 can land one off at powers of two
+    if Fraction(2) ** e > Fraction(fx):
+        e -= 1
+    elif Fraction(2) ** (e + 1) <= Fraction(fx):
+        e += 1
+    return Fraction(2) ** (e - 23)
+
+
+def round_f32(value: Fraction) -> float:
+    """Correct IEEE-754 binary32 round-to-nearest-even of an exact
+    rational, on integer significands — ``np.float32(float(v))`` would
+    double-round through binary64 and is wrong on (rare) f64 midpoints.
+
+    Returns a python float (exactly representing the f32 result, or
+    +-inf on overflow)."""
+    if value == 0:
+        return 0.0
+    sign = -1.0 if value < 0 else 1.0
+    v = abs(value)
+    # exponent e with 2^e <= v < 2^(e+1)
+    e = v.numerator.bit_length() - v.denominator.bit_length()
+    if Fraction(2) ** e > v:
+        e -= 1
+    elif Fraction(2) ** (e + 1) <= v:
+        e += 1
+    # quantum: normal binades carry 2^(e-23); below 2^-126 it is fixed
+    q_exp = max(e - 23, -149)
+    scaled = v / (Fraction(2) ** q_exp)          # significand in quanta
+    n, r = divmod(scaled.numerator, scaled.denominator)
+    half = Fraction(r, scaled.denominator)       # fractional part in [0,1)
+    if half > Fraction(1, 2) or (half == Fraction(1, 2) and n % 2 == 1):
+        n += 1
+    result = Fraction(n) * Fraction(2) ** q_exp
+    if result >= OVERFLOW_THRESHOLD:
+        return math.inf * sign
+    return sign * float(result)                  # dyadic, exact in f64
+
+
+def two_sum_residual(a, b) -> Fraction:
+    """The exact TwoSum residual a + b - fl32(a + b) (Møller/Knuth: it is
+    itself f32-representable, which the SMT tier proves; here it is just
+    exact rational arithmetic)."""
+    s = round_f32(exact(a) + exact(b))
+    if not math.isfinite(s):
+        raise OverflowError("two_sum residual undefined at overflow")
+    return exact(a) + exact(b) - Fraction(s)
+
+
+def two_prod_residual(a, b) -> Fraction:
+    """The exact TwoProd residual a * b - fl32(a * b)."""
+    p = round_f32(exact(a) * exact(b))
+    if not math.isfinite(p):
+        raise OverflowError("two_prod residual undefined at overflow")
+    return exact(a) * exact(b) - Fraction(p)
+
+
+def nearest_ff(value: Fraction) -> Tuple[float, float]:
+    """The FF pair (hi, lo) nearest an exact value: hi = fl32(v),
+    lo = fl32(v - hi) — the representability floor every FF contract is
+    measured against."""
+    hi = round_f32(value)
+    if not math.isfinite(hi):
+        return hi, 0.0
+    lo = round_f32(value - Fraction(hi))
+    return hi, lo
+
+
+# ---------------------------------------------------------------------------
+# mpmath layer: elementary references beyond f64
+# ---------------------------------------------------------------------------
+
+def math_ref(fn: str, x, prec_bits: int = DEFAULT_PREC):
+    """Reference value of an ``ff.math`` unary at >= ``prec_bits`` bits.
+
+    ``x`` may be a float or an exact Fraction (FF inputs: pass
+    ``ff_exact(hi, lo)``).  Returns an mpmath mpf computed with
+    ``prec_bits + 10`` working bits (so the returned value is good to
+    ``prec_bits``)."""
+    mp = _mp(prec_bits)
+    with mp.workprec(prec_bits + 10):
+        if isinstance(x, Fraction):
+            v = mp.mpf(x.numerator) / mp.mpf(x.denominator)
+        else:
+            v = mp.mpf(float(x))
+        if fn == "exp":
+            return mp.exp(v)
+        if fn == "expm1":
+            return mp.expm1(v)
+        if fn == "log":
+            # stay on the real line: mpmath.log(-1) is complex pi*i
+            if v < 0:
+                return mp.nan
+            return mp.mpf("-inf") if v == 0 else mp.log(v)
+        if fn == "log1p":
+            if v < -1:
+                return mp.nan
+            return mp.mpf("-inf") if v == -1 else mp.log1p(v)
+        if fn == "tanh":
+            return mp.tanh(v)
+        if fn == "sigmoid":
+            return 1 / (1 + mp.exp(-v))
+        if fn == "erf":
+            return mp.erf(v)
+        if fn == "gelu":
+            return v / 2 * (1 + mp.erf(v / mp.sqrt(2)))
+        if fn == "silu":
+            return v / (1 + mp.exp(-v))
+        raise ValueError(f"no oracle for ff.math fn {fn!r}")
+
+
+def rel_errors(fn: str, xs, got_hi, got_lo,
+               prec_bits: int = DEFAULT_PREC) -> np.ndarray:
+    """Relative error |(hi + lo) - f(x)| / |f(x)| per point, with the
+    difference taken at ``prec_bits`` working precision (the FF value
+    enters exactly; only the final quotient rounds — the result is an
+    f64 array of error *magnitudes*, where f64 resolution costs nothing).
+
+    Points where the reference is 0, or non-finite (input or reference)
+    yield: 0.0 when the FF value matches the reference bit-class (same
+    nan-ness / same infinity / both zero), inf otherwise."""
+    mp = _mp(prec_bits)
+    xs = np.asarray(xs)
+    got_hi = np.asarray(got_hi, np.float64)
+    got_lo = np.asarray(got_lo, np.float64)
+    out = np.empty(xs.shape, np.float64)
+    with mp.workprec(prec_bits + 10):
+        for i in np.ndindex(xs.shape):
+            x = float(xs[i])
+            gh, gl = got_hi[i], got_lo[i]
+            if not math.isfinite(x):
+                if math.isnan(x):
+                    out[i] = 0.0 if math.isnan(gh) else math.inf
+                    continue
+                want = _INF_LIMITS[fn][0 if x < 0 else 1]
+                if math.isnan(want):
+                    out[i] = 0.0 if math.isnan(gh) else math.inf
+                else:
+                    out[i] = _special_err(gh, gl, want)
+                continue
+            w = math_ref(fn, x, prec_bits)
+            wf = float(w)
+            if math.isnan(wf):
+                out[i] = 0.0 if math.isnan(gh) else math.inf
+                continue
+            if math.isinf(wf):                    # e.g. log(+-0) -> -inf
+                out[i] = _special_err(gh, gl, wf)
+                continue
+            if not (math.isfinite(gh) and math.isfinite(gl)):
+                # overflow saturation is checked by the caller's
+                # classification pass; an inf against a finite want is a
+                # violation unless want itself rounds to inf in f32
+                out[i] = 0.0 if (math.isinf(gh) and abs(float(w)) >=
+                                 float(OVERFLOW_THRESHOLD)) else math.inf
+                continue
+            if w == 0:
+                out[i] = 0.0 if (gh == 0.0 and gl == 0.0) else math.inf
+                continue
+            err = (mp.mpf(gh) + mp.mpf(gl)) - w
+            out[i] = abs(float(err / w))
+    return out
+
+
+# f(-inf), f(+inf) limits per ff.math unary (nan = IEEE domain error)
+_INF_LIMITS = {
+    "exp": (0.0, math.inf), "expm1": (-1.0, math.inf),
+    "log": (math.nan, math.inf), "log1p": (math.nan, math.inf),
+    "tanh": (-1.0, 1.0), "sigmoid": (0.0, 1.0), "erf": (-1.0, 1.0),
+    "gelu": (0.0, math.inf), "silu": (0.0, math.inf),
+}
+
+
+def _special_err(gh: float, gl: float, want: float) -> float:
+    if math.isinf(want):
+        return 0.0 if (math.isinf(gh) and math.copysign(1, gh) ==
+                       math.copysign(1, want)) else math.inf
+    if want == 0.0:
+        return 0.0 if gh == 0.0 else math.inf
+    return abs((gh + gl) - want) / abs(want)
+
+
+def self_check(prec_bits: int = DEFAULT_PREC) -> dict:
+    """Certify the oracle against itself at double precision-budget and
+    against closed-form constants; returns the measured agreement (used
+    by ``python -m repro.verify`` and the oracle tests)."""
+    mp = _mp(prec_bits)
+    probes = {"exp": 0.5, "log": 1.5, "tanh": 0.35, "erf": 0.75}
+    worst = 0.0
+    for fn, x in probes.items():
+        a = math_ref(fn, x, prec_bits)
+        b = math_ref(fn, x, 2 * prec_bits)
+        with mp.workprec(2 * prec_bits):
+            d = abs(float((mp.mpf(a) - mp.mpf(b)) / mp.mpf(b)))
+        worst = max(worst, d)
+    with mp.workprec(prec_bits + 10):
+        e_err = abs(float(math_ref("exp", 1.0, prec_bits) - mp.e))
+    return {"prec_bits": prec_bits,
+            "cross_prec_rel": worst,
+            "exp1_vs_e_abs": e_err,
+            "certified_bits": math.inf if worst == 0 else -math.log2(worst)}
+
+
+def count_classes(values: Iterable) -> dict:
+    """Bit-level class census of a vector (the guard_probe cross-check:
+    ``denormal_lo`` must equal ``counts['subnormal']`` on any grid,
+    DAZ or not)."""
+    counts = {"zero": 0, "subnormal": 0, "normal": 0, "inf": 0, "nan": 0}
+    arr = np.asarray(values, np.float32).ravel()
+    for b in arr.view(np.uint32):
+        counts[classify_bits(int(b))] += 1
+    return counts

@@ -1,0 +1,394 @@
+"""SMT proof obligations over z3 Float32 terms (QF_FP).
+
+Every obligation is built by symbolically executing the LIVE raw-limb
+code path (:mod:`repro.verify.symtrace`) — the same function objects the
+dispatch registry runs — and asserting the NEGATION of the contract.
+``unsat`` therefore proves the contract for *all* binary32 inputs in the
+stated domain.
+
+Encoding notes (details in ``docs/VERIFY.md``):
+
+* **Exactness via wide formats.**  "``s + r == a + b`` exactly" is
+  encoded in an auxiliary FP sort wide enough that every conversion and
+  the compared additions are themselves exact: Float64 for TwoProd (a
+  product of two binary32 values always fits in 53 bits), and a
+  320-bit-significand sort for TwoSum (the exact sum of two binary32
+  values spans at most 24 + 276 bits over the full exponent range).
+* **Domain.**  Every recorded intermediate (inputs included) is
+  constrained to *normal-or-zero* — the paper §6.1 domain where EFT
+  exactness is claimed and where IEEE semantics (what z3 models) and
+  the flush-to-zero hardware agree.  Bound obligations additionally pin
+  the hi limbs to one binade WLOG: Add22/Mul22/div22/sqrt22 commute
+  exactly with scaling by powers of two (every constant in the
+  sequences is scale-free except the Dekker split, which also commutes
+  barring over/underflow — excluded by the domain constraints), so a
+  one-binade proof extends to the full normal range.
+* **Vacuity guard.**  ``prove()`` first checks the domain constraints
+  ALONE are satisfiable — a contradictory domain would make any negated
+  goal "unsat" vacuously.
+
+z3 is optional: :func:`have_z3` gates everything, tests skip cleanly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.verify import symtrace
+
+# wide enough for the exact sum of any two finite binary32 values:
+# exponent span (127 - (-149)) + 24 significand bits = 300 < 320
+_WIDE_SB = 320
+_WIDE_EB = 19
+# error-bound obligations pin hi limbs to one binade; 200 bits cover the
+# exact multi-limb sums/products there with room to spare
+_BOUND_SB = 200
+
+DEFAULT_TIMEOUT_MS = 600_000
+
+
+def have_z3() -> bool:
+    try:
+        import z3  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+@dataclasses.dataclass
+class Result:
+    name: str
+    namespace: str
+    status: str                 # proved | counterexample | unknown | skipped
+    seconds: float = 0.0
+    detail: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.status in ("proved", "skipped")
+
+
+class _Ctx:
+    """Shared z3 scaffolding for one obligation build."""
+
+    def __init__(self):
+        import z3
+        self.z3 = z3
+        self.be = symtrace.Z3Backend(z3)
+        self.f32 = self.be.sort
+        self.f64 = z3.FPSort(11, 53)
+        self.wide = z3.FPSort(_WIDE_EB, _WIDE_SB)
+        self.bound = z3.FPSort(_WIDE_EB, _BOUND_SB)
+        self.rm = z3.RNE()
+        self.constraints: List = []
+
+    def vars(self, *names):
+        return [self.be.lift(n) for n in names]
+
+    def to(self, sort, x):
+        return self.z3.fpToFP(self.rm, x, sort)
+
+    def add(self, sort, a, b):
+        return self.z3.fpAdd(self.rm, a, b)
+
+    def finish_domain(self, extra=()):
+        self.constraints.extend(self.be.domain_constraints())
+        self.constraints.extend(extra)
+
+    def pow2(self, sort, k: int):
+        return self.z3.FPVal(2.0 ** k, sort)
+
+    def abs_between(self, x, lo_pow: int, hi_pow: int, or_zero=False):
+        """2^lo <= |x| <= 2^hi (optionally allowing exact zero)."""
+        z3, ax = self.z3, self.z3.fpAbs(x)
+        c = z3.And(z3.fpGEQ(ax, self.pow2(self.f32, lo_pow)),
+                   z3.fpLEQ(ax, self.pow2(self.f32, hi_pow)))
+        return z3.Or(c, z3.fpIsZero(x)) if or_zero else c
+
+    def in_binade(self, x):
+        """1 <= x < 2 (the WLOG pin for scale-invariant bound proofs)."""
+        z3 = self.z3
+        one = z3.FPVal(1.0, self.f32)
+        two = z3.FPVal(2.0, self.f32)
+        return z3.And(z3.fpGEQ(x, one), z3.fpLT(x, two))
+
+    def normalized_pair(self, hi, lo):
+        """|lo| <= 2^-24 |hi| — the multiplicative surrogate of the FF
+        normalization invariant (a superset of exactly-normalized pairs,
+        so bounds proved here are strictly stronger)."""
+        z3 = self.z3
+        bound = z3.fpMul(self.rm, self.pow2(self.f32, -24), z3.fpAbs(hi))
+        return z3.Or(z3.fpLEQ(z3.fpAbs(lo), bound), z3.fpIsZero(lo))
+
+
+def _exact_sum(ctx: _Ctx, sort, terms):
+    """Fold f32 terms into ``sort``; exact when the sort is wide enough
+    for the term span (asserted by construction per obligation)."""
+    acc = ctx.to(sort, terms[0])
+    for t in terms[1:]:
+        acc = ctx.z3.fpAdd(ctx.rm, acc, ctx.to(sort, t))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# obligation builders: each returns (constraints, negated_goal_formula)
+# ---------------------------------------------------------------------------
+
+def _ob_two_sum_exact(ctx: _Ctx, namespace: str, fast: bool):
+    z3 = ctx.z3
+    a, b = ctx.vars("a", "b")
+    fn = "fast_two_sum" if fast else "two_sum"
+    s, r = symtrace.run_traced(namespace, fn, ctx.be, [a, b])
+    extra = []
+    if fast:
+        extra.append(z3.Or(z3.fpGEQ(z3.fpAbs(a.val), z3.fpAbs(b.val)),
+                           z3.fpIsZero(a.val)))
+    ctx.finish_domain(extra)
+    lhs = ctx.z3.fpAdd(ctx.rm, ctx.to(ctx.wide, s), ctx.to(ctx.wide, r))
+    rhs = ctx.z3.fpAdd(ctx.rm, ctx.to(ctx.wide, a.val),
+                       ctx.to(ctx.wide, b.val))
+    return ctx.constraints, z3.Not(z3.fpEQ(lhs, rhs))
+
+
+def _ob_two_prod_exact(ctx: _Ctx, namespace: str):
+    z3 = ctx.z3
+    a, b = ctx.vars("a", "b")
+    x, y = symtrace.run_traced(namespace, "two_prod", ctx.be, [a, b])
+    # Dekker window (transforms.py domain note): split residues and the
+    # halves' products must stay normal; the recorded-intermediate
+    # constraints enforce that mechanically, the input window documents it
+    ctx.finish_domain([
+        ctx.abs_between(a.val, -100, 115, or_zero=True),
+        ctx.abs_between(b.val, -100, 115, or_zero=True),
+    ])
+    # a*b is exact in f64 (24+24 <= 53 bits); x + y spans <= 49 bits
+    lhs = z3.fpAdd(ctx.rm, ctx.to(ctx.f64, x), ctx.to(ctx.f64, y))
+    rhs = z3.fpMul(ctx.rm, ctx.to(ctx.f64, a.val), ctx.to(ctx.f64, b.val))
+    return ctx.constraints, z3.Not(z3.fpEQ(lhs, rhs))
+
+
+def _eq22(ctx: _Ctx, fn: str):
+    """kernels and core namespaces compute identical limbs (the bitwise
+    jnp == pallas contract, as a theorem instead of a sample)."""
+    z3 = ctx.z3
+    nargs = 2 if fn in ("two_sum", "fast_two_sum", "two_prod") else 4
+    names = ["a", "b", "c", "d"][:nargs]
+    xs = ctx.vars(*names)
+    h1, l1 = symtrace.run_traced("kernels", fn, ctx.be, xs)
+    h2, l2 = symtrace.run_traced("core", fn, ctx.be, xs)
+    extra = []
+    if fn == "fast_two_sum":
+        extra.append(z3.Or(z3.fpGEQ(z3.fpAbs(xs[0].val),
+                                    z3.fpAbs(xs[1].val)),
+                           z3.fpIsZero(xs[0].val)))
+    ctx.finish_domain(extra)
+    same = z3.And(z3.fpEQ(h1, h2), z3.fpEQ(l1, l2))
+    return ctx.constraints, z3.Not(same)
+
+
+def _bound_goal(ctx: _Ctx, res_h, res_l, exact_wide, eps_pow: int,
+                floor_terms=None):
+    """|(res_h + res_l) - exact| <= 2^eps_pow * |exact|   (wide compare;
+    with ``floor_terms`` the RHS becomes the Add22 Thm-5 max() form:
+    max(2^-24 |sum(floor_terms)|, 2^eps_pow |exact|))."""
+    z3 = ctx.z3
+    got = z3.fpAdd(ctx.rm, ctx.to(ctx.bound, res_h), ctx.to(ctx.bound, res_l))
+    err = z3.fpAbs(z3.fpSub(ctx.rm, got, exact_wide))
+    rel = z3.fpMul(ctx.rm, ctx.pow2(ctx.bound, eps_pow), z3.fpAbs(exact_wide))
+    if floor_terms is not None:
+        lo_mag = z3.fpAbs(_exact_sum(ctx, ctx.bound, floor_terms))
+        alt = z3.fpMul(ctx.rm, ctx.pow2(ctx.bound, -24), lo_mag)
+        rel = z3.If(z3.fpGT(alt, rel), alt, rel)
+    return z3.Not(z3.fpLEQ(err, rel))
+
+
+def _pair_domain(ctx: _Ctx, hi, lo, binade=True, lo_window=(-60, 1)):
+    """Input-pair constraints for bound obligations: hi in [1,2) (WLOG,
+    scale invariance) or a bounded window; lo normalized-or-zero."""
+    cs = [ctx.normalized_pair(hi.val, lo.val)]
+    if binade:
+        cs.append(ctx.in_binade(hi.val))
+    else:
+        cs.append(ctx.abs_between(hi.val, *lo_window, or_zero=True))
+    return cs
+
+
+def _ob_add22_bound(ctx: _Ctx, namespace: str, accurate: bool):
+    z3 = ctx.z3
+    ah, al, bh, bl = ctx.vars("ah", "al", "bh", "bl")
+    fn = "add22_accurate" if accurate else "add22"
+    rh, rl = symtrace.run_traced(namespace, fn, ctx.be, [ah, al, bh, bl])
+    # WLOG ah in [1,2) (global scaling is exact); b bounded so the 200-bit
+    # accumulator holds the 4-limb sum exactly — cancellation included
+    ctx.finish_domain(
+        _pair_domain(ctx, ah, al)
+        + _pair_domain(ctx, bh, bl, binade=False, lo_window=(-40, 40)))
+    exact_sum = _exact_sum(ctx, ctx.bound, [ah.val, al.val, bh.val, bl.val])
+    if accurate:
+        # documented: <= 2 ulp_FF ~ 2^-44 relative, always
+        goal = _bound_goal(ctx, rh, rl, exact_sum, -44)
+    else:
+        # paper Thm 5: delta <= max(2^-24 |al + bl|, 2^-44 |a + b|)
+        goal = _bound_goal(ctx, rh, rl, exact_sum, -44,
+                           floor_terms=[al.val, bl.val])
+    return ctx.constraints, goal
+
+
+def _ob_mul22_bound(ctx: _Ctx, namespace: str):
+    z3 = ctx.z3
+    ah, al, bh, bl = ctx.vars("ah", "al", "bh", "bl")
+    rh, rl = symtrace.run_traced(namespace, "mul22", ctx.be, [ah, al, bh, bl])
+    ctx.finish_domain(_pair_domain(ctx, ah, al) + _pair_domain(ctx, bh, bl))
+    # exact product of two 2-limb values in the 200-bit accumulator
+    terms = []
+    for u in (ah.val, al.val):
+        for v in (bh.val, bl.val):
+            terms.append(z3.fpMul(ctx.rm, ctx.to(ctx.bound, u),
+                                  ctx.to(ctx.bound, v)))
+    exact_prod = terms[0]
+    for t in terms[1:]:
+        exact_prod = z3.fpAdd(ctx.rm, exact_prod, t)
+    return ctx.constraints, _bound_goal(ctx, rh, rl, exact_prod, -44)
+
+
+def _ob_div22_bound(ctx: _Ctx, namespace: str):
+    z3 = ctx.z3
+    ah, al, bh, bl = ctx.vars("ah", "al", "bh", "bl")
+    rh, rl = symtrace.run_traced(namespace, "div22", ctx.be, [ah, al, bh, bl])
+    ctx.finish_domain(_pair_domain(ctx, ah, al) + _pair_domain(ctx, bh, bl))
+    num = _exact_sum(ctx, ctx.bound, [ah.val, al.val])
+    den = _exact_sum(ctx, ctx.bound, [bh.val, bl.val])
+    # the wide quotient rounds at 2^-200 relative — absorbed by the
+    # bound's own slack (documented 2^-43 class vs ~2^-44.5 true)
+    q = z3.fpDiv(ctx.rm, num, den)
+    return ctx.constraints, _bound_goal(ctx, rh, rl, q, -43)
+
+
+def _ob_sqrt22_bound(ctx: _Ctx, namespace: str):
+    z3 = ctx.z3
+    ah, al = ctx.vars("ah", "al")
+    rh, rl = symtrace.run_traced(namespace, "sqrt22", ctx.be, [ah, al])
+    # WLOG one even-exponent binade: sqrt commutes with 2^2k scaling
+    one = z3.FPVal(1.0, ctx.f32)
+    four = z3.FPVal(4.0, ctx.f32)
+    ctx.finish_domain([ctx.normalized_pair(ah.val, al.val),
+                       z3.And(z3.fpGEQ(ah.val, one), z3.fpLT(ah.val, four))])
+    v = _exact_sum(ctx, ctx.bound, [ah.val, al.val])
+    root = z3.fpSqrt(ctx.rm, v)        # wide rounding absorbed by slack
+    return ctx.constraints, _bound_goal(ctx, rh, rl, root, -44)
+
+
+def _ob_false_canary(ctx: _Ctx, namespace: str):
+    """Deliberately FALSE claim (TwoSum residual is always zero): must
+    come back ``counterexample``.  Guards the whole encoding against
+    vacuous-unsat bugs in domains or conversions."""
+    z3 = ctx.z3
+    a, b = ctx.vars("a", "b")
+    _s, r = symtrace.run_traced(namespace, "two_sum", ctx.be, [a, b])
+    ctx.finish_domain()
+    return ctx.constraints, z3.Not(z3.fpIsZero(r))
+
+
+@dataclasses.dataclass(frozen=True)
+class Obligation:
+    name: str
+    namespace: str
+    build: Callable
+    expect: str = "proved"          # the canary expects "counterexample"
+    heavy: bool = False             # excluded from the quick CI tier
+
+
+def _obligations() -> List[Obligation]:
+    obs: List[Obligation] = []
+    for ns in symtrace.NAMESPACES:
+        obs += [
+            Obligation("two_sum_residual_exact", ns,
+                       lambda c, ns=ns: _ob_two_sum_exact(c, ns, False)),
+            Obligation("fast_two_sum_residual_exact", ns,
+                       lambda c, ns=ns: _ob_two_sum_exact(c, ns, True)),
+            Obligation("two_prod_residual_exact", ns,
+                       lambda c, ns=ns: _ob_two_prod_exact(c, ns)),
+            Obligation("mul22_rel_bound_2pow44", ns,
+                       lambda c, ns=ns: _ob_mul22_bound(c, ns)),
+            Obligation("add22_sloppy_thm5_bound", ns,
+                       lambda c, ns=ns: _ob_add22_bound(c, ns, False)),
+            Obligation("div22_rel_bound_2pow43", ns,
+                       lambda c, ns=ns: _ob_div22_bound(c, ns), heavy=True),
+            Obligation("sqrt22_rel_bound_2pow44", ns,
+                       lambda c, ns=ns: _ob_sqrt22_bound(c, ns), heavy=True),
+        ]
+    # accurate Add22 exists only on the core path (registry "accurate")
+    obs.append(Obligation(
+        "add22_accurate_rel_bound_2pow44", "core",
+        lambda c: _ob_add22_bound(c, "core", True)))
+    # cross-namespace bitwise equivalence (jnp == pallas as a theorem)
+    for fn in ("two_sum", "fast_two_sum", "two_prod", "add22", "mul22"):
+        obs.append(Obligation(f"{fn}_kernels_equals_core", "both",
+                              lambda c, fn=fn: _eq22(c, fn)))
+    obs.append(Obligation("canary_two_sum_residual_nonzero", "kernels",
+                          lambda c: _ob_false_canary(c, "kernels"),
+                          expect="counterexample"))
+    return obs
+
+
+OBLIGATIONS: Dict[str, Obligation] = {
+    f"{o.name}[{o.namespace}]": o for o in _obligations()}
+
+
+def prove(key: str, timeout_ms: int = DEFAULT_TIMEOUT_MS,
+          check_vacuity: bool = True) -> Result:
+    """Discharge one obligation.  Returns status:
+
+    * ``proved``          — negated goal unsat (or, for the canary, sat)
+    * ``counterexample``  — the contract FAILS; detail carries the model
+    * ``unknown``         — solver timeout/unknown (NOT a failure; the
+      sweep tier still covers the claim empirically)
+    * ``skipped``         — z3 not installed
+    """
+    ob = OBLIGATIONS[key]
+    if not have_z3():
+        return Result(ob.name, ob.namespace, "skipped", 0.0, "z3 not installed")
+    import z3
+    t0 = time.monotonic()
+    ctx = _Ctx()
+    constraints, negated = ob.build(ctx)
+
+    if check_vacuity:
+        s0 = z3.Solver()
+        s0.set("timeout", min(timeout_ms, 120_000))
+        s0.add(*constraints)
+        if s0.check() != z3.sat:
+            return Result(ob.name, ob.namespace, "unknown",
+                          time.monotonic() - t0,
+                          f"domain vacuity check: {s0.check()} (expected sat)")
+
+    s = z3.Solver()
+    s.set("timeout", timeout_ms)
+    s.add(*constraints)
+    s.add(negated)
+    res = s.check()
+    dt = time.monotonic() - t0
+    if ob.expect == "counterexample":
+        if res == z3.sat:
+            return Result(ob.name, ob.namespace, "proved", dt,
+                          "canary: counterexample found as required")
+        return Result(ob.name, ob.namespace, "counterexample", dt,
+                      f"canary came back {res} — encoding is vacuous")
+    if res == z3.unsat:
+        return Result(ob.name, ob.namespace, "proved", dt)
+    if res == z3.sat:
+        return Result(ob.name, ob.namespace, "counterexample", dt,
+                      f"model: {s.model()}")
+    return Result(ob.name, ob.namespace, "unknown", dt, str(res))
+
+
+def prove_all(timeout_ms: int = DEFAULT_TIMEOUT_MS,
+              include_heavy: bool = False) -> List[Result]:
+    out = []
+    for key, ob in OBLIGATIONS.items():
+        if ob.heavy and not include_heavy:
+            continue
+        out.append(prove(key, timeout_ms))
+    return out

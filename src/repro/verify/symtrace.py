@@ -1,0 +1,330 @@
+"""Symbolic execution of the LIVE raw-limb EFT code paths.
+
+The SMT obligations in :mod:`repro.verify.smt` are not transcriptions of
+the paper's algorithms — they are built by *running the very functions
+the dispatch registry executes* over a pluggable scalar type:
+
+  * ``repro.kernels.eft`` — the barrier-free raw-limb primitives Pallas
+    kernel bodies use;
+  * ``repro.core.transforms`` / ``repro.core.ff`` — the barrier-carrying
+    twins behind every ``jnp`` implementation.
+
+Editing a kernel sequence therefore changes the generated formula, and
+the proof (or the always-on bitwise cross-check) re-adjudicates the
+edit; there is no copy to go stale.
+
+Two backends share one tracer:
+
+  * :class:`NumpyBackend` — values are f32 numpy scalars/arrays; every
+    traced op rounds exactly as the EFT-safe ISA contract demands (IEEE
+    round-to-nearest, no FMA).  Always available: tier-1 pins the traced
+    path bitwise against the real jnp execution
+    (``tests/test_verify_smt.py::test_traced_path_matches_live``).
+  * :class:`Z3Backend` — values are z3 Float32 terms (QF_FP, RNE); every
+    op also records its term, so obligations can restrict the domain to
+    the paper's all-intermediates-normal-or-zero region (§6.1 — the
+    range where IEEE and flush-to-zero semantics coincide).
+
+The tracer works by swapping the ``jnp``/``lax`` module bindings of the
+traced modules for proxies inside a context manager (single-threaded
+use only, like the rest of the test tier).  ``Sym`` sets
+``__array_ufunc__ = None`` so numpy scalars defer to its reflected
+operators instead of coercing it into an object array.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+__all__ = ["Sym", "NumpyBackend", "Z3Backend", "live_paths", "eft_fns",
+           "run_traced", "NAMESPACES", "RAW_LIMB_OPS"]
+
+# the raw-limb entry points under proof, per namespace
+RAW_LIMB_OPS = ("two_sum", "fast_two_sum", "two_prod", "add22",
+                "add22_accurate", "mul22", "div22", "sqrt22")
+NAMESPACES = ("kernels", "core")
+
+
+class Sym:
+    """A scalar flowing through the live EFT code: wraps a backend value
+    and funnels every arithmetic op through the backend's rounded
+    primitives."""
+
+    __slots__ = ("val", "be")
+    __array_ufunc__ = None            # numpy scalars must defer to us
+    __array_priority__ = 1000
+
+    def __init__(self, val, be):
+        self.val = val
+        self.be = be
+
+    @property
+    def dtype(self):                  # satisfies transforms._f32's check
+        import jax.numpy as jnp
+        return jnp.float32
+
+    def _lift(self, other):
+        if isinstance(other, Sym):
+            return other.val
+        return self.be.const(other)
+
+    def __add__(self, other):
+        return Sym(self.be.add(self.val, self._lift(other)), self.be)
+
+    def __radd__(self, other):
+        return Sym(self.be.add(self._lift(other), self.val), self.be)
+
+    def __sub__(self, other):
+        return Sym(self.be.sub(self.val, self._lift(other)), self.be)
+
+    def __rsub__(self, other):
+        return Sym(self.be.sub(self._lift(other), self.val), self.be)
+
+    def __mul__(self, other):
+        return Sym(self.be.mul(self.val, self._lift(other)), self.be)
+
+    def __rmul__(self, other):
+        return Sym(self.be.mul(self._lift(other), self.val), self.be)
+
+    def __truediv__(self, other):
+        return Sym(self.be.div(self.val, self._lift(other)), self.be)
+
+    def __rtruediv__(self, other):
+        return Sym(self.be.div(self._lift(other), self.val), self.be)
+
+    def __neg__(self):
+        return Sym(self.be.neg(self.val), self.be)
+
+    def __repr__(self):
+        return f"Sym({self.val!r})"
+
+
+class NumpyBackend:
+    """Concrete f32 semantics: numpy scalar/array ops ARE IEEE RN without
+    contraction — the reference the bitwise cross-check runs on."""
+
+    name = "numpy"
+
+    @staticmethod
+    def _f32(r):
+        return np.asarray(r, np.float32)    # scalar -> 0-d, arrays pass
+
+    def const(self, v):
+        return np.float32(v)
+
+    @classmethod
+    def add(cls, a, b):
+        with np.errstate(all="ignore"):
+            return cls._f32(a + b)
+
+    @classmethod
+    def sub(cls, a, b):
+        with np.errstate(all="ignore"):
+            return cls._f32(a - b)
+
+    @classmethod
+    def mul(cls, a, b):
+        with np.errstate(all="ignore"):
+            return cls._f32(a * b)
+
+    @classmethod
+    def div(cls, a, b):
+        with np.errstate(all="ignore"):
+            return cls._f32(a / b)
+
+    @classmethod
+    def neg(cls, a):
+        return cls._f32(-a)
+
+    @classmethod
+    def sqrt(cls, a):
+        with np.errstate(all="ignore"):
+            return cls._f32(np.sqrt(a))
+
+    def lift(self, arr):
+        return Sym(np.asarray(arr, np.float32), self)
+
+
+class Z3Backend:
+    """z3 Float32 (QF_FP) semantics under RNE.  Records every rounded
+    intermediate in ``trace`` so obligations can constrain the whole
+    evaluation to the normal-or-zero domain (and to finiteness)."""
+
+    name = "z3"
+
+    def __init__(self, z3):
+        self.z3 = z3
+        self.sort = z3.FPSort(8, 24)
+        self.rm = z3.RNE()
+        self.trace = []
+
+    def _rec(self, t):
+        self.trace.append(t)
+        return t
+
+    def var(self, name: str):
+        """A fresh Float32 input variable (recorded: inputs must satisfy
+        the domain constraints too)."""
+        return self._rec(self.z3.FP(name, self.sort))
+
+    def const(self, v):
+        return self.z3.FPVal(float(v), self.sort)
+
+    def add(self, a, b):
+        return self._rec(self.z3.fpAdd(self.rm, a, b))
+
+    def sub(self, a, b):
+        return self._rec(self.z3.fpSub(self.rm, a, b))
+
+    def mul(self, a, b):
+        return self._rec(self.z3.fpMul(self.rm, a, b))
+
+    def div(self, a, b):
+        return self._rec(self.z3.fpDiv(self.rm, a, b))
+
+    def neg(self, a):
+        return self.z3.fpNeg(a)      # sign flip: exact, not flushed
+
+    def sqrt(self, a):
+        return self._rec(self.z3.fpSqrt(self.rm, a))
+
+    def lift(self, name):
+        return Sym(self.var(name), self)
+
+    def domain_constraints(self):
+        """normal-or-zero for every recorded value: the paper §6.1 domain
+        where EFT exactness is claimed AND where IEEE semantics (what z3
+        models) coincide with the flush-to-zero hardware."""
+        z3 = self.z3
+        return [z3.Or(z3.fpIsZero(t), z3.fpIsNormal(t)) for t in self.trace]
+
+
+class _ModuleProxy:
+    """Forwards attribute access to a real module, with Sym-aware
+    overrides for the few entry points the raw-limb code paths touch."""
+
+    def __init__(self, real, overrides):
+        self._real = real
+        self._overrides = overrides
+
+    def __getattr__(self, name):
+        if name in self._overrides:
+            return self._overrides[name]
+        return getattr(self._real, name)
+
+
+def _sym_sqrt(real_sqrt):
+    def sqrt(x):
+        if isinstance(x, Sym):
+            return Sym(x.be.sqrt(x.val), x.be)
+        return real_sqrt(x)
+    return sqrt
+
+
+def _sym_asarray(real_asarray):
+    def asarray(x, *a, **kw):
+        if isinstance(x, Sym):
+            return x
+        return real_asarray(x, *a, **kw)
+    return asarray
+
+
+def _sym_barrier(real_barrier):
+    def optimization_barrier(x):
+        # symbolically each op is individually rounded already — the
+        # barrier's only job (pinning fl(a*b) against fusion) is a no-op
+        if isinstance(x, Sym):
+            return x
+        return real_barrier(x)
+    return optimization_barrier
+
+
+@contextlib.contextmanager
+def live_paths():
+    """Patch the jnp/lax bindings of the modules under trace so their
+    UNMODIFIED function bodies execute over Sym scalars; restores on
+    exit.  Not thread-safe (test/report tier only)."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    import repro.core.ff as core_ff
+    import repro.core.transforms as T
+    import repro.kernels.eft as KE
+
+    jnp_proxy = _ModuleProxy(jnp, {
+        "sqrt": _sym_sqrt(jnp.sqrt),
+        "asarray": _sym_asarray(jnp.asarray),
+    })
+    lax_proxy = _ModuleProxy(lax, {
+        "optimization_barrier": _sym_barrier(lax.optimization_barrier),
+    })
+    saved = [(KE, "jnp", KE.jnp), (T, "jnp", T.jnp), (T, "lax", T.lax),
+             (core_ff, "jnp", core_ff.jnp)]
+    try:
+        KE.jnp = jnp_proxy
+        T.jnp = jnp_proxy
+        T.lax = lax_proxy
+        core_ff.jnp = jnp_proxy
+        yield
+    finally:
+        for mod, attr, val in saved:
+            setattr(mod, attr, val)
+
+
+def eft_fns(namespace: str) -> Dict[str, Callable]:
+    """The live raw-limb callables per namespace, uniform signature
+    ``fn(*limbs) -> (hi, lo)``.
+
+    ``kernels`` — ``repro.kernels.eft`` (what Pallas kernel bodies run).
+    ``core``    — ``repro.core.transforms`` EFTs + the ``core.ff``
+    algorithms (what every jnp impl runs).  ``add22_accurate`` only
+    exists in core (the registry's ``accurate`` add impl)."""
+    import repro.core.ff as core_ff
+    import repro.core.transforms as T
+    import repro.kernels.eft as KE
+
+    if namespace == "kernels":
+        return {
+            "two_sum": KE.two_sum,
+            "fast_two_sum": KE.fast_two_sum,
+            "two_prod": KE.two_prod,
+            "add22": KE.add22,
+            "mul22": KE.mul22,
+            "div22": KE.div22,
+            "sqrt22": lambda ah, al: KE.sqrt22(ah, al),
+        }
+    if namespace == "core":
+        def _ff2(fn):
+            def call(ah, al, bh, bl):
+                r = fn(core_ff.FF(ah, al), core_ff.FF(bh, bl))
+                return r.hi, r.lo
+            return call
+
+        return {
+            "two_sum": T.two_sum,
+            "fast_two_sum": T.fast_two_sum,
+            "two_prod": T.two_prod,
+            "add22": _ff2(core_ff.add22),
+            "add22_accurate": _ff2(core_ff.add22_accurate),
+            "mul22": _ff2(core_ff.mul22),
+            "div22": _ff2(core_ff.div22),
+            "sqrt22": lambda ah, al: (lambda r: (r.hi, r.lo))(
+                core_ff.sqrt22(core_ff.FF(ah, al))),
+        }
+    raise ValueError(f"unknown namespace {namespace!r}")
+
+
+def run_traced(namespace: str, fn_name: str, backend, args) -> Tuple:
+    """Execute the live ``namespace.fn_name`` body over backend scalars.
+
+    ``args``: backend values (or things ``backend.lift`` accepts when a
+    plain array/name is given).  Returns the tuple of raw output values
+    (unwrapped from Sym)."""
+    fns = eft_fns(namespace)
+    syms = [a if isinstance(a, Sym) else backend.lift(a) for a in args]
+    with live_paths():
+        out = fns[fn_name](*syms)
+    return tuple(o.val if isinstance(o, Sym) else o for o in out)

@@ -59,8 +59,44 @@ def test_every_op_has_numerics_or_api_contract():
 def test_readme_links_docs_tier():
     with open(os.path.join(ROOT, "README.md")) as f:
         readme = f.read()
-    for doc in ("docs/API.md", "docs/NUMERICS.md", "docs/DESIGN_ozaki.md",
-                "docs/DESIGN_fusion.md", "docs/DESIGN_sharded.md",
-                "docs/DESIGN_math.md", "docs/DESIGN_robustness.md"):
+    for doc in ("docs/API.md", "docs/NUMERICS.md", "docs/VERIFY.md",
+                "docs/DESIGN_ozaki.md", "docs/DESIGN_fusion.md",
+                "docs/DESIGN_sharded.md", "docs/DESIGN_math.md",
+                "docs/DESIGN_robustness.md"):
         assert doc in readme, f"README does not link {doc}"
         assert os.path.exists(os.path.join(ROOT, doc)), doc
+
+
+def test_verify_doc_in_sync_with_contract_registry():
+    """docs/VERIFY.md embeds the rendered contracts table between marker
+    comments; a registry edit without a doc regen fails here."""
+    from repro.verify import contracts
+
+    with open(os.path.join(ROOT, "docs", "VERIFY.md")) as f:
+        ok, msg = contracts.check_doc(f.read())
+    assert ok, msg
+
+
+def test_numerics_proof_status_column():
+    """Every NUMERICS.md contract row named in NUMERICS_STATUS carries
+    exactly the registry's proof status in its table row."""
+    from repro.verify import contracts
+
+    with open(os.path.join(ROOT, "docs", "NUMERICS.md")) as f:
+        lines = f.read().splitlines()
+    for token, status in contracts.NUMERICS_STATUS.items():
+        rows = [ln for ln in lines
+                if ln.startswith("|") and token + " " in ln]
+        assert rows, f"NUMERICS.md has no table row for {token}"
+        for ln in rows:
+            assert f"**{status}**" in ln, (token, status, ln)
+        others = {f"**{s}**" for s in contracts.STATUSES} - {f"**{status}**"}
+        for ln in rows:
+            assert not any(o in ln for o in others), (token, ln)
+
+
+def test_readme_verified_contracts_section():
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    assert "## Verified contracts" in readme
+    assert "repro.verify" in readme

@@ -1,0 +1,175 @@
+"""The beyond-f64 oracle: exact rounding, classification, residual
+ground truths, self-certification — and the guard_probe cross-check
+(the PR 7 DAZ finding: a float compare can itself be flushed, so the
+census must agree with a bit-level oracle that can't)."""
+
+import math
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.verify import oracle
+
+mpmath = pytest.importorskip("mpmath")
+
+
+# ---------------------------------------------------------------------------
+# exact integer layer
+# ---------------------------------------------------------------------------
+
+def test_round_f32_matches_numpy_on_random_f64():
+    rng = np.random.default_rng(7)
+    xs = (rng.standard_normal(5000)
+          * np.exp2(rng.integers(-140, 120, 5000).astype(np.float64)))
+    for x in xs:
+        want = np.float32(x)
+        got = np.float32(oracle.round_f32(Fraction(float(x))))
+        assert oracle.f32_bits(want) == oracle.f32_bits(got)
+
+
+def test_round_f32_ties_to_even():
+    a = np.float32(1.0)
+    b = np.nextafter(a, np.float32(2.0))
+    mid = (oracle.exact(a) + oracle.exact(b)) / 2
+    assert oracle.round_f32(mid) == 1.0          # even significand wins
+    c = np.nextafter(b, np.float32(2.0))
+    mid2 = (oracle.exact(b) + oracle.exact(c)) / 2
+    assert oracle.round_f32(mid2) == float(c)    # odd rounds away
+
+
+def test_round_f32_avoids_double_rounding():
+    # an f64 value whose f64->f32 path and exact->f32 path disagree if
+    # rounded through f64 first: exactly representable midpoint + epsilon
+    lo = np.float32(1.0)
+    hi = np.nextafter(lo, np.float32(2.0))
+    mid = (oracle.exact(lo) + oracle.exact(hi)) / 2
+    v = mid + Fraction(1, 2 ** 60)               # just above the midpoint
+    assert oracle.round_f32(v) == float(hi)
+    v = mid - Fraction(1, 2 ** 60)
+    assert oracle.round_f32(v) == float(lo)
+
+
+def test_round_f32_subnormals_and_overflow():
+    tiny = Fraction(3, 2) * oracle.MIN_SUBNORMAL
+    assert oracle.exact(oracle.round_f32(tiny)) == 2 * oracle.MIN_SUBNORMAL
+    assert oracle.round_f32(oracle.MIN_SUBNORMAL / 2) == 0.0
+    assert math.isinf(oracle.round_f32(Fraction(2) ** 128))
+    assert math.isinf(oracle.round_f32(oracle.OVERFLOW_THRESHOLD))
+    assert not math.isinf(oracle.round_f32(oracle.OVERFLOW_THRESHOLD - 1))
+    assert oracle.round_f32(-(Fraction(2) ** 130)) == -math.inf
+
+
+def test_classification_is_bitwise():
+    cases = {
+        0.0: "zero", -0.0: "zero", 1.0: "normal", -2.5e38: "normal",
+        1e-40: "subnormal", -1e-44: "subnormal",
+        math.inf: "inf", -math.inf: "inf", math.nan: "nan",
+    }
+    for x, want in cases.items():
+        assert oracle.classify_f32(np.float32(x)) == want, x
+
+
+def test_residual_ground_truths():
+    rng = np.random.default_rng(3)
+    for _ in range(200):
+        a = np.float32(rng.standard_normal() * 2.0 ** rng.integers(-10, 10))
+        b = np.float32(rng.standard_normal() * 2.0 ** rng.integers(-10, 10))
+        s = np.float32(a + b)
+        r = oracle.two_sum_residual(a, b)
+        assert oracle.exact(s) + r == oracle.exact(a) + oracle.exact(b)
+        # Møller: the residual is itself representable in f32
+        assert Fraction(oracle.round_f32(r)) == r
+        p = np.float32(a * b)
+        rp = oracle.two_prod_residual(a, b)
+        assert oracle.exact(p) + rp == oracle.exact(a) * oracle.exact(b)
+
+
+def test_nearest_ff_is_the_representability_floor():
+    v = Fraction(1, 3)
+    hi, lo = oracle.nearest_ff(v)
+    err = abs(v - Fraction(hi) - Fraction(lo))
+    assert err <= Fraction(1, 2) * oracle.ulp32(lo if lo else hi)
+
+
+# ---------------------------------------------------------------------------
+# mpmath layer
+# ---------------------------------------------------------------------------
+
+def test_self_check_certifies_beyond_60_bits():
+    sc = oracle.self_check(120)
+    assert sc["certified_bits"] >= 60
+    assert sc["exp1_vs_e_abs"] == 0.0
+
+
+def test_math_ref_stays_real_on_log_domain_edges():
+    assert math.isnan(float(oracle.math_ref("log", -1.0)))
+    assert float(oracle.math_ref("log", 0.0)) == -math.inf
+    assert math.isnan(float(oracle.math_ref("log1p", -2.0)))
+    assert float(oracle.math_ref("log1p", -1.0)) == -math.inf
+
+
+def test_rel_errors_specials_and_limits():
+    xs = np.array([0.5, math.inf, -math.inf, math.nan], np.float32)
+    gh = np.array([np.exp(np.float32(0.5)), np.inf, 0.0, np.nan], np.float32)
+    gl = np.zeros(4, np.float32)
+    errs = oracle.rel_errors("exp", xs, gh, gl)
+    assert errs[0] < 1e-7
+    assert (errs[1:] == 0.0).all()
+    # a wrong limit surfaces as a large error, never a silent pass
+    bad = oracle.rel_errors("tanh", np.array([math.inf], np.float32),
+                            np.array([0.5], np.float32),
+                            np.zeros(1, np.float32))
+    assert bad[0] >= 0.5
+
+
+def test_rel_errors_resolves_beyond_f64():
+    # an FF pair 2^-50-close to exp(0.5): f64 cannot see the lo limb's
+    # contribution at this scale, the oracle must
+    want = oracle.math_ref("exp", 0.5, 200)
+    hi = np.float32(float(want))
+    lo = np.float32(float(want) - float(hi))
+    good = oracle.rel_errors("exp", np.array([0.5], np.float32),
+                             np.array([hi]), np.array([lo]))[0]
+    flipped = oracle.rel_errors("exp", np.array([0.5], np.float32),
+                                np.array([hi]), np.array([-lo]))[0]
+    assert good < 2.0 ** -45
+    assert flipped > 2.0 ** -30                  # sign flip is visible
+
+
+# ---------------------------------------------------------------------------
+# satellite: guard_probe census vs the DAZ-immune oracle classification
+# ---------------------------------------------------------------------------
+
+def _daz_grid() -> np.ndarray:
+    """Bit-constructed subnormal/normal/zero mix — built from bit
+    patterns so no DAZ-flushed float literal can corrupt the classes."""
+    rng = np.random.default_rng(778)
+    sub = rng.integers(1, 1 << 23, 64, dtype=np.uint32)          # e = 0
+    nrm = ((rng.integers(1, 0xFE, 64, dtype=np.uint32) << 23)
+           | rng.integers(0, 1 << 23, 64, dtype=np.uint32))
+    zer = np.zeros(16, np.uint32)
+    neg = (sub[:32] | np.uint32(0x80000000))
+    bits = np.concatenate([sub, nrm, zer, neg]).astype(np.uint32)
+    rng.shuffle(bits)
+    return bits.view(np.float32)
+
+
+def test_guard_census_matches_oracle():
+    """PR 7 pinned that ``lo != 0`` style float compares are themselves
+    flushed on DAZ backends; guard_probe therefore counts denormal lo
+    limbs by bit inspection.  The verify oracle classifies by bits too —
+    the two independent implementations must agree exactly."""
+    from repro.ff.guard import guard_probe
+
+    lo = _daz_grid()
+    hi = np.ones_like(lo)                        # normalized, boring hi
+    counts = guard_probe(np.asarray(hi), np.asarray(lo))
+    census = oracle.count_classes(lo)
+    assert int(counts.denormal_lo) == census["subnormal"]
+    assert census["subnormal"] == 96             # 64 positive + 32 negative
+    assert census["zero"] == 16
+    # and the census itself is immune to float compares: every subnormal
+    # classified by bits is nonzero as a bit pattern
+    nz_bits = int((lo.view(np.uint32) & 0x7FFFFFFF != 0).sum())
+    assert nz_bits == census["subnormal"] + census["normal"]

@@ -1,0 +1,180 @@
+"""The exhaustive seam sweeps, budget-gated through one code path.
+
+``--sweep-budget`` (root conftest) sets points-per-seam: the default
+2^16 runs everywhere; CI's verify job passes 2^20 (the acceptance
+budget); ``--sweep-budget 4194304`` additionally unlocks the
+``slow_sweep`` full-grid arms.  The seam *registry* lives with the
+algorithms (``repro.core.ffmath.reduction_seams``) so a constant retune
+moves the swept neighborhoods — completeness is asserted here."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import ffmath
+from repro.verify import sweeps
+
+pytest.importorskip("mpmath")
+
+SEAMS = ffmath.reduction_seams()
+SEAM_IDS = [s.name for s in SEAMS]
+
+
+# ---------------------------------------------------------------------------
+# registry completeness: every documented boundary class is present
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_every_documented_seam_class():
+    names = {s.name for s in SEAMS}
+    required = {
+        # exp: Cody–Waite grid, saturation windows, flush bands, tiny
+        "exp/cody_waite_half_k", "exp/cody_waite_integer_k",
+        "exp/overflow_window", "exp/underflow_window", "exp/lo_flush_band",
+        "exp/tiny_arguments", "exp/subnormal_arguments", "exp/specials",
+        # log: frexp branch points, fold seam, cancellation, specials
+        "log/binade_boundaries", "log/sqrt2_fold", "log/near_one",
+        "log/specials",
+        # tanh: branch seam, inner reduction grid, saturation, identity
+        "tanh/small_large_seam", "tanh/expm1_k_boundaries",
+        "tanh/saturation_window", "tanh/deep_saturation",
+        "tanh/identity_band", "tanh/identity_edge", "tanh/specials",
+    }
+    assert required <= names, required - names
+    for s in SEAMS:
+        assert s.fn in ffmath.UNARY22
+        assert s.kind in ("centers", "window", "points")
+        assert s.check in ("contract", "identity", "special")
+
+
+def test_seam_centers_track_live_constants():
+    """The k-grid is derived from the live reduction constants — if the
+    clip window or the ln2 split moves, the centers move with it."""
+    by_name = {s.name: s for s in SEAMS}
+    ln2 = ffmath._EXP_L1 + ffmath._EXP_L2
+    half = by_name["exp/cody_waite_half_k"].data
+    assert all(abs(c / ln2 % 1 - 0.5) < 1e-9 for c in half)
+    assert min(half) >= ffmath._EXP_CLIP_LO - ln2
+    assert max(half) <= ffmath._EXP_CLIP_HI + ln2
+    seam = by_name["tanh/small_large_seam"]
+    assert float(ffmath._TANH_SMALL) in seam.data
+
+
+# ---------------------------------------------------------------------------
+# point enumeration
+# ---------------------------------------------------------------------------
+
+def test_ordered_index_roundtrip_and_adjacency():
+    xs = np.array([0.0, -0.0, 1.0, -1.0, 1e-40, -1e-40, 3.4e38, 2.0 ** -149],
+                  np.float32)
+    idx = sweeps.ordered_index(xs)
+    back = sweeps.from_index(idx)
+    assert (back.view(np.uint32)[2:] == xs.view(np.uint32)[2:]).all()
+    # consecutive indices are consecutive floats
+    one = np.float32(1.0)
+    nxt = sweeps.from_index(sweeps.ordered_index(one) + 1)
+    assert float(nxt) == float(np.nextafter(one, np.float32(2.0)))
+    prv = sweeps.from_index(sweeps.ordered_index(one) - 1)
+    assert float(prv) == float(np.nextafter(one, np.float32(0.0)))
+
+
+def test_neighborhood_is_exhaustive_and_centered():
+    pts = sweeps.neighborhood(1.0, 64)
+    assert pts.size == 64
+    u = np.unique(pts)
+    assert u.size == 64                           # all distinct
+    assert (np.float32(1.0) == pts).any()
+    d = np.diff(sweeps.ordered_index(np.sort(pts)))
+    assert (d == 1).all()                         # consecutive f32s
+
+
+def test_window_full_enumeration_when_small():
+    lo, hi = 1.0, float(np.float32(1.0) * (1 + 2 ** -18))
+    pts = sweeps.window_points(lo, hi, 1 << 20)
+    count = int(sweeps.ordered_index(np.float32(hi))
+                - sweeps.ordered_index(np.float32(lo))) + 1
+    assert pts.size == count                      # every float in [lo, hi]
+
+
+def test_enumerate_respects_budget():
+    for spec in SEAMS:
+        pts = sweeps.enumerate_points(spec, 1 << 12)
+        if spec.kind == "points":
+            assert pts.size == len(spec.data)
+        else:
+            assert pts.size <= (1 << 12) + len(spec.data) * 32
+
+
+# ---------------------------------------------------------------------------
+# tolerance model units
+# ---------------------------------------------------------------------------
+
+def test_tolerance_bands():
+    want = np.array([1.0, 2.0 ** -90, 2.0 ** -130, 0.5e38], np.float64)
+    tol = sweeps.tolerances(want, 2.0 ** -42)
+    assert tol[0] == 2.0 ** -42                   # normal band
+    assert tol[1] == 2.0 ** -23                   # lo-flush band
+    assert tol[2] == pytest.approx(2.0 ** -149 / 2.0 ** -130)  # subnormal
+    assert tol[3] == 2.0 ** -42
+
+
+# ---------------------------------------------------------------------------
+# the sweeps themselves (budget-gated; this is the acceptance gate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", SEAMS, ids=SEAM_IDS)
+def test_seam_contract(spec, sweep_budget):
+    r = sweeps.run_seam(spec, budget=sweep_budget)
+    assert r.ok, (
+        f"{r.seam}: {r.violations} violation(s) of {r.points} pts "
+        f"(adjudicated {r.adjudicated}); worst {r.worst_points[:3]}")
+    if spec.check == "contract" and spec.kind != "points":
+        assert r.adjudicated > 0                  # the oracle actually ran
+
+
+def test_sweep_exercises_the_core_jnp_path():
+    """The sweep pins the CORE (jnp) implementation explicitly — the CPU
+    dispatch default is the f64 tier, which must NOT be what the seam
+    contract certifies."""
+    import repro.ff.dispatch as dispatch
+    assert dispatch._DEFAULTS["exp"]["cpu"] == "f64"
+    spec = next(s for s in SEAMS if s.name == "exp/tiny_arguments")
+    xs = sweeps.enumerate_points(spec, 256)
+    h, l = sweeps.evaluate("exp", xs)
+    want_h, want_l = ffmath.exp22(xs, np.zeros_like(xs), ffmath.CORE)
+    assert (h.view(np.uint32) == np.asarray(want_h).view(np.uint32)).all()
+    assert (l.view(np.uint32) == np.asarray(want_l).view(np.uint32)).all()
+
+
+def test_ftz_acceptance_is_two_way_only_in_subnormal_range():
+    """A zero output is accepted ONLY where the true result is subnormal
+    (flush-to-zero hardware, paper §6.1) — a zero against a normal-range
+    reference must still be a violation."""
+    spec = ffmath.SeamSpec("synthetic/exp_normal", "exp", "points",
+                           (0.5, 1.5), 2.0 ** -42, "contract", "")
+    r = sweeps.run_seam(spec, budget=16)
+    assert r.ok                                   # sanity: real exp passes
+    # now a seam whose true results are subnormal: FTZ zeros are accepted
+    spec2 = ffmath.SeamSpec("synthetic/exp_subnormal", "exp", "points",
+                            (-95.0, -99.0), 2.0 ** -42, "contract", "")
+    r2 = sweeps.run_seam(spec2, budget=16)
+    assert r2.ok
+
+
+def test_seam_sweep_reports_exclusions():
+    """log's subnormal inputs are domain-excluded (counted, not judged)."""
+    spec = ffmath.SeamSpec("synthetic/log_subnormal", "log", "points",
+                           (1e-40, 1e-41, 0.5), 2.0 ** -42, "contract", "")
+    r = sweeps.run_seam(spec, budget=4)
+    assert r.excluded == 2
+    assert r.ok
+
+
+@pytest.mark.slow_sweep
+@pytest.mark.parametrize("spec", SEAMS, ids=SEAM_IDS)
+def test_seam_contract_full_grid(spec, sweep_budget):
+    """The full-grid arm: same code path at the caller-chosen budget
+    (e.g. --sweep-budget 4194304 for 2^22 per seam)."""
+    r = sweeps.run_seam(spec, budget=sweep_budget)
+    assert r.ok, (f"{r.seam}: {r.violations} violations; "
+                  f"worst {r.worst_points[:3]}")
