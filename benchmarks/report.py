@@ -2,6 +2,13 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.report > EXPERIMENTS_generated.md
 (The checked-in EXPERIMENTS.md embeds this output plus analysis.)
+
+Every section degrades gracefully when its artifact is absent (a fresh
+checkout has none) — missing inputs print a one-line note instead of
+crashing, so the report always renders whatever subset of artifacts the
+CI run produced.  The leading section aggregates all five BENCH_*.json
+families (ffmatmul, elementwise, math, serving, distributed) into one
+headline table.
 """
 
 from __future__ import annotations
@@ -10,15 +17,107 @@ import glob
 import json
 import os
 
+#: the five benchmark families ``benchmarks/run.py`` and CI produce
+BENCH_FAMILIES = ("ffmatmul", "elementwise", "math", "serving",
+                  "distributed")
+
 
 def _fmt_b(x):
     return f"{x/2**30:.2f}"
+
+
+# --------------------------------------------------------------------------
+# cross-family benchmark summary (one row per BENCH_*.json)
+# --------------------------------------------------------------------------
+
+def _headline(family, payload):
+    """One-line headline metric string for a bench family's payload."""
+    rows = payload.get("rows", [])
+    if family == "ffmatmul":
+        err = max((r.get("log2_err", -300) for r in rows), default=None)
+        fast = min((r for r in rows if r.get("us_median")),
+                   key=lambda r: r["us_median"], default=None)
+        bits = []
+        if fast:
+            bits.append(f"fastest {fast['path']} K={fast['K']} "
+                        f"{fast['us_median']:.0f}us")
+        if err is not None:
+            bits.append(f"worst err 2^{err:.1f}")
+        return "; ".join(bits)
+    if family == "elementwise":
+        sp = max((r.get("speedup", 0.0) for r in rows), default=None)
+        ulp = max((r.get("max_ulp_diff", 0) for r in rows), default=None)
+        return (f"best fusion speedup {sp:.2f}x; "
+                f"max fused-vs-unfused ulp {ulp}" if rows else "")
+    if family == "math":
+        worst = max(rows, key=lambda r: r.get("log2_err_ff", -300),
+                    default=None)
+        if not worst:
+            return ""
+        return (f"worst fn {worst['fn']} err 2^{worst['log2_err_ff']:.1f} "
+                f"(bound 2^{worst.get('log2_bound', 0):.1f})")
+    if family == "serving":
+        eng = [r for r in rows if r.get("arm") == "engine"]
+        best = max(eng, key=lambda r: r.get("tokens_per_s", 0.0),
+                   default=None)
+        bits = []
+        if best:
+            bits.append(f"engine B={best['batch']} "
+                        f"{best['tokens_per_s']:.0f} tok/s "
+                        f"({best['speedup_vs_greedy']:.1f}x greedy)")
+        for key, label in (("guard_overhead", "guard"),
+                           ("snapshot_overhead", "snapshot"),
+                           ("obs_overhead", "obs")):
+            r = next((r for r in rows if key in r), None)
+            if r:
+                bits.append(f"{label} {r[key]:.3f}x")
+        return "; ".join(bits)
+    if family == "distributed":
+        best = max(rows, key=lambda r: r.get("scaled_speedup", 0.0),
+                   default=None)
+        if not best:
+            return ""
+        return (f"best scaled speedup {best['scaled_speedup']:.2f}x "
+                f"({best.get('op', '?')} d={best.get('devices', '?')})")
+    return ""
+
+
+def bench_summary(artifacts="."):
+    """Aggregate every ``BENCH_<family>.json`` under ``artifacts`` into one
+    markdown table: family, backend, row count, headline metric.  Families
+    whose artifact is missing get an explicit `missing` row rather than
+    being silently dropped."""
+    print("### Benchmark summary (all families)\n")
+    print("| family | backend | jax | rows | headline |")
+    print("|---|---|---|---|---|")
+    found = 0
+    for family in BENCH_FAMILIES:
+        path = os.path.join(artifacts, f"BENCH_{family}.json")
+        if not os.path.exists(path):
+            print(f"| {family} | — | — | — | missing ({path}) |")
+            continue
+        try:
+            payload = json.load(open(path))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"| {family} | — | — | — | unreadable: {e} |")
+            continue
+        found += 1
+        meta = payload.get("meta", payload)
+        backend = meta.get("backend", "?")
+        jax_ver = meta.get("jax", "?")
+        rows = payload.get("rows", [])
+        print(f"| {family} | {backend} | {jax_ver} | {len(rows)} | "
+              f"{_headline(family, payload) or '—'} |")
+    print(f"\n{found}/{len(BENCH_FAMILIES)} families present.\n")
 
 
 def dryrun_table(artifacts="artifacts/dryrun_final"):
     rows = []
     for path in sorted(glob.glob(os.path.join(artifacts, "*.json"))):
         rows.append(json.load(open(path)))
+    if not rows:
+        print(f"### Dry-run matrix\n\n(no artifacts under {artifacts})\n")
+        return
     print("### Dry-run matrix (every arch x shape x mesh; lower+compile)\n")
     print("| arch | shape | mesh | status | args GiB/dev | temp GiB/dev | "
           "HLO flops/dev | HBM bytes/dev | collective bytes/dev | compile s |")
@@ -47,6 +146,9 @@ def dryrun_table(artifacts="artifacts/dryrun_final"):
 
 
 def roofline_table(path="artifacts/roofline_final.json"):
+    if not os.path.exists(path):
+        print(f"### Roofline\n\n(no artifact at {path})\n")
+        return
     rows = json.load(open(path))
     print("### Roofline (single-pod 16x16 = 256 chips; "
           "197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI per chip)\n")
@@ -63,6 +165,9 @@ def roofline_table(path="artifacts/roofline_final.json"):
 
 def perf_log(pattern="artifacts/perf_iter*.json"):
     print("### Perf iteration log\n")
+    if not glob.glob(pattern):
+        print(f"(no artifacts matching {pattern})\n")
+        return
     for path in sorted(glob.glob(pattern)):
         it = json.load(open(path))
         print(f"**Iteration {it['iteration']}** — {it['cell']}")
@@ -75,6 +180,7 @@ def perf_log(pattern="artifacts/perf_iter*.json"):
 
 
 def main():
+    bench_summary()
     dryrun_table()
     roofline_table()
     perf_log()

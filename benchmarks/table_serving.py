@@ -43,6 +43,12 @@ Modes:
       # tokens/s overhead; also measures restore_to_first_token_s (warm
       # restart from the snapshot until the first post-restore token is
       # synced — includes jit re-compile, the honest restart cost)
+  python -m benchmarks.table_serving --obs-overhead
+      # additionally gate the observability cost at B=8: engine with the
+      # full repro.obs stack on (per-request Chrome spans, latency
+      # histograms, per-step gauges, obs.enable() profiler annotations)
+      # vs the default engine, min-of-3 paired runs, <= 5% tokens/s
+      # overhead (docs/DESIGN_observability.md)
 """
 
 from __future__ import annotations
@@ -82,6 +88,9 @@ GUARD_OVERHEAD_GATE = 1.05
 #: steps at B=8 (docs/DESIGN_robustness.md §6) — <= 5% tokens/s vs off
 SNAPSHOT_OVERHEAD_GATE = 1.05
 SNAPSHOT_EVERY = 8
+#: observability contract: full repro.obs instrumentation at B=8
+#: (docs/DESIGN_observability.md §5) — <= 5% tokens/s vs obs off
+OBS_OVERHEAD_GATE = 1.05
 
 BENCH_CFG = dict(name="serve-bench", family="dense", num_layers=4,
                  d_model=256, num_heads=8, num_kv_heads=4, d_ff=1024,
@@ -143,24 +152,41 @@ def _run_sequential_warm(params, cfg, reqs, cache_len) -> Dict:
 
 def _run_engine(params, cfg, reqs, *, batch, cache_len, kv_mode,
                 guard: str = "off", snapshot_dir: Optional[str] = None,
-                snapshot_every: Optional[int] = None) -> Dict:
+                snapshot_every: Optional[int] = None,
+                instrument: bool = False) -> Dict:
     journal = (os.path.join(snapshot_dir, "wal.jsonl")
                if snapshot_dir else None)
+    kwargs = {}
+    if instrument:
+        from repro import obs
+        kwargs["obs"] = obs.Observer()
     eng = ServeEngine(params, cfg, max_batch=batch, page_size=16,
                       max_ctx=cache_len, kv_mode=kv_mode, guard=guard,
-                      journal=journal)
+                      journal=journal, **kwargs)
     for r in reqs:
         eng.submit(r)
     eng.run()                                      # compile outside the clock
     eng.results = {}
     for r in reqs:
         eng.submit(r)
-    t0 = time.perf_counter()
-    res = eng.run(snapshot_dir=snapshot_dir, snapshot_every=snapshot_every)
-    dt = time.perf_counter() - t0
-    return {"tokens": {u: r.tokens for u, r in res.items()},
-            "results": res, "seconds": dt,
-            "count": sum(len(r.tokens) for r in res.values())}
+    if instrument:
+        from repro import obs
+        with obs.enable():       # profiler annotations on, like production
+            t0 = time.perf_counter()
+            res = eng.run(snapshot_dir=snapshot_dir,
+                          snapshot_every=snapshot_every)
+            dt = time.perf_counter() - t0
+    else:
+        t0 = time.perf_counter()
+        res = eng.run(snapshot_dir=snapshot_dir,
+                      snapshot_every=snapshot_every)
+        dt = time.perf_counter() - t0
+    out = {"tokens": {u: r.tokens for u, r in res.items()},
+           "results": res, "seconds": dt,
+           "count": sum(len(r.tokens) for r in res.values())}
+    if instrument:
+        out["observer"] = eng.obs
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -208,6 +234,25 @@ def _guard_overhead_arms(params, cfg, reqs, *, batch, cache_len,
             if mode not in best or r["seconds"] < best[mode]["seconds"]:
                 best[mode] = r
     return best["off"], best["check"]
+
+
+def _obs_overhead_arms(params, cfg, reqs, *, batch, cache_len,
+                       reps: int) -> tuple:
+    """Interleaved min-of-``reps`` timing of the default engine vs one
+    with the full observability stack on: a dedicated ``obs.Observer``
+    (per-request Chrome spans, latency histograms, per-step gauges) plus
+    the ``obs.enable()`` profiler-annotation scope.  Span recording is
+    host-side list appends + perf_counter reads per lifecycle event —
+    the gate proves that stays under 5% of tokens/s at the gate batch."""
+    best: Dict[str, Dict] = {}
+    for _ in range(max(1, reps)):
+        for mode in ("off", "obs"):
+            r = _run_engine(params, cfg, reqs, batch=batch,
+                            cache_len=cache_len, kv_mode="bf16",
+                            instrument=(mode == "obs"))
+            if mode not in best or r["seconds"] < best[mode]["seconds"]:
+                best[mode] = r
+    return best["off"], best["obs"]
 
 
 def _snapshot_overhead_arms(params, cfg, reqs, *, batch, cache_len,
@@ -281,7 +326,7 @@ def _restore_to_first_token(params, cfg, reqs, *, batch, cache_len) -> float:
 
 def run(*, num_requests: int = 16, max_new: int = 24,
         batches: Sequence[int] = (2, 4, 8), cache_len: int = 80,
-        guard_reps: int = 1, snapshot_reps: int = 0):
+        guard_reps: int = 1, snapshot_reps: int = 0, obs_reps: int = 0):
     cfg = ModelConfig(**BENCH_CFG)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -372,6 +417,39 @@ def run(*, num_requests: int = 16, max_new: int = 24,
                     f"engine_snapshot B={max(batches)} uid={r.uid}: tokens "
                     f"diverge from greedy_generate")
 
+    # observability overhead arm: the same B=GATE_BATCH bf16 engine with
+    # the full repro.obs stack on (dedicated Observer + obs.enable()
+    # profiler scope) paired min-of-`obs_reps` against the default
+    # engine.  A sanity assert confirms the instrumented run actually
+    # recorded one request span per request — an accidentally-dark
+    # observer would make the overhead gate vacuous.
+    if obs_reps:
+        off_best, observed = _obs_overhead_arms(
+            params, cfg, reqs, batch=max(batches), cache_len=cache_len,
+            reps=obs_reps)
+        tps_off = off_best["count"] / off_best["seconds"]
+        tps_obs = observed["count"] / observed["seconds"]
+        structure = observed["observer"].trace.span_structure()
+        n_req_spans = sum(1 for _, name, _ in structure if name == "request")
+        rows.append({"arm": "engine_obs", "batch": max(batches),
+                     "kv_mode": "bf16", "tokens": observed["count"],
+                     "seconds": observed["seconds"],
+                     "tokens_per_s": tps_obs,
+                     "speedup_vs_greedy": tps_obs / tps_greedy,
+                     "speedup_vs_warm": tps_obs / tps_warm,
+                     "obs_overhead": tps_off / tps_obs,
+                     "request_spans": n_req_spans})
+        if n_req_spans < len(reqs):
+            parity_failures.append(
+                f"engine_obs B={max(batches)}: only {n_req_spans} request "
+                f"spans recorded for {len(reqs)} requests")
+        for r in reqs:       # instrumentation must not change a token
+            if not np.array_equal(observed["tokens"][r.uid],
+                                  greedy["tokens"][r.uid]):
+                parity_failures.append(
+                    f"engine_obs B={max(batches)} uid={r.uid}: tokens "
+                    f"diverge from greedy_generate")
+
     acc = _logprob_accuracy(params, cfg, reqs, cache_len)
     return rows, acc, parity_failures
 
@@ -394,6 +472,11 @@ def main(argv: Optional[Sequence[str]] = None,
                          f"B={GATE_BATCH} (<= {SNAPSHOT_OVERHEAD_GATE:.2f}x "
                          "tokens/s vs durability off, min-of-3 paired "
                          "runs) and record restore_to_first_token_s")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="gate the full repro.obs instrumentation cost at "
+                         f"B={GATE_BATCH} (<= {OBS_OVERHEAD_GATE:.2f}x "
+                         "tokens/s vs the default engine, min-of-3 paired "
+                         "runs)")
     ap.add_argument("--out", type=str, default=out_json)
     args = ap.parse_args([] if argv is None else argv)
 
@@ -404,7 +487,8 @@ def main(argv: Optional[Sequence[str]] = None,
     rows, acc, parity_failures = run(
         num_requests=n, max_new=max_new, batches=batches,
         guard_reps=3 if args.guard_overhead else 1,
-        snapshot_reps=3 if args.snapshot_overhead else 0)
+        snapshot_reps=3 if args.snapshot_overhead else 0,
+        obs_reps=3 if args.obs_overhead else 0)
 
     print("serving: arm,batch,kv_mode,tok/s,vs_greedy,vs_warm")
     for r in rows:
@@ -413,6 +497,8 @@ def main(argv: Optional[Sequence[str]] = None,
         if "snapshot_overhead" in r:
             extra += (f",snapshot_overhead={r['snapshot_overhead']:.3f}x,"
                       f"restore={r['restore_to_first_token_s']:.2f}s")
+        if "obs_overhead" in r:
+            extra += f",obs_overhead={r['obs_overhead']:.3f}x"
         print(f"{r['arm']},{r['batch']},{r['kv_mode']},"
               f"{r['tokens_per_s']:.1f},{r['speedup_vs_greedy']:.2f}x,"
               f"{r['speedup_vs_warm']:.2f}x{extra}")
@@ -461,6 +547,12 @@ def main(argv: Optional[Sequence[str]] = None,
                 f"snapshot_every={s['snapshot_every']} overhead "
                 f"{s['snapshot_overhead']:.3f}x at B={s['batch']} exceeds "
                 f"{SNAPSHOT_OVERHEAD_GATE:.2f}x")
+    if args.obs_overhead:
+        o = next(r for r in rows if r["arm"] == "engine_obs")
+        if o["obs_overhead"] > OBS_OVERHEAD_GATE:
+            failures.append(
+                f"obs instrumentation overhead {o['obs_overhead']:.3f}x at "
+                f"B={o['batch']} exceeds {OBS_OVERHEAD_GATE:.2f}x")
     if failures:
         print("SERVING GATE FAILURES:")
         for f_ in failures:

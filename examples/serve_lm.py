@@ -49,11 +49,16 @@ def serve(cfg: ModelConfig, label: str, smoke: bool = False):
           f"teacher-forced agreement {agree:.2f}")
 
 
-def serve_engine_trace(cfg: ModelConfig, smoke: bool = False):
+def serve_engine_trace(cfg: ModelConfig, smoke: bool = False,
+                       metrics_json=None, trace_out=None):
     """Continuous batching with STAGGERED arrivals: a second wave of
     requests is submitted while the first wave is mid-decode, joins the
     running batch at the next step, and every result still matches the
-    sequential greedy baseline token-for-token."""
+    sequential greedy baseline token-for-token.  With ``metrics_json`` /
+    ``trace_out`` set, the run is fully instrumented (obs.enable()
+    profiler annotations on) and emits the metrics snapshot and the
+    Perfetto-loadable request trace as artifacts."""
+    from repro import obs
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(7)
     max_new = 4 if smoke else 12
@@ -61,6 +66,10 @@ def serve_engine_trace(cfg: ModelConfig, smoke: bool = False):
     lens = rng.integers(6, 25, size=n1 + n2)
     prompts = [rng.integers(1, cfg.vocab_size, size=int(l)).astype(np.int32)
                for l in lens]
+    instrumented = bool(metrics_json or trace_out)
+    obs_scope = obs.enable() if instrumented else None
+    if obs_scope is not None:
+        obs_scope.__enter__()
     eng = ServeEngine(params, cfg, max_batch=3, page_size=8, max_ctx=64)
 
     for i in range(n1):                       # wave 1 arrives
@@ -93,12 +102,30 @@ def serve_engine_trace(cfg: ModelConfig, smoke: bool = False):
           f"(prompts {lens.min()}..{lens.max()}) through batch=3 in "
           f"{steps} steps, {joined} mid-flight joins, all token-for-token "
           f"== greedy")
+    if obs_scope is not None:
+        obs_scope.__exit__(None, None, None)
+    if metrics_json:
+        eng.obs.dump_metrics(metrics_json)
+        print(f"engine      : metrics snapshot -> {metrics_json}")
+    if trace_out:
+        eng.obs.dump_trace(trace_out)
+        spans = sum(1 for e in eng.obs.trace.events()
+                    if e["ph"] == "X" and e["name"] == "request")
+        assert spans == n1 + n2, (spans, n1 + n2)
+        print(f"engine      : Perfetto trace ({spans} request spans) -> "
+              f"{trace_out}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized: smaller models/requests, same coverage")
+    ap.add_argument("--metrics-json", type=str, default=None,
+                    help="write the engine+dispatch metrics snapshot of the "
+                         "continuous-batching trace to this JSON file")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write the Chrome trace-event JSON (Perfetto) of "
+                         "the continuous-batching trace to this file")
     args = ap.parse_args()
 
     dense = ModelConfig(
@@ -122,9 +149,12 @@ def main():
     if args.smoke:
         small = dataclasses.replace(dense, num_layers=2, d_model=128,
                                     d_ff=256, vocab_size=512)
-        serve_engine_trace(small, smoke=True)
+        serve_engine_trace(small, smoke=True,
+                           metrics_json=args.metrics_json,
+                           trace_out=args.trace_out)
     else:
-        serve_engine_trace(dense)
+        serve_engine_trace(dense, metrics_json=args.metrics_json,
+                           trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

@@ -107,6 +107,20 @@ def main() -> int:
           "poisoned run: statuses documented")
     check(any(r.status == DEGRADED for r in res.values()),
           "poisoned run: the poisoned row was quarantined (DEGRADED)")
+    # observability contract under faults: the engine's observer must have
+    # recorded the quarantine as a trace instant, the DEGRADED terminal in
+    # a request span, and the counter view must agree with guard_stats.
+    evs = eng.obs.to_chrome_trace()["traceEvents"]
+    check(any(e["ph"] == "i" and e["name"] == "quarantine" for e in evs),
+          "poisoned run: quarantine instant recorded in trace")
+    check(any(e["ph"] == "X" and e["name"] == "request"
+              and e["args"].get("status") == DEGRADED for e in evs),
+          "poisoned run: DEGRADED request span recorded in trace")
+    snap = eng.obs.snapshot()
+    check(snap["counters"].get(
+              'serve_guard_events_total{kind="quarantined"}', 0)
+          == eng.guard_stats["quarantined"] >= 1,
+          "poisoned run: obs counter agrees with guard_stats[quarantined]")
     for i, p in enumerate(prompts):
         want = _baseline(params, p, 6,
                          fast if res[i].status == DEGRADED else None)
@@ -129,6 +143,9 @@ def main() -> int:
           "paging chaos: statuses documented")
     check(eng.guard_stats["integrity_rebuilds"] >= 1,
           "paging chaos: integrity audit rebuilt the free list")
+    check(any(e["ph"] == "i" and e["name"] == "integrity_rebuild"
+              for e in eng.obs.to_chrome_trace()["traceEvents"]),
+          "paging chaos: integrity_rebuild instant recorded in trace")
     probs, _ = eng.kv.check_integrity()
     check(not probs, "paging chaos: metadata clean after recovery")
     for i, p in enumerate(prompts):

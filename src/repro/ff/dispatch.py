@@ -118,11 +118,17 @@ def resolve_name(op: str, impl: Optional[str] = None,
     """
     if op not in _REGISTRY:
         raise KeyError(f"unknown ff op {op!r}; registered: {ops()}")
+    # `src` tracks which resolution rule actually picked the winner — it
+    # feeds the ff_dispatch_resolutions_total telemetry counter below.
+    # Resolution runs at trace time only, so the recording is free in
+    # steady-state jit execution.
     name = impl or scope.current_impl(op)
+    src = ("explicit" if impl else
+           "scope" if name is not None else None)
     if name is None and op == "matmul":
         pol = scope.current_policy().matmul_impl
         if pol and pol != "auto":
-            name = pol
+            name, src = pol, "policy"
     # mesh-context resolution: inside an ff.on_mesh scope, ops with a
     # registered mesh impl route to the shard_map tier UNLESS something
     # more explicit (per-call impl, use() scope, policy) chose otherwise.
@@ -130,13 +136,14 @@ def resolve_name(op: str, impl: Optional[str] = None,
     # sites resolve exactly as before.
     if name is None and op in _MESH_DEFAULTS \
             and scope.current_mesh() is not None:
-        name = _MESH_DEFAULTS[op]
+        name, src = _MESH_DEFAULTS[op], "mesh"
     if name in ("tuned", "tuned_accurate"):
         from repro.ff import tuning as _tune
         accurate = name == "tuned_accurate"
         name = (_tune.lookup_impl(op, shape,
                                   "accurate" if accurate else "fast")
                 if shape is not None else None)
+        src = "tuned_accurate" if accurate else "tuned"
         if name is not None and name not in _REGISTRY[op]:
             name = None   # stale/foreign sidecar must never break dispatch
         # an explicit accurate-tier request must NEVER degrade to the fast
@@ -148,16 +155,19 @@ def resolve_name(op: str, impl: Optional[str] = None,
             reg = _REGISTRY.get(op, {})
             name = next((c for c in _ACCURATE_FALLBACK.get(op, ())
                          if c in reg), None)
+            src = "accurate_fallback"
     if name is None and shape is not None:
         from repro.ff import tuning as _tune
         name = _tune.lookup_impl(op, shape)
+        src = "tuned_default"
         if name is not None and name not in _REGISTRY[op]:
             name = None   # see above: unknown tuned winner -> static default
     if name is None:
         d = _DEFAULTS.get(op, {})
         name = d.get(backend(), d.get("*"))
+        src = "static_default"
     if name is None:
-        name = next(iter(_REGISTRY[op]))
+        name, src = next(iter(_REGISTRY[op])), "first_registered"
     if name not in _REGISTRY[op]:
         raise KeyError(
             f"ff op {op!r} has no implementation {name!r}; "
@@ -171,7 +181,29 @@ def resolve_name(op: str, impl: Optional[str] = None,
     if _guard is None:                           # guard` — the package attr
         from importlib import import_module      # is the scope *class*
         _guard = import_module("repro.ff.guard")
-    return _guard.maybe_degrade(op, name)
+    final = _guard.maybe_degrade(op, name)
+    if final != name:
+        src = "guard_degraded"
+    _record_resolution(op, final, src or "static_default", shape)
+    return final
+
+
+def _record_resolution(op: str, name: str, src: str,
+                       shape: Optional[Tuple[int, ...]]) -> None:
+    """Dispatch telemetry (trace-time only): count (op, impl, source,
+    backend, shape-bucket) into the process-global obs registry.  Lazy
+    import — repro.obs must never be a hard import of the dispatch core,
+    and obs itself never imports repro.ff (no cycle)."""
+    try:
+        from repro import obs as _obs
+        if shape:
+            from repro.ff import tuning as _tune
+            bucket = _tune.bucket_key(shape)
+        else:
+            bucket = ""
+        _obs.record_resolution(op, name, src, backend(), bucket)
+    except Exception:     # telemetry must never break dispatch
+        pass
 
 
 def resolve_opts(op: str, name: str,
@@ -378,13 +410,16 @@ def _mm_ozaki(a: Array, b: Array, *, slices: int = 0, beta: int = 0,
               **_kw) -> FF:
     """Exact-slice Ozaki matmul (~2^-46): fused Pallas kernel on TPU,
     batched stacked-GEMM jnp path elsewhere."""
-    if backend() == "tpu" and interpret is not True:
-        from repro.kernels import ff_matmul
-        hi, lo = ff_matmul.ff_matmul_ozaki(a, b, slices=slices, beta=beta,
-                                           bk=block_k or 512, interpret=False)
-        return FF(hi, lo)
-    return ffmatmul.matmul_ozaki(a, b, slices=slices, beta=beta,
-                                 block_k=block_k)
+    from repro.obs import annotate
+    with annotate("ff.matmul_ozaki"):
+        if backend() == "tpu" and interpret is not True:
+            from repro.kernels import ff_matmul
+            hi, lo = ff_matmul.ff_matmul_ozaki(
+                a, b, slices=slices, beta=beta,
+                bk=block_k or 512, interpret=False)
+            return FF(hi, lo)
+        return ffmatmul.matmul_ozaki(a, b, slices=slices, beta=beta,
+                                     block_k=block_k)
 
 
 def _mm_f64(a: Array, b: Array, *, interpret: Optional[bool] = None,

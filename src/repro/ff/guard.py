@@ -50,6 +50,16 @@ Array = jnp.ndarray
 _MODES = ("off", "check", "degrade")
 
 
+def _obs_record(fn_name: str, *args) -> None:
+    """Guard telemetry into the process-global obs registry — lazy import,
+    never raises (obs must stay optional below the dispatch layer)."""
+    try:
+        from repro import obs
+        getattr(obs, fn_name)(*args)
+    except Exception:
+        pass
+
+
 # ===========================================================================
 # FFError taxonomy
 # ===========================================================================
@@ -207,11 +217,18 @@ class GuardScope:
 
     def record(self, op: str, kind: str, count: int = 1) -> None:
         """Count a detected violation; warn once per (op, kind); in
-        ``degrade`` mode mark ``op`` for one-class-lower resolution."""
+        ``degrade`` mode mark ``op`` for one-class-lower resolution.
+
+        The obs counter below accumulates on EVERY call — the user-facing
+        warning is warn-once per (op, kind), but suppressing the warning
+        must not stop the per-(op, kind) violation telemetry (the
+        ``ff_guard_violations_total`` series keeps growing after the
+        first event)."""
         if self.mode == "off" or count <= 0:
             return
         key = (op, kind)
         self.counters[key] = self.counters.get(key, 0) + int(count)
+        _obs_record("record_guard_violation", op, kind, int(count))
         if self.mode == "degrade" and kind in _ERRORS:
             self.degraded.add(op)
         if key not in self._warned:
@@ -219,6 +236,7 @@ class GuardScope:
             act = ("degrading ff.%s one accuracy class for this scope"
                    % op if self.mode == "degrade" and kind in _ERRORS
                    else "counting only (mode=%r)" % self.mode)
+            _obs_record("record_warning", "guard")
             warnings.warn(f"ff.guard: {count} {kind} FF element(s) in "
                           f"ff.{op} — {act}", FFGuardWarning, stacklevel=2)
 
@@ -339,6 +357,7 @@ def maybe_degrade(op: str, name: str) -> str:
     key = (op, "degrade-resolve")
     if key not in g._warned:
         g._warned.add(key)
+        _obs_record("record_warning", "guard")
         warnings.warn(f"ff.guard(mode='degrade'): resolving ff.{op} to "
                       f"fast-class impl {swap!r} (was {name!r}) for this "
                       f"scope", FFGuardWarning, stacklevel=3)

@@ -163,10 +163,12 @@ def tree_combine(r: FF, axis: AxisName, mesh) -> FF:
 
 
 def _combine(r: FF, axis: AxisName, mesh, how: str) -> FF:
-    if how == "psum":
-        return psum_combine(r, axis)
-    if how == "tree":
-        return tree_combine(r, axis, mesh)
+    from repro.obs import annotate
+    with annotate(f"ff.sharded_combine_{how}"):
+        if how == "psum":
+            return psum_combine(r, axis)
+        if how == "tree":
+            return tree_combine(r, axis, mesh)
     raise ValueError(f"unknown combine {how!r}; expected 'psum' or 'tree'")
 
 

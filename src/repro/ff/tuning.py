@@ -310,9 +310,20 @@ def clear() -> None:
     _LOADED_FROM = None
 
 
+def _obs_record(fn_name: str, *args) -> None:
+    """Telemetry into the process-global obs registry; never raises and
+    never a hard import (obs is optional at the dispatch layer)."""
+    try:
+        from repro import obs
+        getattr(obs, fn_name)(*args)
+    except Exception:
+        pass
+
+
 def _warn_tune(msg: str) -> None:
     import warnings
     from repro.ff.guard import FFTuneWarning
+    _obs_record("record_warning", "tune")
     warnings.warn(msg, FFTuneWarning, stacklevel=3)
 
 
@@ -404,6 +415,8 @@ def lookup(op: str, shape: Sequence[int],
     """Tuned winner record {"impl", "opts", "us"} for the shape bucket."""
     _ensure_loaded()
     rec = _bucket_store(op).get(bucket_key(shape))
+    hit = bool(rec) and rec.get(accuracy) is not None
+    _obs_record("record_tune_lookup", hit)
     if rec:
         return rec.get(accuracy)
     return None

@@ -22,6 +22,36 @@ import jax
 import jax.numpy as jnp
 
 
+def _start_metrics_server(observer, port: int):
+    """Serve ``observer``'s registry (+ the global telemetry registry) as
+    Prometheus text exposition on /metrics, in a daemon thread."""
+    import threading
+    from http.server import BaseHTTPRequestHandler, HTTPServer
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path.rstrip("/") not in ("", "/metrics"):
+                self.send_response(404)
+                self.end_headers()
+                return
+            from repro import obs
+            body = (observer.registry.to_prometheus()
+                    + obs.REGISTRY.to_prometheus()).encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):            # quiet: stats, not access logs
+            pass
+
+    srv = HTTPServer(("127.0.0.1", port), Handler)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return srv
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -59,9 +89,25 @@ def main():
                          "snapshot generation under --snapshot-dir (corrupt "
                          "generations fall back warned) and replay the "
                          "journal, instead of submitting fresh requests")
+    ap.add_argument("--metrics-json", type=str, default=None,
+                    help="--engine observability: write the metrics snapshot "
+                         "(engine counters/gauges/histograms + the global "
+                         "dispatch/tune/guard telemetry) to this JSON file "
+                         "after the run")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="--engine observability: write the Chrome "
+                         "trace-event JSON (per-request spans + per-step "
+                         "events; open in Perfetto) to this file")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="--engine observability: serve Prometheus text "
+                         "exposition on http://127.0.0.1:PORT/metrics for "
+                         "the duration of the run (0 = off)")
     args = ap.parse_args()
     if (args.snapshot_every or args.resume) and not args.snapshot_dir:
         ap.error("--snapshot-every/--resume require --snapshot-dir")
+    if (args.metrics_json or args.trace_out or args.metrics_port) \
+            and not args.engine:
+        ap.error("--metrics-json/--trace-out/--metrics-port require --engine")
 
     import contextlib
 
@@ -86,9 +132,16 @@ def main():
               f"scoring reductions mesh-routed")
     if args.engine:
         import numpy as np
+        from repro import obs
         from repro.serve import Request, ServeEngine, resume_engine
         journal = (os.path.join(args.snapshot_dir, "wal.jsonl")
                    if args.snapshot_dir else None)
+        observer = obs.Observer()
+        metrics_server = None
+        if args.metrics_port:
+            metrics_server = _start_metrics_server(observer, args.metrics_port)
+            print(f"[serve] metrics: http://127.0.0.1:{args.metrics_port}"
+                  f"/metrics")
         rng = np.random.default_rng(1)
         lo = max(4, args.prompt_len // 2)
         lens = rng.integers(lo, args.prompt_len + 1, size=args.batch)
@@ -97,7 +150,8 @@ def main():
             eng = resume_engine(params, cfg, args.snapshot_dir,
                                 journal=journal, max_batch=args.batch,
                                 max_ctx=args.prompt_len + args.max_new + 8,
-                                kv_mode=args.kv_mode, guard=args.guard)
+                                kv_mode=args.kv_mode, guard=args.guard,
+                                obs=observer)
             n_restored = sum(s is not None for s in eng._slots)
             print(f"[serve] resumed from {args.snapshot_dir}: "
                   f"{len(eng.results)} completed, {n_restored} running, "
@@ -107,7 +161,7 @@ def main():
             eng = ServeEngine(params, cfg, max_batch=args.batch,
                               max_ctx=args.prompt_len + args.max_new + 8,
                               kv_mode=args.kv_mode, guard=args.guard,
-                              journal=journal)
+                              journal=journal, obs=observer)
             for i, l in enumerate(lens):
                 eng.submit(Request(
                     uid=i,
@@ -133,6 +187,15 @@ def main():
               f"token logprob {mean_lp:.4f}, status {status_str}")
         if results:
             print(results[sorted(results)[0]].tokens)
+        if args.metrics_json:
+            observer.dump_metrics(args.metrics_json)
+            print(f"[serve] metrics snapshot -> {args.metrics_json}")
+        if args.trace_out:
+            observer.dump_trace(args.trace_out)
+            print(f"[serve] Perfetto trace ({len(observer.trace.events())} "
+                  f"events) -> {args.trace_out}")
+        if metrics_server is not None:
+            metrics_server.shutdown()
         return
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len),

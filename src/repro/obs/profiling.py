@@ -1,0 +1,72 @@
+"""Scoped profiler annotations (``obs.enable()`` / ``obs.annotate``).
+
+The hot paths — engine prefill, the jitted decode step, the Ozaki matmul
+slices, the sharded combines — are wrapped in :func:`annotate`.  Outside
+an :class:`enable` scope that wrapper is a no-op ``nullcontext`` (one
+thread-local list check, nothing allocated), so the default serving path
+pays effectively nothing.  Inside the scope it enters both
+
+* :class:`jax.profiler.TraceAnnotation` — names the host-side dispatch
+  region in ``jax.profiler.trace`` / TensorBoard / Perfetto captures; and
+* :func:`jax.named_scope` — names the traced XLA ops so the annotation
+  survives into compiled-program profiles,
+
+mirroring the ``ff.policy`` thread-local-stack idiom: enter the scope
+before tracing/profiling, per-thread, re-entrant.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+__all__ = ["enable", "enabled", "annotate"]
+
+
+class _ObsState(threading.local):
+    def __init__(self):
+        self.stack = []
+
+
+_STATE = _ObsState()
+
+
+def enabled() -> bool:
+    """True inside an ``obs.enable()`` scope (innermost wins)."""
+    return bool(_STATE.stack) and _STATE.stack[-1]
+
+
+class enable:
+    """Context manager toggling profiler annotations for the scope.
+
+    ``obs.enable()`` turns annotations on; ``obs.enable(False)`` forces
+    them off for an inner region (same disabler idiom as
+    ``ff.on_mesh(None)``)."""
+
+    def __init__(self, on: bool = True):
+        self._on = bool(on)
+
+    def __enter__(self) -> bool:
+        _STATE.stack.append(self._on)
+        return self._on
+
+    def __exit__(self, *exc):
+        _STATE.stack.pop()
+        return False
+
+
+def annotate(name: str):
+    """Combined ``TraceAnnotation`` + ``named_scope`` when enabled,
+    ``nullcontext`` otherwise.  Import of jax is deferred so the metrics
+    registry stays importable in jax-free tooling contexts."""
+    if not enabled():
+        return contextlib.nullcontext()
+    try:
+        import jax
+        import jax.profiler
+    except Exception:                      # pragma: no cover - jax-free env
+        return contextlib.nullcontext()
+    stack = contextlib.ExitStack()
+    stack.enter_context(jax.profiler.TraceAnnotation(name))
+    stack.enter_context(jax.named_scope(name))
+    return stack

@@ -95,6 +95,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs as obs_mod
 from repro.core.policy import PrecisionPolicy
 from repro.ff.guard import FFGuardWarning, health_mask, report_violation
 from repro.ff.scope import resolve_policy
@@ -187,6 +188,71 @@ def _empty_result(req: Request, status: str, detail: str) -> GenResult:
                      status=status, detail=detail)
 
 
+#: the engine's guard/robustness event categories (one obs counter each)
+GUARD_STAT_KEYS = ("flagged_rows", "quarantined", "preempted",
+                   "integrity_rebuilds", "snapshot_errors")
+
+
+class _GuardStats:
+    """``ServeEngine.guard_stats``, backed by obs counters.
+
+    Historically a plain dict; chaos tests and callers read AND mutate it
+    (``eng.guard_stats["preempted"] += 1``), and ``snapshot()/restore()``
+    round-trip it.  This view keeps that exact mutable-mapping surface
+    while storing every count in the engine's
+    ``serve_guard_events_total{kind=...}`` counters, so the values show
+    up in metrics exports and restored engines RESUME their counts
+    (``update`` sets the counters to the persisted values)."""
+
+    def __init__(self, registry: "obs_mod.MetricsRegistry"):
+        self._registry = registry
+        self._keys = list(GUARD_STAT_KEYS)
+        for k in GUARD_STAT_KEYS:
+            self._counter(k)
+
+    def _counter(self, key: str) -> "obs_mod.Counter":
+        if key not in self._keys:
+            self._keys.append(key)
+        return self._registry.counter("serve_guard_events_total", kind=key)
+
+    def __getitem__(self, key: str) -> int:
+        return self._counter(key).value
+
+    def __setitem__(self, key: str, value: int) -> None:
+        self._counter(key).set(int(value))
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._keys
+
+    def __iter__(self):
+        return iter(tuple(self._keys))
+
+    def __len__(self) -> int:
+        return len(self._keys)
+
+    def keys(self):
+        return tuple(self._keys)
+
+    def items(self):
+        return [(k, self[k]) for k in self._keys]
+
+    def values(self):
+        return [self[k] for k in self._keys]
+
+    def get(self, key: str, default=None):
+        return self[key] if key in self._keys else default
+
+    def update(self, other) -> None:
+        for k, v in dict(other).items():
+            self[k] = v
+
+    def __repr__(self) -> str:
+        return repr(dict(self.items()))
+
+    def __eq__(self, other) -> bool:
+        return dict(self.items()) == other
+
+
 class ServeEngine:
     """Continuous-batching greedy decoder with a paged KV cache.
 
@@ -229,7 +295,8 @@ class ServeEngine:
                  reserve: str = "trajectory",
                  guard: Optional[str] = None,
                  sync_every: int = 1,
-                 journal: Optional[str] = None):
+                 journal: Optional[str] = None,
+                 obs: Optional["obs_mod.Observer"] = None):
         _check_cfg(cfg)
         if reserve not in ("trajectory", "prompt"):
             raise ValueError(f"reserve {reserve!r}: 'trajectory' | 'prompt'")
@@ -265,9 +332,12 @@ class ServeEngine:
         self._pending: List[Dict[str, Any]] = []  # unsynced decode outputs
         self._admit_seq = 0
         self._auditing = False
-        self.guard_stats = {"flagged_rows": 0, "quarantined": 0,
-                            "preempted": 0, "integrity_rebuilds": 0,
-                            "snapshot_errors": 0}
+        # per-engine observability: a private metrics registry (so tests /
+        # concurrent engines never share counts) + the request/step trace
+        self.obs = obs if obs is not None else obs_mod.Observer()
+        self.guard_stats = _GuardStats(self.obs.registry)
+        self._req_trace: Dict[int, Dict[str, Any]] = {}
+        self._last_flush_ts = self.obs.trace.now()
         self.journal: Optional[RequestJournal] = None
         self._snap_cover: Optional[set] = None  # uids of last async save
         # NOTE: the page planes are deliberately NOT donated — on the CPU
@@ -384,11 +454,38 @@ class ServeEngine:
 
     # -- request lifecycle -------------------------------------------------
 
+    def _trace_submit(self, uid: int) -> None:
+        """Open the request's span timeline (idempotent per uid — preempt
+        re-submission keeps the original submit timestamp)."""
+        if uid not in self._req_trace:
+            self._req_trace[uid] = {"submit": self.obs.trace.now(),
+                                    "admit": None}
+            self.obs.trace.name_request_track(uid)
+
     def _set_result(self, res: GenResult) -> None:
         """The single terminal-result sink: records the result AND, with
         a journal attached, durably marks the uid retired (truncating the
-        log once every journaled request has a terminal status)."""
+        log once every journaled request has a terminal status).  Closes
+        the request's trace spans: a ``decode`` child (admission ->
+        retire) when the request ran, and the top-level ``request`` span
+        (submit -> retire) carrying the terminal status."""
         self.results[res.uid] = res
+        tr = self._req_trace.pop(res.uid, None)
+        if tr is not None:
+            now = self.obs.trace.now()
+            tid = self.obs.trace.request_tid(res.uid)
+            if tr["admit"] is not None:
+                self.obs.trace.complete("decode", tr["admit"],
+                                        now - tr["admit"], tid=tid)
+            self.obs.trace.complete(
+                "request", tr["submit"], now - tr["submit"], tid=tid,
+                args={"status": res.status, "uid": int(res.uid),
+                      "tokens": int(res.tokens.shape[0]),
+                      "detail": res.detail})
+            self.obs.registry.counter("serve_requests_total",
+                                      status=res.status).inc()
+            self.obs.registry.counter("serve_tokens_emitted_total").inc(
+                int(res.tokens.shape[0]))
         if self.journal is not None:
             self.journal.retire(res.uid, res.status)
 
@@ -409,6 +506,7 @@ class ServeEngine:
         """Admission checks + enqueue.  ``bounded=False`` (journal
         replay) skips the queue bound — the request was already accepted
         once; structural impossibility still rejects."""
+        self._trace_submit(req.uid)
         S = int(req.prompt.shape[0])
         total = S + req.max_new
         max_ctx = self.kv.max_pages * self.kv.page_size
@@ -487,6 +585,12 @@ class ServeEngine:
             if slot is None or not self.kv.can_alloc(need):
                 break
             self.queue.pop(0)
+            tr = self._req_trace.get(req.uid)
+            ts_adm = self.obs.trace.now()
+            tid = self.obs.trace.request_tid(req.uid)
+            if tr is not None:
+                self.obs.trace.complete("queued", tr["submit"],
+                                        ts_adm - tr["submit"], tid=tid)
             if self.reserve == "trajectory":
                 self.kv.alloc(slot, total)  # reserve the whole trajectory
                 self.kv.seq_lens[slot] = S  # ...but only S tokens are live
@@ -498,12 +602,20 @@ class ServeEngine:
             cache_dt = jnp.bfloat16 if self.kv.kv_mode == "bf16" \
                 else jnp.float32
             cache = init_cache(self.cfg, 1, S, dtype=cache_dt)
-            logits, cache = self._prefill_fn(S)(
-                self.params, {"tokens": jnp.asarray(req.prompt[None])},
-                cache)
+            with obs_mod.annotate("serve.prefill"):
+                logits, cache = self._prefill_fn(S)(
+                    self.params, {"tokens": jnp.asarray(req.prompt[None])},
+                    cache)
             self.kv.write_prefill(slot, {
                 "k": cache["layers"]["k"][:, 0],
                 "v": cache["layers"]["v"][:, 0]})
+            ts_pf = self.obs.trace.now()
+            self.obs.trace.complete("prefill", ts_adm, ts_pf - ts_adm,
+                                    tid=tid, args={"prompt_len": S})
+            self.obs.registry.histogram(
+                "serve_prefill_seconds").observe((ts_pf - ts_adm) / 1e6)
+            if tr is not None:
+                tr["admit"] = ts_pf
             tok = int(jnp.argmax(logits, -1)[0])
             lp = float(self._score(logits, jnp.asarray([tok], jnp.int32))[0])
             lph, lpl = self._score_ff(logits, jnp.asarray([tok], jnp.int32))
@@ -567,6 +679,8 @@ class ServeEngine:
         self._slots[slot] = None
         self._last_tok[slot] = 0
         self.guard_stats["quarantined"] += 1
+        self.obs.trace.instant("quarantine",
+                               args={"uid": int(req.uid), "why": why})
         report_violation("serve.decode", "nonfinite")
         detail = f"guard: {why}; retried on the fast tier"
         try:
@@ -618,6 +732,8 @@ class ServeEngine:
                     self.kv.drop_slot(slot)
             self.kv.rebuild_free_list()
             self.guard_stats["integrity_rebuilds"] += 1
+            self.obs.trace.instant("integrity_rebuild",
+                                   args={"problems": len(problems)})
         finally:
             self._auditing = False
 
@@ -641,6 +757,10 @@ class ServeEngine:
         self._slots[slot] = None
         self._last_tok[slot] = 0
         self.guard_stats["preempted"] += 1
+        self.obs.trace.instant("preempt", args={"uid": int(req.uid)})
+        tr = self._req_trace.get(req.uid)
+        if tr is not None:
+            tr["admit"] = None          # decode restarts at re-admission
         self.queue.insert(0, {"req": req, "t_sub": state["t_sub"],
                               "step_sub": state["step_sub"]})
 
@@ -690,10 +810,17 @@ class ServeEngine:
         lens = np.asarray(
             [self._row_len(s) if s else 0 for s in self._slots],
             np.int32)
-        nxt, lp, lph, lpl, bad, self.kv.planes = self._decode(
-            self.params, self._token_dev[:, None],
-            jnp.asarray(lens), jnp.asarray(self.kv.block_table),
-            jnp.asarray(active_np), self.kv.planes)
+        t0 = self.obs.trace.now()
+        with obs_mod.annotate("serve.decode_step"):
+            nxt, lp, lph, lpl, bad, self.kv.planes = self._decode(
+                self.params, self._token_dev[:, None],
+                jnp.asarray(lens), jnp.asarray(self.kv.block_table),
+                jnp.asarray(active_np), self.kv.planes)
+        # host-side dispatch latency: jax dispatch is async, so this is
+        # the step's *enqueue* cost; the blocking device time lands in
+        # serve_flush_seconds at the sync_every boundary
+        self.obs.registry.histogram("serve_decode_step_seconds").observe(
+            (self.obs.trace.now() - t0) / 1e6)
         self._token_dev = nxt
         self._pending.append({"step": self.decode_steps, "nxt": nxt,
                               "lp": lp, "lph": lph, "lpl": lpl,
@@ -715,8 +842,15 @@ class ServeEngine:
             return
         entries = self._pending
         self._pending = []
+        t0 = self.obs.trace.now()
         host = jax.device_get([(e["nxt"], e["lp"], e["lph"], e["lpl"],
                                 e["bad"]) for e in entries])
+        t1 = self.obs.trace.now()
+        self.obs.trace.instant("host_sync",
+                               args={"steps": len(entries)})
+        self.obs.registry.histogram("serve_flush_seconds").observe(
+            (t1 - t0) / 1e6)
+        n_synced = 0
         flagged: Dict[int, bool] = {}
         for (e, (nxt, lp, lph, lpl, bad)) in zip(entries, host):
             nxt = np.asarray(nxt, np.int32)
@@ -731,9 +865,16 @@ class ServeEngine:
                 state["logprobs_ff"].append(
                     (float(lph[slot]), float(lpl[slot])))
                 state["pending"] -= 1
+                n_synced += 1
                 self._last_tok[slot] = tok
                 if bool(bad[slot]):
                     flagged[slot] = True
+        # decode throughput over the inter-flush window (tokens made
+        # host-visible per wall second between consecutive syncs)
+        if n_synced and t1 > self._last_flush_ts:
+            self.obs.registry.histogram("serve_tokens_per_s").observe(
+                n_synced / ((t1 - self._last_flush_ts) / 1e6))
+        self._last_flush_ts = t1
         if flagged:
             self.guard_stats["flagged_rows"] += len(flagged)
         for slot in list(flagged):
@@ -798,8 +939,23 @@ class ServeEngine:
                     "cannot be admitted"))
         elif self._pending:
             self._flush()
+        self._trace_step_counters()
         return (any(s is not None for s in self._slots)
                 or bool(self.queue) or bool(self._pending))
+
+    def _trace_step_counters(self) -> None:
+        """Per-scheduler-step samples: queue depth, active batch rows, and
+        page-pool occupancy, as both registry gauges and Perfetto counter
+        tracks."""
+        depth = len(self.queue)
+        active = sum(1 for s in self._slots if s is not None)
+        free = len(self.kv.free_pages)
+        used = self.kv.num_pages - free
+        self.obs.registry.gauge("serve_queue_depth").set(depth)
+        self.obs.registry.gauge("serve_active_rows").set(active)
+        self.obs.registry.gauge("serve_pages_used").set(used)
+        self.obs.trace.counter("queue", {"depth": depth, "active": active})
+        self.obs.trace.counter("pages", {"used": used, "free": free})
 
     def run(self, *, snapshot_dir: Optional[str] = None,
             snapshot_every: Optional[int] = None) -> Dict[int, GenResult]:
@@ -828,6 +984,9 @@ class ServeEngine:
                         arrays, meta = self.snapshot()
                         ckpt.save(self.decode_steps, arrays, extra=meta)
                         self._snap_cover = set(self.results)
+                        self.obs.trace.instant(
+                            "snapshot", args={"step": self.decode_steps,
+                                              "mode": "async"})
                     except Exception as e:
                         self._snapshot_error(e)
                     last_snap = self.decode_steps
@@ -987,6 +1146,10 @@ class ServeEngine:
                 "pending": 0, "start_step": sm["start_step"],
                 "t_sub": now_m - (sm["elapsed_s"] + downtime_s),
                 "step_sub": sm["step_sub"], "admit_seq": sm["admit_seq"]}
+            # reopen the restored request's trace timeline (the pre-crash
+            # spans belong to the crashed process's trace)
+            self._trace_submit(sm["uid"])
+            self._req_trace[sm["uid"]]["admit"] = self.obs.trace.now()
         self.queue = []
         for j, qm in enumerate(meta["queue"]):
             req = Request(uid=qm["uid"],
@@ -999,6 +1162,7 @@ class ServeEngine:
                 "req": req,
                 "t_sub": now_m - (qm["elapsed_s"] + downtime_s),
                 "step_sub": qm["step_sub"]})
+            self._trace_submit(qm["uid"])
         for rm in meta["results"]:
             uid = rm["uid"]
             self.results[uid] = GenResult(
@@ -1031,6 +1195,10 @@ class ServeEngine:
         arrays, meta = self.snapshot()
         path = ckpt_lib.save(directory, self.decode_steps, arrays,
                              extra=meta)
+        self.obs.trace.instant("snapshot",
+                               args={"step": self.decode_steps,
+                                     "mode": "sync"})
+        self.obs.registry.counter("serve_snapshots_total").inc()
         if self.journal is not None:
             self.journal.compact(set(self.results))
         return path
@@ -1051,6 +1219,8 @@ class ServeEngine:
 
     def _snapshot_error(self, err: BaseException) -> None:
         self.guard_stats["snapshot_errors"] += 1
+        self.obs.trace.instant("snapshot_error",
+                               args={"error": type(err).__name__})
         warnings.warn(
             f"ServeEngine: snapshot write failed "
             f"({type(err).__name__}: {err}) — serving continues, restart "

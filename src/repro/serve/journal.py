@@ -35,6 +35,16 @@ from typing import Any, Dict, Iterable, List, Set
 import numpy as np
 
 
+def _obs_count(event: str, n: int = 1) -> None:
+    """WAL activity telemetry (process-global obs registry); lazy and
+    failure-proof — journaling must work in obs-free contexts."""
+    try:
+        from repro import obs
+        obs.record_journal_event(event, n)
+    except Exception:
+        pass
+
+
 class JournalWarning(UserWarning):
     """A journal record could not be parsed (torn write) and was skipped."""
 
@@ -96,6 +106,7 @@ class RequestJournal:
                "t_wall": time.time(), "step_sub": int(step_sub)}
         self._write(rec)
         self._submits[rec["uid"]] = rec
+        _obs_count("append")
 
     def retire(self, uid: int, status: str) -> None:
         """Record a terminal status; truncates the log once every
@@ -105,6 +116,7 @@ class RequestJournal:
             return
         self._write({"op": "retire", "uid": uid, "status": status})
         self._retired.add(uid)
+        _obs_count("retire")
         if self._retired >= set(self._submits):
             self.truncate()
 
@@ -116,6 +128,7 @@ class RequestJournal:
         os.fsync(self._f.fileno())
         self._submits.clear()
         self._retired.clear()
+        _obs_count("truncate")
 
     def compact(self, covered_uids: Iterable[int]) -> None:
         """Rewrite the log keeping only records for uids NOT in
@@ -135,6 +148,7 @@ class RequestJournal:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self.path)
+        _obs_count("compact")
         self._submits = {rec["uid"]: rec for rec in keep}
         self._retired = keep_retired
         self._f = open(self.path, "a", encoding="utf-8")

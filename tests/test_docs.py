@@ -62,7 +62,8 @@ def test_readme_links_docs_tier():
     for doc in ("docs/API.md", "docs/NUMERICS.md", "docs/VERIFY.md",
                 "docs/DESIGN_ozaki.md", "docs/DESIGN_fusion.md",
                 "docs/DESIGN_sharded.md", "docs/DESIGN_math.md",
-                "docs/DESIGN_robustness.md"):
+                "docs/DESIGN_robustness.md",
+                "docs/DESIGN_observability.md"):
         assert doc in readme, f"README does not link {doc}"
         assert os.path.exists(os.path.join(ROOT, doc)), doc
 

@@ -294,6 +294,37 @@ def test_guard_state_survives_restore(params):
     assert all(r.status == OK for r in resumed.values())
 
 
+def test_guard_stats_resume_through_obs_counters(params):
+    """guard_stats is a view over the engine's obs
+    ``serve_guard_events_total{kind=...}`` counters; restore() must seed
+    those counters with the snapshot values so the restored engine's
+    metrics RESUME (post-restore increments land on top of pre-crash
+    counts, not on zero)."""
+    rng = np.random.default_rng(789)
+    reqs = _requests(rng, n=2)
+    src = _engine(params, guard="check")
+    for r in reqs:
+        src.submit(r)
+    src.step()
+    src.guard_stats["flagged_rows"] += 3
+    src.guard_stats["preempted"] += 1
+    arrays, meta = src.snapshot()
+
+    dst = _engine(params, guard="check")
+    dst.restore(arrays, meta, downtime_s=0.0)
+    snap = dst.obs.snapshot()["counters"]
+    assert snap['serve_guard_events_total{kind="flagged_rows"}'] == 3
+    assert snap['serve_guard_events_total{kind="preempted"}'] == 1
+    # post-restore events accumulate ON TOP of the restored values
+    dst.guard_stats["flagged_rows"] += 2
+    after = dst.obs.snapshot()["counters"]
+    assert after['serve_guard_events_total{kind="flagged_rows"}'] == 5
+    assert dst.guard_stats["flagged_rows"] == 5
+    # and a second snapshot round-trip carries the merged totals forward
+    arrays2, meta2 = dst.snapshot()
+    assert meta2["guard_stats"]["flagged_rows"] == 5
+
+
 # --------------------------------------------------------------------------
 # deadlines across restart downtime
 # --------------------------------------------------------------------------
